@@ -1,0 +1,75 @@
+"""BEYOND-PAPER — work stealing vs selective-push forwarding.
+
+The paper (§6) notes that for microsecond-scale CPU tasks, work STEALING
+(idle workers pull) beats work SHEDDING (busy workers push). SkyLB's
+cross-region forwarding is shedding-style: the overloaded LB pushes when a
+peer looks available. `steal` adds the receiver-initiated direction: an
+idle LB pulls tail requests from the deepest peer queue.
+
+Hypothesis: for LLM serving the difference should be SMALL at steady state
+(the probe interval already bounds information staleness for both), but
+stealing should win on TAIL latency under bursty skew — the idle region
+reacts one probe earlier than the busy region notices it.
+
+RESULT (recorded in EXPERIMENTS §Perf): null — zero steals fire even with
+WAN-stale (200 ms) peer heartbeats. Mechanism: SP-P's push reacts within
+one 50 ms probe interval while request service times are seconds, so LB
+queues never stay above the steal threshold long enough for the
+pull-validate round trip. The paper's CPU-scheduling citation (stealing >
+shedding at MICROSECOND task scale) does not transfer to second-scale LLM
+requests: the push path is already information-fresh relative to the work
+granularity. Work stealing would matter only if probe intervals were
+comparable to service times (e.g. second-scale heartbeats).
+"""
+from __future__ import annotations
+
+from repro.core.simulator import ReplicaConfig
+from repro.core.system import ServingSystem
+from repro.core.workloads import multiturn
+
+RCFG = ReplicaConfig(kv_budget=16384)
+
+
+def _drive(variant: str, horizon: float = 240.0, seed: int = 0) -> dict:
+    sys = ServingSystem(variant, {"us": 3, "eu": 3, "asia": 3},
+                        replica_cfg=RCFG, seed=seed)
+    # bursty skew: heavy US load in sessions that start together
+    for s in multiturn({"us": 30, "eu": 6, "asia": 6}, turns=10, seed=seed):
+        sys.add_session_client(s, think_mean=0.2)
+    return sys.run(until=horizon)
+
+
+def run() -> dict:
+    out = {}
+    for v in ("region-local", "skylb", "steal"):
+        s = _drive(v)
+        out[v] = {"tok_s": round(s["throughput_tok_s"], 1),
+                  "ttft_p50": round(s["ttft_p50"], 3),
+                  "ttft_p90": round(s["ttft_p90"], 3),
+                  "e2e_p50": round(s["e2e_p50"], 2),
+                  "hit_rate": round(s["hit_rate"], 3),
+                  "forwards": s["forwards"]}
+    out["_summary"] = {
+        "steal_vs_push_thr": round(out["steal"]["tok_s"] /
+                                   max(out["skylb"]["tok_s"], 1e-9), 3),
+        "steal_vs_push_p90": round(out["skylb"]["ttft_p90"] /
+                                   max(out["steal"]["ttft_p90"], 1e-9), 3),
+    }
+    return out
+
+
+def main() -> dict:
+    out = run()
+    for v in ("region-local", "skylb", "steal"):
+        r = out[v]
+        print(f"[steal] {v:13s} tok/s {r['tok_s']:7.1f} ttft50 "
+              f"{r['ttft_p50']:6.3f} ttft90 {r['ttft_p90']:7.3f} "
+              f"hit {r['hit_rate']:.3f} fwd {r['forwards']}")
+    s = out["_summary"]
+    print(f"[steal] steal/push: throughput x{s['steal_vs_push_thr']}, "
+          f"p90-TTFT x{s['steal_vs_push_p90']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Fig. 3 — diurnal aggregation: per-region load variance collapses when
+aggregated across 5 regions; provisioning for GLOBAL peak is ~40% cheaper
+than per-region peaks and beats even perfect on-demand autoscaling.
+
+Paper numbers (WildChat): per-region variance 2.88-32.64x -> 1.29x
+aggregated; 40.5% reserved-cost reduction; on-demand = 2.2x global-reserved.
+"""
+from __future__ import annotations
+
+from repro.core.cost import (autoscale_on_demand_cost, global_peak_cost,
+                             region_local_cost, variance_stats)
+from repro.core.workloads import diurnal_series
+
+REGIONS5 = ("us", "eu", "asia", "sa", "oceania")
+
+
+def run(hours: int = 24, step_h: float = 0.5, kappa: float = 40.0) -> dict:
+    # regional amplitudes differ (smaller markets have flatter curves with a
+    # relatively higher noise floor -> larger peak/trough ratios)
+    amps = {"us": 1.0, "eu": 0.8, "asia": 0.9, "sa": 0.25, "oceania": 0.12}
+    series = {r: [x * 400 for x in xs] for r, xs in diurnal_series(
+        REGIONS5, hours=hours, step_h=step_h, seed=7,
+        amp_by_region=amps).items()}
+    var = variance_stats(series)
+    local = region_local_cost(series, kappa, hours)
+    glob = global_peak_cost(series, kappa, hours)
+    od = autoscale_on_demand_cost(series, kappa, hours)
+    return {
+        "per_region_variance_min": round(var["per_region_min"], 2),
+        "per_region_variance_max": round(var["per_region_max"], 2),
+        "aggregated_variance": round(var["aggregated"], 2),
+        "cost_region_local": round(local, 1),
+        "cost_global_peak": round(glob, 1),
+        "cost_on_demand_perfect": round(od, 1),
+        "saving_vs_region_local": round(1 - glob / local, 3),
+        "on_demand_over_global": round(od / glob, 2),
+    }
+
+
+def main() -> dict:
+    out = run()
+    print("[fig3] per-region variance "
+          f"{out['per_region_variance_min']}-{out['per_region_variance_max']}x"
+          f" -> aggregated {out['aggregated_variance']}x | "
+          f"global-peak saves {out['saving_vs_region_local']:.1%} vs "
+          f"region-local | on-demand {out['on_demand_over_global']}x global")
+    return out
+
+
+if __name__ == "__main__":
+    main()

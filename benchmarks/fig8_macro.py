@@ -1,0 +1,104 @@
+"""Fig. 8 — macrobenchmark: 7 systems x 4 workloads on the multi-region
+discrete-event testbed (12 replicas over us/eu/asia; clients in all three).
+
+Systems: gke, rr, ll, ch, sgl (single-LB baselines), skylb-ch, skylb.
+Workloads: arena (balanced multi-turn), wildchat (skewed multi-turn),
+tot (uniform 2-branch trees), mixed (US runs 4-branch trees).
+
+Paper: SkyLB 1.12-2.06x throughput, 1.74-6.30x lower latency vs baselines.
+"""
+from __future__ import annotations
+
+from repro.core.simulator import ReplicaConfig
+from repro.core.system import ServingSystem
+from repro.core.workloads import multiturn, tot
+
+VARIANTS = ("gke", "rr", "ll", "ch", "sgl", "skylb-ch", "skylb")
+
+# scaled-down L4: client counts are ~4-5x below the paper's (48 vs 240), so
+# the KV budget scales down too, keeping clients:capacity — the ratio that
+# determines queueing behaviour — matched to the paper. Multi-turn budgets
+# are larger because conversations grow to ~4k tokens (vs ~1k ToT nodes).
+BUDGET = {"arena": 16384, "wildchat": 16384, "tot": 8192, "mixed": 8192}
+
+
+def _drive(variant: str, workload: str, horizon: float, seed: int = 0) -> dict:
+    rpr = {"us": 4, "eu": 4, "asia": 4}
+    sys = ServingSystem(variant, rpr,
+                        replica_cfg=ReplicaConfig(kv_budget=BUDGET[workload]),
+                        seed=seed)
+    if workload in ("arena", "wildchat"):
+        counts = ({"us": 16, "eu": 16, "asia": 16} if workload == "arena"
+                  else {"us": 24, "eu": 12, "asia": 12})
+        for s in multiturn(counts, turns=12, seed=seed):
+            sys.add_session_client(s, think_mean=0.5)
+    else:
+        overrides = {"us": 4} if workload == "mixed" else None
+        counts = ({"us": 4, "eu": 6, "asia": 6} if workload == "mixed"
+                  else {"us": 8, "eu": 6, "asia": 6})
+        for trees in tot(counts, branching=2, depth=4, trees_per_client=8,
+                         output_sigma=0.8, seed=seed,
+                         branching_overrides=overrides):
+            sys.add_tot_client(trees)
+    return sys.run(until=horizon)
+
+
+def run(horizon: float = 240.0, workloads=("arena", "wildchat", "tot",
+                                           "mixed")) -> dict:
+    out: dict = {}
+    for wl in workloads:
+        out[wl] = {}
+        for v in VARIANTS:
+            s = _drive(v, wl, horizon)
+            out[wl][v] = {
+                "tok_s": round(s["throughput_tok_s"], 1),
+                "req_s": round(s["throughput_req_s"], 3),
+                "ttft_p50": round(s["ttft_p50"], 3),
+                "ttft_p90": round(s["ttft_p90"], 3),
+                "e2e_p50": round(s["e2e_p50"], 2),
+                "hit_rate": round(s["hit_rate"], 3),
+                "imbalance": round(s.get("imbalance_ratio", 0), 2),
+                "forwards": s["forwards"],
+            }
+    return out
+
+
+def summarize(out: dict) -> dict:
+    """SkyLB vs best/worst baseline ratios per workload."""
+    summary = {}
+    base = ("gke", "rr", "ll", "ch", "sgl")
+    for wl, rows in out.items():
+        sky = rows["skylb"]
+        btoks = [rows[b]["tok_s"] for b in base if rows[b]["tok_s"] > 0]
+        bttft = [rows[b]["ttft_p50"] for b in base]
+        summary[wl] = {
+            "thr_gain_vs_worst": round(sky["tok_s"] / min(btoks), 2),
+            "thr_gain_vs_best": round(sky["tok_s"] / max(btoks), 2),
+            "ttft_cut_vs_worst": round(max(bttft) / max(sky["ttft_p50"], 1e-9), 2),
+            "ttft_cut_vs_best": round(min(bttft) / max(sky["ttft_p50"], 1e-9), 2),
+        }
+    return summary
+
+
+def main() -> dict:
+    out = run()
+    hdr = f"{'workload':9s} {'system':9s} {'tok/s':>7s} {'ttft50':>7s} " \
+          f"{'ttft90':>7s} {'e2e50':>7s} {'hit':>6s} {'imbal':>6s} {'fwd':>5s}"
+    print("[fig8] " + hdr)
+    for wl, rows in out.items():
+        for v, r in rows.items():
+            print(f"[fig8] {wl:9s} {v:9s} {r['tok_s']:7.1f} "
+                  f"{r['ttft_p50']:7.3f} {r['ttft_p90']:7.3f} "
+                  f"{r['e2e_p50']:7.2f} {r['hit_rate']:6.3f} "
+                  f"{r['imbalance']:6.2f} {r['forwards']:5d}")
+    summ = summarize(out)
+    for wl, s in summ.items():
+        print(f"[fig8] {wl}: skylb throughput x{s['thr_gain_vs_best']}-"
+              f"x{s['thr_gain_vs_worst']} vs baselines; TTFT cut "
+              f"x{s['ttft_cut_vs_best']}-x{s['ttft_cut_vs_worst']}")
+    out["_summary"] = summ
+    return out
+
+
+if __name__ == "__main__":
+    main()

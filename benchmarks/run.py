@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper figure + the kernel sweep.
+Runs everything, prints per-figure results, writes artifacts/bench/*.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig9]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+
+    from benchmarks import (beyond_steal, fig3_aggregation, fig5_prefix,
+                            fig6_hitrate, fig8_macro, fig9_pushing,
+                            fig10_diurnal, kernels_bench)
+    suites = {
+        "fig3": fig3_aggregation.main,
+        "fig5": fig5_prefix.main,
+        "fig6": fig6_hitrate.main,
+        "fig8": fig8_macro.main,
+        "fig9": fig9_pushing.main,
+        "fig10": fig10_diurnal.main,
+        "kernels": kernels_bench.main,
+        "steal": beyond_steal.main,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"===== {name} =====", flush=True)
+        try:
+            result = fn()
+            with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+                json.dump(result, f, indent=1, default=str)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[{name}] FAILED: {e}")
+            failures += 1
+        print(f"[{name}] {time.time() - t0:.1f}s", flush=True)
+    print(f"benchmarks done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

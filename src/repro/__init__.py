@@ -1,0 +1,4 @@
+"""repro: SkyLB — locality-aware cross-region load balancing for LLM
+inference, reproduced as a production-grade JAX framework."""
+
+__version__ = "0.1.0"

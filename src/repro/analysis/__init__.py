@@ -1,0 +1,6 @@
+from repro.analysis.flops import model_flops, step_bytes, step_flops
+from repro.analysis.hlo_parse import collective_stats
+from repro.analysis.roofline import Roofline, compute_roofline
+
+__all__ = ["model_flops", "step_bytes", "step_flops", "collective_stats",
+           "Roofline", "compute_roofline"]

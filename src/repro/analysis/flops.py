@@ -1,0 +1,176 @@
+"""Analytic FLOP / byte models per (arch x shape) step.
+
+Why analytic: XLA's cost_analysis counts lax.scan bodies once (verified), so
+compiled numbers undercount by ~n_layers for scanned stacks. These formulas
+are validated against cost_analysis on UNROLLED reduced configs in
+tests/test_analysis.py.
+
+Conventions: a matmul (m,k)x(k,n) costs 2mkn; causal attention costs
+2*S^2*H*hd per layer per sequence (qk + pv, halved for causality);
+training = fwd + 2x bwd + 1x remat recompute = 4x forward matmul FLOPs.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.moe import capacity
+
+
+def _attn_layer_flops_prefill(cfg: ModelConfig, S: int) -> float:
+    """Per-sequence score+pv flops for one causal attention layer."""
+    if cfg.n_heads == 0:
+        return 0.0
+    return 2.0 * S * S * cfg.n_heads * cfg.hd
+
+
+def _attn_layer_flops_decode(cfg: ModelConfig, T: int) -> float:
+    if cfg.n_heads == 0:
+        return 0.0
+    return 4.0 * T * cfg.n_heads * cfg.hd
+
+
+def _proj_flops_per_token(cfg: ModelConfig) -> float:
+    """Attention projection matmuls per token per layer."""
+    return 2.0 * cfg.d_model * (2 * cfg.q_dim + 2 * cfg.kv_dim)
+
+
+def _ffn_flops_per_token(cfg: ModelConfig, group_tokens: int) -> float:
+    """`group_tokens` = tokens per dispatch group (one batch row)."""
+    if cfg.is_moe:
+        m = cfg.moe
+        C = capacity(group_tokens, cfg)
+        eff_tokens = m.n_experts * C / max(group_tokens, 1)  # incl. cf slack
+        return 2.0 * cfg.d_model * m.n_experts \
+            + eff_tokens * 3 * 2.0 * cfg.d_model * m.d_expert
+    mats = 3 if cfg.gated_mlp else 2
+    return mats * 2.0 * cfg.d_model * cfg.d_ff
+
+
+def _mamba_flops_per_token(cfg: ModelConfig, chunked: bool) -> float:
+    s = cfg.ssm
+    di, G, N, H, P = cfg.d_inner, s.n_groups, s.state, cfg.ssm_heads, s.head_dim
+    proj = 2.0 * cfg.d_model * (2 * di + 2 * G * N + H)
+    out = 2.0 * di * cfg.d_model
+    conv = 2.0 * s.conv_width * (di + 2 * G * N)
+    if chunked:
+        Q = s.chunk
+        # intra: CB (2*Q*G*N per token-pair row) + M@x (2*Q*H*P); states/inter: 2*H*P*N each
+        ssd = 2.0 * Q * (G * N + H * P) + 4.0 * H * P * N
+    else:   # recurrent decode step
+        ssd = 6.0 * H * P * N
+    return proj + out + conv + ssd
+
+
+def _per_token_layer_flops(cfg: ModelConfig, group_tokens: int,
+                           decode: bool) -> float:
+    """Matmul flops per token across the whole stack (excl. attention scores,
+    embed/head). `group_tokens` = tokens per MoE dispatch group (= seq_len
+    for train/prefill, 1 for decode)."""
+    if cfg.is_hybrid:
+        n_apps = cfg.n_layers // cfg.attn_every
+        mamba = cfg.n_layers * _mamba_flops_per_token(cfg, chunked=not decode)
+        attn = n_apps * (_proj_flops_per_token(cfg)
+                         + 3 * 2.0 * cfg.d_model * cfg.d_ff)
+        return mamba + attn
+    if cfg.is_ssm:
+        return cfg.n_layers * _mamba_flops_per_token(cfg, chunked=not decode)
+    if cfg.is_encdec:
+        dec = cfg.n_layers * (_proj_flops_per_token(cfg) * 2  # self + cross
+                              + _ffn_flops_per_token(cfg, group_tokens))
+        return dec  # encoder accounted separately (different token count)
+    return cfg.n_layers * (_proj_flops_per_token(cfg)
+                           + _ffn_flops_per_token(cfg, group_tokens))
+
+
+def _head_flops_per_token(cfg: ModelConfig) -> float:
+    return 2.0 * cfg.d_model * cfg.vocab
+
+
+def _attn_apps(cfg: ModelConfig) -> int:
+    if cfg.is_ssm:
+        return 0
+    if cfg.is_hybrid:
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def step_flops(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Global (all-chip) executed-FLOPs estimate for one step."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        fwd = tokens * (_per_token_layer_flops(cfg, S, decode=False)
+                        + _head_flops_per_token(cfg))
+        fwd += B * _attn_apps(cfg) * _attn_layer_flops_prefill(cfg, S)
+        if cfg.is_encdec:
+            etok = B * cfg.src_frames
+            fwd += etok * cfg.n_enc_layers * (
+                _proj_flops_per_token(cfg) + _ffn_flops_per_token(cfg, cfg.src_frames))
+            fwd += B * cfg.n_enc_layers * 2.0 * cfg.src_frames ** 2 \
+                * cfg.n_heads * cfg.hd * 2  # bidirectional (no causal halving)
+            fwd += B * cfg.n_layers * 2.0 * S * cfg.src_frames * cfg.n_heads \
+                * cfg.hd * 2  # cross attention
+        total = 4.0 * fwd            # fwd + 2x bwd + remat recompute
+        return {"total": total, "forward": fwd, "kind": "train"}
+    if shape.kind == "prefill":
+        tokens = B * S
+        fwd = tokens * (_per_token_layer_flops(cfg, S, decode=False))
+        fwd += B * _head_flops_per_token(cfg)        # last-position logits only
+        fwd += B * _attn_apps(cfg) * _attn_layer_flops_prefill(cfg, S)
+        if cfg.is_encdec:
+            etok = B * cfg.src_frames
+            fwd += etok * cfg.n_enc_layers * (
+                _proj_flops_per_token(cfg) + _ffn_flops_per_token(cfg, cfg.src_frames))
+            fwd += B * cfg.n_enc_layers * 2.0 * cfg.src_frames ** 2 \
+                * cfg.n_heads * cfg.hd * 2
+            fwd += B * cfg.n_layers * 2.0 * S * cfg.src_frames \
+                * cfg.n_heads * cfg.hd * 2
+        return {"total": fwd, "forward": fwd, "kind": "prefill"}
+    # decode: one token per sequence, cache length = S
+    fwd = B * (_per_token_layer_flops(cfg, 1, decode=True)
+               + _head_flops_per_token(cfg))
+    fwd += B * _attn_apps(cfg) * _attn_layer_flops_decode(cfg, S)
+    if cfg.is_encdec:
+        fwd += B * cfg.n_layers * 4.0 * cfg.src_frames * cfg.n_heads * cfg.hd
+    return {"total": fwd, "forward": fwd, "kind": "decode"}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """'Useful' MODEL_FLOPS: 6*N*D train (N_active for MoE), 2*N*D inference."""
+    B, S = shape.global_batch, shape.seq_len
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B                  # one token per sequence
+
+
+def step_bytes(cfg: ModelConfig, shape: ShapeConfig,
+               kv_bytes_per: float = 2.0) -> dict:
+    """Global HBM traffic estimate (bytes) for one step.
+    kv_bytes_per: KV cache element size (2 = bf16; 1 = int8-KV)."""
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.param_count()
+    d = cfg.d_model
+    act_unit = 2.0 * B * S * d          # one bf16 activation tensor
+    if shape.kind == "train":
+        params = 2.0 * N * 4            # bf16 read fwd+bwd+remat + grad write
+        opt = 4.0 * N * (2 + 2 + 1)     # m,v read+write fp32 + param update
+        acts = cfg.n_layers * act_unit * 8
+        return {"total": params + opt + acts, "params": params, "opt": opt,
+                "activations": acts}
+    if shape.kind == "prefill":
+        params = 2.0 * N
+        kv = kv_bytes_per * _attn_apps(cfg) * B * S * cfg.kv_dim * 2  # write K+V
+        acts = cfg.n_layers * act_unit * 4
+        return {"total": params + kv + acts, "params": params, "kv": kv,
+                "activations": acts}
+    # decode: read full KV cache + active params
+    params = 2.0 * cfg.active_param_count()
+    kv = kv_bytes_per * _attn_apps(cfg) * B * S * cfg.kv_dim * 2  # read K+V
+    if cfg.ssm.state:
+        s = cfg.ssm
+        kv += 4.0 * cfg.n_layers * B * cfg.ssm_heads * s.head_dim * s.state * 2
+    acts = cfg.n_layers * 2.0 * B * d * 8
+    return {"total": params + kv + acts, "params": params, "kv": kv,
+            "activations": acts}

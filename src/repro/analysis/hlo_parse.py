@@ -1,0 +1,166 @@
+"""Structural parser for partitioned HLO text: collective-byte accounting
+with while-loop (lax.scan) trip-count multipliers.
+
+XLA's cost_analysis counts a while body ONCE regardless of trip count
+(verified empirically), so scanned-layer models would undercount collectives
+by ~n_layers. We walk the computation call graph: ENTRY -> while(body) with
+the trip count recovered from the loop condition's integer constant.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# params may be tuple-typed — `(p: (s32[], bf16[...]))` — so match greedily
+# up to the LAST ')' before '->' (a lazy/[^)]* match would cut the header at
+# the first nested ')', silently dropping every while-body computation)
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"=\s*[^=]*\bwhile\(.*?\)\s*,.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+    r"|=\s*[^=]*\bwhile\(.*?\)\s*,.*?body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s*constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+
+
+def split_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _HEADER_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+                if stripped.startswith("ENTRY"):
+                    entry_name = m.group(1)
+        else:
+            if stripped == "}" or stripped.startswith("} "):
+                comps[cur.name] = cur
+                cur = None
+            else:
+                cur.lines.append(stripped)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    vals = [int(v) for ln in cond.lines for v in _CONST_RE.findall(ln)]
+    return max(vals) if vals else 1
+
+
+def _line_collective(line: str):
+    """Returns (kind, result_bytes, group_size) or None."""
+    for kind in COLLECTIVES:
+        if re.search(rf"=\s*\S+.*\b{kind}(?:-start)?\(", line):
+            lhs = line.split("=", 1)[1]
+            head = lhs.split(kind)[0]
+            res_bytes = _shape_bytes(head)
+            g = 1
+            m = _GROUPS_RE.search(line)
+            if m:
+                g = int(m.group(2))
+            else:
+                m2 = _GROUPS_BRACE_RE.search(line)
+                if m2:
+                    g = len(m2.group(1).split(","))
+            return kind, res_bytes, g
+    return None
+
+
+def _operand_bytes(kind: str, res_bytes: int, g: int) -> int:
+    if kind == "all-gather":
+        return res_bytes // max(g, 1)
+    if kind == "reduce-scatter":
+        return res_bytes * max(g, 1)
+    return res_bytes
+
+
+def _wire_bytes(kind: str, res_bytes: int, g: int) -> float:
+    """Per-device bytes on the wire for ring algorithms."""
+    g = max(g, 1)
+    if g == 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * res_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return res_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return res_bytes * (g - 1)        # operand = res*g; wire = op*(g-1)/g
+    if kind == "all-to-all":
+        return res_bytes * (g - 1) / g
+    return float(res_bytes)               # collective-permute
+
+
+def collective_stats(text: str) -> dict:
+    """Walk ENTRY with while multipliers; returns per-kind
+    {count, operand_bytes, wire_bytes} plus totals (per device)."""
+    comps = split_computations(text)
+    stats = {k: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+             for k in COLLECTIVES}
+
+    seen: list[tuple[str, int]] = []
+
+    def walk(comp: Computation, mult: int, depth: int = 0):
+        if depth > 8:
+            return
+        for line in comp.lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                if wm.group(1):                       # condition= first
+                    cond, body = wm.group(1), wm.group(2)
+                else:                                 # body= first
+                    body, cond = wm.group(3), wm.group(4)
+                trip = _trip_count(comps, cond)
+                if body in comps:
+                    walk(comps[body], mult * trip, depth + 1)
+                continue
+            col = _line_collective(line)
+            if col:
+                kind, res_bytes, g = col
+                stats[kind]["count"] += mult
+                stats[kind]["operand_bytes"] += mult * _operand_bytes(kind, res_bytes, g)
+                stats[kind]["wire_bytes"] += mult * _wire_bytes(kind, res_bytes, g)
+
+    entry = comps.get("__entry__")
+    if entry is not None:
+        walk(entry, 1)
+    total_operand = sum(v["operand_bytes"] for v in stats.values())
+    total_wire = sum(v["wire_bytes"] for v in stats.values())
+    total_count = sum(v["count"] for v in stats.values())
+    return {"per_kind": stats, "operand_bytes": total_operand,
+            "wire_bytes": total_wire, "count": total_count}

@@ -1,0 +1,113 @@
+"""Roofline report: aggregate dry-run artifacts into the §Roofline table.
+
+  PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
+      [--mesh sp|mp|both] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(art_dir: str, mesh: str = "sp") -> list[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table_rows(cells: list[dict]) -> list[dict]:
+    rows = []
+    for c in cells:
+        if c["status"] == "skipped":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "status": "skipped", "why": c.get("reason", "")})
+            continue
+        if c["status"] != "ok":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "status": "ERROR", "why": c.get("error", "")[:60]})
+            continue
+        r = c["roofline"]
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful": r["useful_ratio"],
+            "frac": r["roofline_fraction"],
+            "gb_per_dev": c["per_device_gb"],
+            "coll_count": c["collectives"]["count"],
+        })
+    return rows
+
+
+def print_table(rows: list[dict], markdown: bool = False) -> None:
+    hdr = ["arch", "shape", "compute", "memory", "collective", "bound",
+           "useful", "roofline%", "GB/dev", "#coll"]
+    if markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+              f"{'collect':>9s} {'bound':>10s} {'useful':>7s} {'roof%':>6s} "
+              f"{'GB/dev':>7s} {'#coll':>6s}")
+    for r in rows:
+        if r["status"] != "ok":
+            cells = [r["arch"], r["shape"], r["status"], r["why"][:40],
+                     "", "", "", "", "", ""]
+        else:
+            cells = [r["arch"], r["shape"], _fmt_s(r["compute_s"]),
+                     _fmt_s(r["memory_s"]), _fmt_s(r["collective_s"]),
+                     r["bottleneck"], f"{r['useful']:.2f}",
+                     f"{100 * r['frac']:.1f}", f"{r['gb_per_dev']:.2f}",
+                     str(r["coll_count"])]
+        if markdown:
+            print("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            print(f"{cells[0]:22s} {cells[1]:12s} {cells[2]:>9s} "
+                  f"{cells[3]:>9s} {cells[4]:>9s} {cells[5]:>10s} "
+                  f"{cells[6]:>7s} {cells[7]:>6s} {cells[8]:>7s} "
+                  f"{cells[9]:>6s}")
+
+
+def interesting_cells(rows: list[dict]) -> dict:
+    """The §Perf selection: worst roofline fraction, most collective-bound,
+    and the paper-representative cell (decode on the paper's model class)."""
+    ok = [r for r in rows if r["status"] == "ok"]
+    worst = min(ok, key=lambda r: r["frac"])
+    coll = max(ok, key=lambda r: r["collective_s"] /
+               max(r["compute_s"], r["memory_s"], 1e-12))
+    return {"worst_fraction": f"{worst['arch']}/{worst['shape']}",
+            "most_collective": f"{coll['arch']}/{coll['shape']}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="sp", choices=["sp", "mp", "both"])
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    meshes = ["sp", "mp"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        rows = table_rows(load_cells(args.dir, m))
+        print(f"\n===== mesh {m} ({'16x16' if m == 'sp' else '2x16x16'}) =====")
+        print_table(rows, markdown=args.markdown)
+        if m == "sp":
+            print("\nhillclimb candidates:", interesting_cells(rows))
+
+
+if __name__ == "__main__":
+    main()

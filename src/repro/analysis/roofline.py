@@ -1,0 +1,84 @@
+"""Roofline terms for TPU v5e from dry-run artifacts.
+
+  compute term    = FLOPs / (chips * 197e12)
+  memory term     = HBM bytes / (chips * 819e9)
+  collective term = collective bytes / (chips * 50e9)
+
+FLOPs / HBM bytes: analytic (analysis.flops), validated against
+cost_analysis on unrolled reduced configs (cost_analysis counts scan bodies
+once — see hlo_parse docstring). Collective bytes: structural HLO parse with
+while-loop trip multipliers; per-device operand bytes summed over the module,
+so the chips factor is already folded in (we divide per-device bytes by one
+link's bandwidth).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.analysis.flops import model_flops, step_bytes, step_flops
+
+PEAK_FLOPS_BF16 = 197e12          # per v5e chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    bottleneck: str
+    note: str = ""
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound step time (MFU-like)."""
+        chips = self.chips
+        ideal = self.model_flops / (chips * PEAK_FLOPS_BF16)
+        return ideal / self.step_time_s if self.step_time_s > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "step_time_s": self.step_time_s,
+            "roofline_fraction": self.roofline_fraction,
+            "note": self.note,
+        }
+
+
+def compute_roofline(cfg: ModelConfig, shape: ShapeConfig, mesh_name: str,
+                     chips: int, collective_bytes_per_device: float,
+                     note: str = "", kv_bytes_per: float = 2.0) -> Roofline:
+    fl = step_flops(cfg, shape)["total"]
+    by = step_bytes(cfg, shape, kv_bytes_per=kv_bytes_per)["total"]
+    mf = model_flops(cfg, shape)
+    compute_s = fl / (chips * PEAK_FLOPS_BF16)
+    memory_s = by / (chips * HBM_BW)
+    coll_s = collective_bytes_per_device / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        model_flops=mf, hlo_flops=fl,
+        useful_ratio=mf / fl if fl else 0.0,
+        bottleneck=bottleneck, note=note)

@@ -1,0 +1,22 @@
+"""The paper's primary contribution: SkyLB's locality-aware cross-region
+load balancing — hash ring, prefix trie, routing policies, selective
+pushing, two-layer LBs, controller, and the multi-region simulator."""
+from repro.core.hashring import HashRing
+from repro.core.prefixtree import PrefixTree
+from repro.core.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
+                                 ConsistentHash, LeastLoad, Policy,
+                                 PrefixTreePolicy, RoundRobin,
+                                 SGLangRouterLike, TargetView, eligible,
+                                 make_policy)
+from repro.core.simulator import (Controller, LBConfig, LoadBalancerSim,
+                                  Network, ReplicaConfig, ReplicaSim, Request,
+                                  Sim)
+from repro.core.system import ServingSystem
+
+__all__ = [
+    "HashRing", "PrefixTree", "BP", "SP_O", "SP_P", "BlendedScorePolicy",
+    "ConsistentHash", "LeastLoad", "Policy", "PrefixTreePolicy", "RoundRobin",
+    "SGLangRouterLike", "TargetView", "eligible", "make_policy", "Controller",
+    "LBConfig", "LoadBalancerSim", "Network", "ReplicaConfig", "ReplicaSim",
+    "Request", "Sim", "ServingSystem",
+]

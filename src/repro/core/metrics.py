@@ -1,0 +1,55 @@
+"""Metrics collection for simulator runs: throughput, TTFT / E2E latency
+distributions, KV-cache hit rate, load-imbalance stats."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Optional
+
+
+def pct(xs: list[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    k = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
+    return xs[k]
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    completed: list = dataclasses.field(default_factory=list)
+    forwards: list = dataclasses.field(default_factory=list)
+    t_start: float = 0.0
+    t_end: float = 0.0
+
+    def on_done(self, req) -> None:
+        self.completed.append(req)
+
+    # ---- summary -----------------------------------------------------
+    def summary(self, replicas: Optional[list] = None) -> dict:
+        reqs = [r for r in self.completed if r.finished is not None]
+        dur = max(1e-9, self.t_end - self.t_start)
+        out_tokens = sum(r.output_len for r in reqs)
+        ttft = [r.ttft - r.issued for r in reqs if r.ttft is not None]
+        e2e = [r.finished - r.issued for r in reqs]
+        prompt_tokens = sum(len(r.prompt_tokens) for r in reqs)
+        cached = sum(r.cached_tokens for r in reqs)
+        s = {
+            "requests": len(reqs),
+            "duration_s": dur,
+            "throughput_tok_s": out_tokens / dur,
+            "throughput_req_s": len(reqs) / dur,
+            "ttft_p50": pct(ttft, 50), "ttft_p90": pct(ttft, 90),
+            "ttft_mean": statistics.fmean(ttft) if ttft else float("nan"),
+            "e2e_p50": pct(e2e, 50), "e2e_p90": pct(e2e, 90),
+            "e2e_mean": statistics.fmean(e2e) if e2e else float("nan"),
+            "hit_rate": cached / max(1, prompt_tokens),
+            "forwards": len(self.forwards),
+        }
+        if replicas:
+            peaks = [r.peak_outstanding for r in replicas]
+            s["peak_outstanding_max"] = max(peaks)
+            s["peak_outstanding_min"] = min(peaks)
+            s["imbalance_ratio"] = (max(peaks) / max(1, min(peaks)))
+            s["replica_completions"] = {r.id: r.completions for r in replicas}
+        return s

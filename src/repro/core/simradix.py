@@ -1,0 +1,94 @@
+"""Replica-side radix prefix cache model (token-level, LRU) for the
+simulator: tracks which prefixes are KV-resident so prefill can skip them.
+Mirrors SGLang's RadixAttention semantics at block granularity 1.
+"""
+from __future__ import annotations
+
+
+class _RNode:
+    __slots__ = ("children", "last_access", "parent", "token")
+
+    def __init__(self, parent=None, token=None):
+        self.children: dict = {}
+        self.parent = parent
+        self.token = token
+        self.last_access = 0.0
+
+
+class SimRadix:
+    def __init__(self, capacity_tokens: int):
+        self.capacity = capacity_tokens
+        self.root = _RNode()
+        self.size = 0            # tokens resident
+
+    def match(self, tokens, now: float) -> int:
+        """Length of the longest cached prefix; touches it (LRU)."""
+        node = self.root
+        n = 0
+        for t in tokens:
+            child = node.children.get(t)
+            if child is None:
+                break
+            child.last_access = now
+            node = child
+            n += 1
+        return n
+
+    def insert(self, tokens, now: float) -> int:
+        """Insert a sequence; returns tokens newly added."""
+        node = self.root
+        added = 0
+        for t in tokens:
+            child = node.children.get(t)
+            if child is None:
+                child = _RNode(node, t)
+                node.children[t] = child
+                added += 1
+            child.last_access = now
+            node = child
+        self.size += added
+        if self.size > self.capacity:
+            self.evict(self.size - self.capacity)
+        return added
+
+    def evict(self, n_tokens: int) -> int:
+        """Evict ~n_tokens by repeatedly removing the LRU leaf chain."""
+        removed = 0
+        while removed < n_tokens and self.size > 0:
+            leaf = self._lru_leaf()
+            if leaf is None:
+                break
+            # remove the maximal chain of single-child ancestors
+            node = leaf
+            while (node.parent is not self.root and node.parent is not None
+                   and len(node.parent.children) == 1):
+                node = node.parent
+            parent = node.parent
+            if parent is None:
+                break
+            chain = self._count(node)
+            del parent.children[node.token]
+            self.size -= chain
+            removed += chain
+        return removed
+
+    def _lru_leaf(self):
+        best, best_t = None, float("inf")
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            if not nd.children and nd is not self.root:
+                if nd.last_access < best_t:
+                    best, best_t = nd, nd.last_access
+            stack.extend(nd.children.values())
+        return best
+
+    @staticmethod
+    def _count(node) -> int:
+        n = 0
+        stack = [node]
+        while stack:
+            nd = stack.pop()
+            n += 1
+            stack.extend(nd.children.values())
+        return n

@@ -1,0 +1,490 @@
+"""Discrete-event multi-region serving simulator.
+
+Models: WAN RTTs between regions, per-replica continuous batching with a KV
+token budget + radix prefix cache (TTFT = queueing + uncached prefill +
+iteration), regional LBs with FCFS queues / heartbeat probes / two-layer
+forwarding, a fault-tolerant controller (LB failover per paper §4.2),
+stragglers and elastic scale-out.
+
+Timing constants are calibrated to the paper's setup (Llama-3.1-8B on one
+L4 via SGLang): ~1.7k tok/s prefill, ~30 tok/s/stream decode, KV budget
+~32k tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Callable, Optional
+
+from repro.core.policies import (BP, SP_O, SP_P, Policy, TargetView, eligible)
+from repro.core.simradix import SimRadix
+
+
+# ------------------------------------------------------------------ engine
+
+class Sim:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable) -> None:
+        self.at(self.now + dt, fn)
+
+    def run(self, until: float = float("inf"), max_events: int = 50_000_000):
+        n = 0
+        while self._heap and n < max_events:
+            if self._heap[0][0] > until:     # peek — keep future events
+                break
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            fn()
+            n += 1
+        return n
+
+
+# ------------------------------------------------------------------ request
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    user_id: str
+    session_key: str
+    region: str
+    prompt_tokens: tuple
+    output_len: int
+    output_tokens: tuple = ()       # deterministic completion (for reuse)
+    arrival: float = 0.0            # at first LB
+    issued: float = 0.0             # at client
+    ttft: Optional[float] = None    # absolute time of first token
+    finished: Optional[float] = None
+    done_cb: Optional[Callable] = None
+    cached_tokens: int = 0
+    replica: Optional[str] = None
+    forwarded: bool = False
+    origin_lb: Optional[str] = None
+
+
+# ------------------------------------------------------------------ replica
+
+@dataclasses.dataclass
+class ReplicaConfig:
+    kv_budget: int = 32768          # tokens resident (running + cache)
+    prefill_tps: float = 1700.0
+    decode_base: float = 0.03       # s per iteration
+    decode_per_seq: float = 0.0008  # s per running sequence
+    speed_factor: float = 1.0       # >1 = straggler
+
+
+class ReplicaSim:
+    def __init__(self, sim: Sim, rid: str, region: str,
+                 cfg: ReplicaConfig = ReplicaConfig()):
+        self.sim = sim
+        self.id = rid
+        self.region = region
+        self.cfg = dataclasses.replace(cfg)
+        self.radix = SimRadix(cfg.kv_budget)
+        self.pending: deque[Request] = deque()
+        self.running: list[dict] = []
+        self._stepping = False
+        self.alive = True
+        # stats
+        self.peak_outstanding = 0
+        self.peak_tokens = 0
+        self.total_prefill_tokens = 0
+        self.total_cached_tokens = 0
+        self.completions = 0
+
+    # ---- introspection (what probes see)
+    def pending_count(self) -> int:
+        return len(self.pending)
+
+    def outstanding(self) -> int:
+        return len(self.pending) + len(self.running)
+
+    def kv_tokens_running(self) -> int:
+        return sum(r["kv"] for r in self.running)
+
+    # ---- request entry
+    def enqueue(self, req: Request) -> None:
+        self.pending.append(req)
+        self._kick()
+
+    def _kick(self) -> None:
+        if not self._stepping and self.alive:
+            self._stepping = True
+            self.sim.after(0.0, self._step)
+
+    # ---- continuous batching iteration
+    def _step(self) -> None:
+        if not self.alive:
+            self._stepping = False
+            return
+        now = self.sim.now
+        # 1) admit pending while the batch has KV headroom
+        prefill_tokens = 0
+        admitted = []
+        while self.pending:
+            req = self.pending[0]
+            need = len(req.prompt_tokens) + req.output_len
+            if self.kv_tokens_running() + need > self.cfg.kv_budget:
+                break
+            self.pending.popleft()
+            cached = self.radix.match(req.prompt_tokens, now)
+            uncached = len(req.prompt_tokens) - cached
+            req.cached_tokens = cached
+            req.replica = self.id
+            self.total_prefill_tokens += len(req.prompt_tokens)
+            self.total_cached_tokens += cached
+            prefill_tokens += uncached
+            # cache pressure: make room for the new tokens
+            overflow = (self.radix.size + self.kv_tokens_running() + need
+                        - self.cfg.kv_budget)
+            if overflow > 0:
+                self.radix.evict(overflow)
+            admitted.append(req)
+            self.running.append({"req": req, "kv": len(req.prompt_tokens),
+                                 "left": req.output_len})
+        self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
+        self.peak_tokens = max(self.peak_tokens,
+                               self.kv_tokens_running() + self.radix.size)
+        if not self.running:
+            self._stepping = False
+            return
+        # 2) iteration time: prefill the admitted + one decode token for all
+        t = prefill_tokens / self.cfg.prefill_tps
+        t += self.cfg.decode_base + self.cfg.decode_per_seq * len(self.running)
+        t *= self.cfg.speed_factor
+        self.sim.after(t, lambda a=admitted: self._finish_step(a))
+
+    def _finish_step(self, admitted: list) -> None:
+        now = self.sim.now
+        for req in admitted:
+            if req.ttft is None:
+                req.ttft = now
+        done = []
+        for r in self.running:
+            r["left"] -= 1
+            r["kv"] += 1
+            if r["left"] <= 0:
+                done.append(r)
+        for r in done:
+            self.running.remove(r)
+            req: Request = r["req"]
+            req.finished = now
+            self.completions += 1
+            # prompt + generated output become reusable cache content (the
+            # next conversation turn extends exactly this sequence)
+            self.radix.insert(tuple(req.prompt_tokens) + tuple(req.output_tokens),
+                              now)
+            if req.done_cb:
+                req.done_cb(req)
+        if self.running or self.pending:
+            self.sim.after(0.0, self._step)
+        else:
+            self._stepping = False
+
+
+# ------------------------------------------------------------------ network
+
+class Network:
+    """One-way latencies; RTT matrix keyed by region pairs."""
+    DEFAULT_RTT = {
+        ("us", "eu"): 0.140, ("us", "asia"): 0.180, ("eu", "asia"): 0.200,
+    }
+
+    def __init__(self, rtt: Optional[dict] = None, local_rtt: float = 0.004):
+        self.rtt = dict(self.DEFAULT_RTT)
+        if rtt:
+            self.rtt.update(rtt)
+        self.local_rtt = local_rtt
+
+    def one_way(self, a: str, b: str) -> float:
+        if a == b:
+            return self.local_rtt / 2
+        key = (a, b) if (a, b) in self.rtt else (b, a)
+        return self.rtt.get(key, 0.15) / 2
+
+
+# ------------------------------------------------------------------ LB
+
+@dataclasses.dataclass
+class LBConfig:
+    pushing: str = SP_P             # BP | SP-O | SP-P
+    spo_limit: int = 24
+    tau: int = 4                    # remote-forward queue buffer
+    probe_interval: float = 0.05
+    # cross-region heartbeats ride the WAN: they are refreshed slower than
+    # local probes (>= one RTT; the paper's regions are 140-200 ms apart)
+    remote_probe_interval: float = 0.2
+    cross_region: bool = True       # two-layer forwarding enabled
+    # SP-P optimism bound: between heartbeats the LB may send at most this
+    # many requests to a replica last seen with an empty pending queue.
+    # Alg. 1 is unbounded between probes (availability only refreshes at
+    # heartbeats), so the default is high — a backstop, not a throttle;
+    # lowering it trades burst absorption for stricter queue control.
+    max_inflight_per_probe: int = 64
+    # BEYOND-PAPER work stealing (paper §6 cites stealing > shedding for
+    # CPU loads): an idle LB PULLS from the most-backlogged peer instead of
+    # waiting for that peer to push. Complements SP-P forwarding, which is
+    # sender-initiated (shedding-style).
+    work_stealing: bool = False
+    steal_threshold: int = 4        # only steal from queues deeper than this
+    steal_batch: int = 2            # requests pulled per steal
+
+
+class LoadBalancerSim:
+    def __init__(self, sim: Sim, lid: str, region: str, net: Network,
+                 policy: Policy, remote_policy: Optional[Policy] = None,
+                 cfg: LBConfig = LBConfig(), metrics=None):
+        self.sim = sim
+        self.id = lid
+        self.region = region
+        self.net = net
+        self.policy = policy
+        self.remote_policy = remote_policy
+        self.cfg = cfg
+        self.replicas: dict[str, ReplicaSim] = {}
+        self.remote_lbs: dict[str, "LoadBalancerSim"] = {}
+        self.queue: deque[Request] = deque()
+        self.alive = True
+        self.metrics = metrics
+        # probe snapshots (stale between probes — like real heartbeats)
+        self._replica_snap: dict[str, TargetView] = {}
+        self._lb_snap: dict[str, TargetView] = {}
+        self._sent_since_probe: dict[str, int] = {}
+        self.forwarded_out = 0
+        self.peak_queue = 0
+        sim.after(0.0, self._probe)
+        sim.after(0.0, self._probe_remote)
+
+    # ---- topology
+    def add_replica(self, r: ReplicaSim) -> None:
+        self.replicas[r.id] = r
+        self.policy.on_target_added(r.id)
+        self._replica_snap[r.id] = self._view_of(r)
+
+    def remove_replica(self, rid: str) -> Optional[ReplicaSim]:
+        r = self.replicas.pop(rid, None)
+        self.policy.on_target_removed(rid)
+        self._replica_snap.pop(rid, None)
+        return r
+
+    def peer(self, lb: "LoadBalancerSim") -> None:
+        if lb.id != self.id:
+            self.remote_lbs[lb.id] = lb
+            if self.remote_policy:
+                self.remote_policy.on_target_added(lb.id)
+
+    # ---- availability monitor (Alg.1 MonitorAvailability)
+    def _view_of(self, r: ReplicaSim) -> TargetView:
+        return TargetView(id=r.id, outstanding=r.outstanding(),
+                          pending=r.pending_count(),
+                          available=r.pending_count() == 0 and r.alive)
+
+    def n_avail_replicas(self) -> int:
+        return sum(1 for r in self.replicas.values()
+                   if r.pending_count() == 0 and r.alive)
+
+    def _probe(self) -> None:
+        if not self.alive:
+            return
+        self._sent_since_probe.clear()
+        for rid, r in self.replicas.items():
+            self._replica_snap[rid] = self._view_of(r)
+        self._try_dispatch()
+        if self.cfg.work_stealing:
+            self._maybe_steal()
+        self.sim.after(self.cfg.probe_interval, self._probe)
+
+    def _probe_remote(self) -> None:
+        """WAN heartbeat: refresh peer-LB snapshots (slower than local)."""
+        if not self.alive:
+            return
+        for lid, lb in self.remote_lbs.items():
+            self._lb_snap[lid] = TargetView(
+                id=lid, available=lb.alive,
+                n_avail_replicas=lb.n_avail_replicas() if lb.alive else 0,
+                queue_len=len(lb.queue) if lb.alive else 10 ** 9,
+                outstanding=sum(x.outstanding() for x in lb.replicas.values())
+                if lb.alive else 10 ** 9)
+        self._try_dispatch()
+        self.sim.after(self.cfg.remote_probe_interval, self._probe_remote)
+
+    # ---- work stealing (beyond-paper; receiver-initiated rebalancing)
+    def _maybe_steal(self) -> None:
+        """Idle here + deep queue there => pull work (one steal per probe)."""
+        if self.queue or self.n_avail_replicas() == 0 or not self.remote_lbs:
+            return
+        victim_view = max(self._lb_snap.values(),
+                          key=lambda v: v.queue_len, default=None)
+        if victim_view is None or victim_view.queue_len <= self.cfg.steal_threshold:
+            return
+        victim = self.remote_lbs[victim_view.id]
+        lat = self.net.one_way(self.region, victim.region)
+        self.sim.after(lat, lambda: victim.on_steal_request(
+            self, self.cfg.steal_batch))
+
+    def on_steal_request(self, thief: "LoadBalancerSim", n: int) -> None:
+        """A peer with idle capacity asks for up to n TAIL requests (the
+        head keeps local FCFS fairness). Never re-steal forwarded work."""
+        if not self.alive:
+            return
+        lat = self.net.one_way(self.region, thief.region)
+        for _ in range(n):
+            if len(self.queue) <= self.cfg.steal_threshold:
+                break
+            req = self.queue.pop()          # tail
+            if req.forwarded:
+                self.queue.append(req)      # don't bounce; put it back
+                break
+            req.forwarded = True            # one WAN hop max, like _forward
+            self.forwarded_out += 1
+            if self.metrics is not None:
+                self.metrics.forwards.append((self.sim.now, self.id,
+                                              f"steal->{thief.id}"))
+            self.sim.after(lat, lambda q=req: thief.on_request(q))
+
+    # ---- request path (Alg.1 HandleRequest)
+    def on_request(self, req: Request) -> None:
+        if req.arrival == 0.0:
+            req.arrival = self.sim.now
+        if req.origin_lb is None:
+            req.origin_lb = self.id
+        self.queue.append(req)
+        self.peak_queue = max(self.peak_queue, len(self.queue))
+        self._try_dispatch()
+
+    def _local_views(self) -> list[TargetView]:
+        return [v for v in self._replica_snap.values()
+                if self.replicas.get(v.id) is not None
+                and self.replicas[v.id].alive]
+
+    def _try_dispatch(self) -> None:
+        while self.queue:
+            req = self.queue[0]
+            locals_ok = eligible(self._local_views(), self.cfg.pushing,
+                                 self.cfg.spo_limit, self.cfg.tau)
+            if locals_ok:
+                tid = self.policy.select(req, locals_ok)
+                if tid is None:
+                    tid = locals_ok[0].id
+                self.queue.popleft()
+                self._send_local(req, tid)
+                continue
+            if (self.cfg.cross_region and not req.forwarded
+                    and self.remote_lbs and self.remote_policy is not None):
+                remotes_ok = eligible(list(self._lb_snap.values()),
+                                      self.cfg.pushing, self.cfg.spo_limit,
+                                      self.cfg.tau)
+                remotes_ok = [v for v in remotes_ok
+                              if self.remote_lbs[v.id].alive]
+                if remotes_ok:
+                    lbid = self.remote_policy.select(req, remotes_ok)
+                    if lbid is not None:
+                        self.queue.popleft()
+                        self._forward(req, lbid)
+                        continue
+            break   # head-of-line waits for capacity
+
+    def _send_local(self, req: Request, rid: str) -> None:
+        self.policy.on_routed(req, rid)
+        # bump snapshot counts so least-load tie-breaks shift between probes;
+        # availability refreshes at probes (Alg. 1), with optimistic sends
+        # between heartbeats bounded by max_inflight_per_probe
+        snap = self._replica_snap.get(rid)
+        if snap:
+            snap.pending += 1
+            snap.outstanding += 1
+            sent = self._sent_since_probe.get(rid, 0) + 1
+            self._sent_since_probe[rid] = sent
+            if sent >= self.cfg.max_inflight_per_probe:
+                snap.available = False
+        r = self.replicas[rid]
+        self.sim.after(self.net.one_way(self.region, r.region),
+                       lambda: r.enqueue(req))
+
+    def _forward(self, req: Request, lbid: str) -> None:
+        req.forwarded = True
+        self.forwarded_out += 1
+        if self.remote_policy:
+            self.remote_policy.on_routed(req, lbid)
+        snap = self._lb_snap.get(lbid)
+        if snap:
+            snap.queue_len += 1
+        lb = self.remote_lbs[lbid]
+        if self.metrics is not None:
+            self.metrics.forwards.append((self.sim.now, self.id, lbid))
+        self.sim.after(self.net.one_way(self.region, lb.region),
+                       lambda: lb.on_request(req))
+
+
+# ------------------------------------------------------------------ controller
+
+class Controller:
+    """Centralized controller (§4.2): health-probes LBs, reassigns a dead
+    LB's replicas to the geographically closest live LB, returns them on
+    recovery; demotes stragglers."""
+
+    def __init__(self, sim: Sim, net: Network, lbs: list[LoadBalancerSim],
+                 probe_interval: float = 0.2):
+        self.sim = sim
+        self.net = net
+        self.lbs = {lb.id: lb for lb in lbs}
+        self.probe_interval = probe_interval
+        self._adopted: dict[str, list[tuple[str, ReplicaSim]]] = {}
+        self.events: list[tuple[float, str]] = []
+        sim.after(probe_interval, self._probe)
+
+    def _closest_live(self, region: str) -> Optional[LoadBalancerSim]:
+        live = [lb for lb in self.lbs.values() if lb.alive]
+        if not live:
+            return None
+        return min(live, key=lambda lb: self.net.one_way(region, lb.region))
+
+    def _probe(self) -> None:
+        for lb in self.lbs.values():
+            if not lb.alive and lb.id not in self._adopted:
+                self._failover(lb)
+            elif lb.alive and lb.id in self._adopted:
+                self._restore(lb)
+        self.sim.after(self.probe_interval, self._probe)
+
+    def _failover(self, dead: LoadBalancerSim) -> None:
+        host = self._closest_live(dead.region)
+        if host is None:
+            return
+        moved = []
+        for rid in list(dead.replicas):
+            r = dead.remove_replica(rid)
+            if r is not None:
+                host.add_replica(r)
+                moved.append((host.id, r))
+        # drain the dead LB's queue to the host as well
+        while dead.queue:
+            req = dead.queue.popleft()
+            self.sim.after(self.net.one_way(dead.region, host.region),
+                           lambda q=req: host.on_request(q))
+        self._adopted[dead.id] = moved
+        self.events.append((self.sim.now, f"failover {dead.id} -> {host.id}"))
+
+    def _restore(self, lb: LoadBalancerSim) -> None:
+        for host_id, r in self._adopted.pop(lb.id, []):
+            host = self.lbs[host_id]
+            host.remove_replica(r.id)
+            lb.add_replica(r)
+        self.events.append((self.sim.now, f"restore {lb.id}"))
+
+    def fail_lb(self, lbid: str) -> None:
+        self.lbs[lbid].alive = False
+
+    def recover_lb(self, lbid: str) -> None:
+        self.lbs[lbid].alive = True
+
+    def mark_straggler(self, replica: ReplicaSim, factor: float) -> None:
+        replica.cfg.speed_factor = factor

@@ -1,0 +1,215 @@
+"""Deployment builder + closed-loop clients: wires Sim, Network, replicas,
+LBs, Controller, policies into the named system variants evaluated in the
+paper (Fig. 8/9/10) plus our beyond-paper variants.
+
+Variants:
+  skylb        LB/region, prefix-trie local + snapshot-trie remote, SP-P
+  skylb-ch     LB/region, consistent hashing at both layers, SP-P
+  rr/ll/ch/sgl single central LB (US), blind pushing  — paper baselines
+  gke          LB/region, RR, outstanding-cap spillover to remote regions
+               (GKE-Gateway-like: no prefix awareness, no pending probes)
+  region-local LB/region, least-load, NO cross-region  — Fig. 10 baseline
+  blend        BEYOND-PAPER: skylb with blended prefix x load scoring
+  steal        BEYOND-PAPER: skylb + receiver-initiated work stealing
+  sp-o / bp    skylb trie routing but SP-O / blind pushing (Fig. 9 ablation)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+from typing import Optional
+
+from repro.core.metrics import RunMetrics
+from repro.core.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
+                                 ConsistentHash, LeastLoad, PrefixTreePolicy,
+                                 RoundRobin, SGLangRouterLike)
+from repro.core.simulator import (Controller, LBConfig, LoadBalancerSim,
+                                  Network, ReplicaConfig, ReplicaSim, Request,
+                                  Sim)
+from repro.core.workloads import SessionSpec, TreeSpec, _tokens
+
+REGIONS = ("us", "eu", "asia")
+
+
+class ServingSystem:
+    def __init__(self, variant: str, replicas_per_region: dict[str, int],
+                 *, replica_cfg: ReplicaConfig = ReplicaConfig(),
+                 net: Optional[Network] = None, seed: int = 0):
+        self.sim = Sim()
+        self.net = net or Network()
+        self.variant = variant
+        self.metrics = RunMetrics()
+        self.replicas: list[ReplicaSim] = []
+        self.lbs: dict[str, LoadBalancerSim] = {}
+        self._rid = itertools.count()
+        self._req_id = itertools.count()
+        self.rng = random.Random(seed)
+        self._build(variant, replicas_per_region, replica_cfg)
+        self.controller = Controller(self.sim, self.net,
+                                     list(self.lbs.values()))
+
+    # ------------------------------------------------------------ build
+    def _mk_replicas(self, region: str, n: int, cfg: ReplicaConfig):
+        out = []
+        for _ in range(n):
+            r = ReplicaSim(self.sim, f"{region}-r{next(self._rid)}", region,
+                           dataclasses.replace(cfg))
+            self.replicas.append(r)
+            out.append(r)
+        return out
+
+    def _build(self, variant, rpr, rcfg):
+        v = variant.lower()
+        if v in ("rr", "ll", "ch", "sgl", "trie"):
+            # 'trie' = single global-view prefix-trie router (longest match
+            # + least-load exploration) — the Fig. 6 'optimal' stand-in
+            pol = {"rr": RoundRobin, "ll": LeastLoad, "ch": ConsistentHash,
+                   "sgl": SGLangRouterLike, "trie": PrefixTreePolicy}[v]()
+            lb = LoadBalancerSim(self.sim, "lb-us", "us", self.net, pol,
+                                 cfg=LBConfig(pushing=BP, cross_region=False),
+                                 metrics=self.metrics)
+            for region, n in rpr.items():
+                for r in self._mk_replicas(region, n, rcfg):
+                    lb.add_replica(r)
+            self.lbs = {"lb-us": lb}
+            return
+        # one LB per region
+        def mk_policies():
+            if v in ("skylb", "sp-o", "bp", "steal"):
+                return PrefixTreePolicy(), PrefixTreePolicy()
+            if v == "skylb-ch":
+                return ConsistentHash(), ConsistentHash()
+            if v == "blend":
+                return BlendedScorePolicy(), PrefixTreePolicy()
+            if v == "gke":
+                return RoundRobin(), RoundRobin()
+            if v == "region-local":
+                return LeastLoad(), LeastLoad()
+            raise ValueError(variant)
+        pushing = {"skylb": SP_P, "skylb-ch": SP_P, "blend": SP_P,
+                   "sp-o": SP_O, "bp": BP, "gke": SP_O,
+                   "region-local": SP_P, "steal": SP_P}[v]
+        cross = v != "region-local"
+        for region, n in rpr.items():
+            local_pol, remote_pol = mk_policies()
+            lb = LoadBalancerSim(
+                self.sim, f"lb-{region}", region, self.net, local_pol,
+                remote_policy=remote_pol,
+                cfg=LBConfig(pushing=pushing, cross_region=cross,
+                             work_stealing=(v == "steal")),
+                metrics=self.metrics)
+            for r in self._mk_replicas(region, n, rcfg):
+                lb.add_replica(r)
+            self.lbs[lb.id] = lb
+        for a in self.lbs.values():
+            for b in self.lbs.values():
+                a.peer(b)
+
+    # ------------------------------------------------------------ routing
+    def lb_for(self, region: str) -> LoadBalancerSim:
+        """DNS resolution: nearest live LB (paper §4.1)."""
+        live = [lb for lb in self.lbs.values() if lb.alive]
+        return min(live, key=lambda lb: self.net.one_way(region, lb.region))
+
+    def submit(self, req: Request, done_cb) -> None:
+        req.issued = self.sim.now
+        lb = self.lb_for(req.region)
+
+        def wrapped_done(r: Request):
+            back = self.net.one_way(
+                next((x.region for x in self.replicas if x.id == r.replica),
+                     r.region), r.region)
+            if r.ttft is not None:
+                r.ttft += back          # client-observed first token
+            r.finished += back
+            self.metrics.on_done(r)
+            self.sim.after(0.0, lambda: done_cb(r))
+        req.done_cb = wrapped_done
+        self.sim.after(self.net.one_way(req.region, lb.region),
+                       lambda: lb.on_request(req))
+
+    # ------------------------------------------------------------ clients
+    def add_session_client(self, spec: SessionSpec,
+                           think_mean: float = 1.0) -> None:
+        state = {"i": 0, "history": tuple(spec.system_prompt)}
+
+        def issue():
+            i = state["i"]
+            if i >= len(spec.turns):
+                return
+            turn = spec.turns[i]
+            prompt = state["history"] + tuple(turn.prompt_suffix)
+            req = Request(
+                rid=next(self._req_id), user_id=spec.user_id,
+                session_key=spec.user_id, region=spec.region,
+                prompt_tokens=prompt, output_len=len(turn.output_tokens),
+                output_tokens=tuple(turn.output_tokens))
+            self.submit(req, done)
+
+        def done(r: Request):
+            i = state["i"]
+            turn = spec.turns[i]
+            state["history"] = tuple(r.prompt_tokens) + tuple(turn.output_tokens)
+            state["i"] = i + 1
+            think = self.rng.expovariate(1.0 / max(1e-6, think_mean))
+            self.sim.after(think, issue)
+
+        self.sim.after(self.rng.uniform(0, 0.5), issue)
+
+    def add_tot_client(self, trees: list[TreeSpec]) -> None:
+        state = {"ti": 0}
+
+        def run_tree():
+            if state["ti"] >= len(trees):
+                return
+            tree = trees[state["ti"]]
+            trng = random.Random(tree.seed)
+            thoughts: dict[tuple, tuple] = {}
+
+            def node_prompt(path: tuple) -> tuple:
+                """question + thoughts of all ANCESTORS (root .. parent)."""
+                prompt = tuple(tree.question)
+                for d in range(len(path)):
+                    prompt += thoughts[path[:d]]
+                return prompt
+
+            def issue_layer(depth: int, frontier: list[tuple]):
+                if depth >= tree.depth:
+                    state["ti"] += 1
+                    self.sim.after(0.5, run_tree)
+                    return
+                left = {"n": len(frontier)}
+                children: list[tuple] = []
+
+                def one_done(path):
+                    def cb(r: Request):
+                        thoughts[path] = tuple(r.output_tokens)
+                        for b in range(tree.branching):
+                            children.append(path + (b,))
+                        left["n"] -= 1
+                        if left["n"] == 0:
+                            issue_layer(depth + 1, children)
+                    return cb
+
+                for path in frontier:
+                    rng = random.Random(hash((tree.seed, path)) & 0xFFFFFFFF)
+                    olen = tree.node_output_len(path)
+                    out = _tokens(rng, olen)
+                    req = Request(
+                        rid=next(self._req_id), user_id=tree.user_id,
+                        session_key=f"{tree.user_id}:{tree.seed}",
+                        region=tree.region, prompt_tokens=node_prompt(path),
+                        output_len=olen, output_tokens=out)
+                    self.submit(req, one_done(path))
+
+            issue_layer(0, [()])
+
+        self.sim.after(self.rng.uniform(0, 0.5), run_tree)
+
+    # ------------------------------------------------------------ run
+    def run(self, until: float) -> dict:
+        self.metrics.t_start = 0.0
+        self.sim.run(until=until)
+        self.metrics.t_end = min(self.sim.now, until)
+        return self.metrics.summary(self.replicas)

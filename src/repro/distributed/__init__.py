@@ -1,0 +1,9 @@
+from repro.distributed.partition import (
+    batch_pspecs, cache_pspecs, dp_axes_for, dp_size, param_pspecs,
+    to_shardings, zero1_pspecs,
+)
+
+__all__ = [
+    "batch_pspecs", "cache_pspecs", "dp_axes_for", "dp_size",
+    "param_pspecs", "to_shardings", "zero1_pspecs",
+]

@@ -1,0 +1,98 @@
+"""Elastic re-mesh planning + straggler policy for training at scale.
+
+When devices/pods are lost mid-run, the job must restart on the largest
+coherent sub-mesh and reshard state from the last checkpoint. The planner
+keeps the MODEL axis intact when possible (changing TP degree re-lowers
+every kernel; changing DP degree only changes the batch split) and shrinks
+DP to the largest divisor of the surviving chip count.
+
+Straggler mitigation (training): with synchronous data parallelism one slow
+host gates every step. The policy mirrors serving (SP-P demotes slow
+replicas): hosts whose rolling step time exceeds `factor` x median are
+evicted and the job re-meshes without them — trading a smaller DP degree
+for a restored critical path. `should_evict` implements the hysteresis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+    pods: int = 1
+    dropped_chips: int = 0
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.data * self.model
+
+
+def plan_remesh(alive_chips: int, *, model_parallel: int,
+                max_data: int = 4096, pods: int = 1) -> MeshPlan:
+    """Largest (pods, data, model) mesh with data*model*pods <= alive and
+    `model` kept at the requested TP degree. Falls back to halving TP when
+    even data=1 doesn't fit."""
+    tp = model_parallel
+    while tp >= 1:
+        per_pod = alive_chips // pods
+        data = min(max_data, per_pod // tp)
+        if data >= 1:
+            used = pods * data * tp
+            return MeshPlan(data=data, model=tp, pods=pods,
+                            dropped_chips=alive_chips - used)
+        tp //= 2
+    raise ValueError(f"cannot build any mesh from {alive_chips} chips")
+
+
+def make_mesh_from_plan(plan: MeshPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = plan.chips
+    dev = np.asarray(devices[:n])
+    if plan.pods > 1:
+        return jax.sharding.Mesh(
+            dev.reshape(plan.pods, plan.data, plan.model),
+            ("pod", "data", "model"))
+    return jax.sharding.Mesh(dev.reshape(plan.data, plan.model),
+                             ("data", "model"))
+
+
+# ------------------------------------------------------------- stragglers
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    factor: float = 1.5          # evict if > factor x median
+    window: int = 8              # rolling window of step times
+    min_samples: int = 4
+    _times: dict = dataclasses.field(default_factory=dict)
+
+    def record(self, host: str, step_time_s: float) -> None:
+        buf = self._times.setdefault(host, [])
+        buf.append(step_time_s)
+        if len(buf) > self.window:
+            buf.pop(0)
+
+    def rolling(self, host: str) -> Optional[float]:
+        buf = self._times.get(host, [])
+        if len(buf) < self.min_samples:
+            return None
+        return statistics.fmean(buf)
+
+    def should_evict(self, host: str) -> bool:
+        mine = self.rolling(host)
+        if mine is None:
+            return False
+        others = [self.rolling(h) for h in self._times if h != host]
+        others = [x for x in others if x is not None]
+        if not others:
+            return False
+        return mine > self.factor * statistics.median(others)
+
+    def evictions(self) -> list[str]:
+        return [h for h in self._times if self.should_evict(h)]

@@ -1,0 +1,234 @@
+"""Sharding rules: params (TP over 'model'), optimizer moments (ZeRO-1 over
+the DP axes), batches (DP), and decode caches (DP, or sequence-parallel over
+'data' when global_batch < dp as in long_500k).
+
+Rules are keyed on (parent, leaf) names of the param pytree and give a
+CANDIDATE LIST of specs; the first whose sharded dims divide the mesh axis
+sizes wins (e.g. GQA kv-heads 8 on a 16-way model axis fall back to sharding
+head_dim; granite-moe's 40 experts fall back to TP-within-expert). Leading
+stack axes from lax.scan layer stacking are absorbed by left-padding with
+None up to the leaf's ndim.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+M = "model"
+
+
+def _candidates(parent: str, leaf: str) -> list[tuple]:
+    if leaf == "wq":
+        # NO hd-sharded fallback: contracting a sharded hd in the scores
+        # einsum makes XLA all-reduce the full S x T scores per chunk per
+        # layer (~10 TB/device at prefill_32k — EXPERIMENTS §Perf iter 1).
+        # When heads don't divide TP, replicate wq and let the q-chunk
+        # sequence-sharding hint (models.attention) carry the parallelism.
+        return [(None, M, None), ()]
+    if leaf in ("wk", "wv"):
+        # GQA kv-heads < tp: replicate (tiny) rather than shard head_dim —
+        # hd-sharded K meeting H-sharded Q forces involuntary SPMD remat.
+        return [(None, M, None), ()]
+    if leaf == "wo":
+        # like wq: no hd-sharded fallback (contracting sharded hd psums
+        # f32 activations per layer); replicate when H doesn't divide TP —
+        # the seq-sharded attention output then folds back with one bf16
+        # all-gather instead of two f32 all-reduces (§Perf iter 3)
+        return [(M, None, None), ()]
+    if leaf in ("w_up", "w_gate"):
+        if parent == "moe":
+            return [(M, None, None), (None, None, M), ()]
+        return [(None, M), ()]
+    if leaf == "w_down":
+        if parent == "moe":
+            # E-nondivisible fallback shards OUTPUT d (reduce-scatter-sized
+            # partial sums) instead of contraction f (full f32 all-reduce
+            # of the dispatched tensor — §Perf iter 8)
+            return [(M, None, None), (None, None, M), (None, M, None), ()]
+        return [(M, None), ()]
+    if leaf == "router":
+        return [()]
+    if leaf == "embedding":
+        return [(M, None), ()]
+    if leaf == "lm_head":
+        return [(None, M), ()]
+    if leaf in ("wz", "wx"):
+        return [(None, M), ()]
+    if leaf in ("wB", "wC", "wdt"):
+        return [()]
+    if leaf == "conv_w_x":
+        return [(None, M), ()]
+    if leaf == "conv_b_x":
+        return [(M,), ()]
+    if leaf in ("conv_w_bc", "conv_b_bc"):
+        return [()]
+    if leaf in ("A_log", "dt_bias", "D", "norm_scale"):
+        return [(M,), ()]
+    if leaf == "out_proj":
+        return [(M, None), ()]
+    return [()]                         # norms / scales: replicated
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fits(spec: tuple, shape: tuple, mesh: Mesh) -> bool:
+    pad = len(shape) - len(spec)
+    if pad < 0:
+        return False
+    for dim, axis in zip(shape[pad:], spec):
+        sz = _axis_size(mesh, axis)
+        if sz > 1 and (dim % sz != 0 or dim < sz):
+            return False
+    return True
+
+
+def _fit_spec(cands: list[tuple], shape: tuple, mesh: Mesh) -> P:
+    for spec in cands:
+        if _fits(spec, shape, mesh):
+            pad = len(shape) - len(spec)
+            return P(*((None,) * pad + tuple(spec)))
+    return P(*((None,) * len(shape)))
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return names
+
+
+def param_pspecs(param_tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a param (or param-shape) pytree."""
+    def spec_leaf(path, leaf):
+        names = _path_names(path)
+        parent = names[-2] if len(names) >= 2 else ""
+        return _fit_spec(_candidates(parent, names[-1]), leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec_leaf, param_tree)
+
+
+def zero1_pspecs(param_tree: Any, dp_axes: tuple, mesh: Mesh) -> Any:
+    """Optimizer-moment specs: param spec + shard the first still-replicated
+    dim divisible by the DP size over the DP axes (ZeRO-1)."""
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    pspecs = param_pspecs(param_tree, mesh)
+
+    def widen(spec: P, leaf):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (d, s) in enumerate(zip(dims, leaf.shape)):
+            if d is None and s % dp == 0 and s >= dp:
+                dims[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+        return P(*dims)
+    return jax.tree.map(widen, pspecs, param_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes_for(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes_for(mesh)]))
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Specs for the batch dict produced by make_batch_specs."""
+    dp = dp_axes_for(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    sharded = shape.global_batch % dp_size(mesh) == 0
+    bspec = (dpa,) if sharded else (None,)
+    if shape.kind == "train":
+        out = {"tokens": P(*bspec, None), "labels": P(*bspec, None)}
+    elif shape.kind == "prefill":
+        out = {"tokens": P(*bspec, None)}
+    else:
+        out = {"tokens": P(*bspec, None), "positions": P(*bspec)}
+    if cfg.is_encdec and shape.kind in ("train", "prefill"):
+        out["frames"] = P(*bspec, None, None)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 cache_tree: Any) -> Any:
+    """Decode/prefill cache specs. Batch dim shards over DP when divisible;
+    otherwise (long_500k, B=1) attention KV shards its SEQUENCE dim over
+    'data' (sequence parallelism) and SSM states shard heads over 'model'."""
+    dp = dp_axes_for(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    sharded = shape.global_batch % dp_size(mesh) == 0
+    b = dpa if sharded else None
+    seq = None if sharded else "data"
+
+    def spec_leaf(path, leaf):
+        names = _path_names(path)
+        leafname = names[-1]
+        nd = len(leaf.shape)
+        if leafname in ("k_scale", "v_scale"):
+            # (L, B, K) int8-KV per-head scales
+            return _fit_spec([(None, b, M), (None, b, None)],
+                             leaf.shape, mesh)
+        if leafname in ("k", "v", "ck", "cv"):
+            # (L|G, B, T, K, hd): shard kv-heads over model; if kv-heads < tp
+            # shard the SEQUENCE over model instead (flash-decode style: XLA
+            # gathers the tiny q and psums the softmax stats / pv partials).
+            cands = [(None, b, seq, M, None), (None, b, M, None, None),
+                     (None, b, seq, None, None)]
+            return _fit_spec([c[5 - nd:] if nd < 5 else c for c in cands],
+                             leaf.shape, mesh)
+        if leafname.endswith("conv_x"):
+            return _fit_spec([(None,) * (nd - 3) + (b, None, M),
+                              (None,) * (nd - 3) + (b, None, None)],
+                             leaf.shape, mesh)
+        if leafname.endswith("conv_bc"):
+            return _fit_spec([(None,) * (nd - 3) + (b, None, None)],
+                             leaf.shape, mesh)
+        if leafname.endswith("ssd"):
+            # (..., B, H, P, N)
+            return _fit_spec([(None,) * (nd - 4) + (b, M, None, None),
+                              (None,) * (nd - 4) + (b, None, None, None)],
+                             leaf.shape, mesh)
+        raise ValueError(f"unknown cache leaf {names}")
+    return jax.tree_util.tree_map_with_path(spec_leaf, cache_tree)
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def active_mesh() -> Mesh | None:
+    """The mesh of the enclosing `with mesh:` context, or None."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort with_sharding_constraint: applied only when tracing under
+    a mesh context whose axes cover `spec` AND every named dim divides its
+    axis. A no-op on CPU tests / meshless jit, so model code can carry
+    layout hints without coupling to the launcher."""
+    m = active_mesh()
+    if m is None:
+        return x
+    names = set(m.axis_names)
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            continue
+        if ax not in names or dim % m.shape[ax] != 0:
+            return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,56 @@
+"""Jitted dispatch wrappers: Pallas kernels on TPU, pure-jnp oracles
+(ref.py) elsewhere. Import this module, not the kernels, from model code.
+
+Set REPRO_FORCE_INTERPRET=1 to run the Pallas kernel bodies in interpret
+mode on CPU (used by the kernel test sweeps — validates the kernels
+themselves, not just the oracles).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.paged_decode import paged_decode as _paged_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def _force_interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_INTERPRET", "") == "1"
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """q: (B,H,S,hd); k/v: (B,K,T,hd). Pallas on TPU, oracle on CPU."""
+    if _on_tpu():
+        return _flash_pallas(q, k, v, causal=causal)
+    if _force_interpret():
+        return _flash_pallas(q, k, v, causal=causal, interpret=True)
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def paged_decode(q, k_pages, v_pages, block_table, seq_lens):
+    """q: (B,H,hd); pools (P,page,K,hd); block_table (B,NPG); seq_lens (B,)."""
+    if _on_tpu():
+        return _paged_pallas(q, k_pages, v_pages, block_table, seq_lens)
+    if _force_interpret():
+        return _paged_pallas(q, k_pages, v_pages, block_table, seq_lens,
+                             interpret=True)
+    return ref.paged_decode_ref(q, k_pages, v_pages, block_table, seq_lens)
+
+
+def ssd_scan(x, dt, a, B_, C_, *, chunk: int = 128):
+    """Chunked SSD; see kernels.ssd_scan. Pallas on TPU, oracle on CPU."""
+    if _on_tpu():
+        return _ssd_pallas(x, dt, a, B_, C_, chunk=chunk)
+    if _force_interpret():
+        return _ssd_pallas(x, dt, a, B_, C_, chunk=chunk, interpret=True)
+    return ref.ssd_scan_ref(x, dt, a, B_, C_, chunk=chunk)

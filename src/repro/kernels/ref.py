@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept in tests/test_kernels_*.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B,H,S,hd); k/v: (B,K,T,hd); GQA by head grouping. fp32 softmax."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, S, hd)
+    logits = jnp.einsum("bkgsh,bkth->bkgst", qg, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    if causal:
+        T = k.shape[2]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -2.0e38)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,bkth->bkgsh", probs, v)
+    return out.reshape(B, H, S, hd)
+
+
+def paged_decode_ref(q, k_pages, v_pages, block_table, seq_lens) -> jax.Array:
+    """Decode attention over a paged KV cache.
+    q: (B,H,hd); k_pages/v_pages: (P,page,K,hd); block_table: (B,npages)
+    int32 (entries beyond the sequence may be any valid page id);
+    seq_lens: (B,) valid token counts. fp32 softmax."""
+    B, H, hd = q.shape
+    Ptot, page, K, _ = k_pages.shape
+    npages = block_table.shape[1]
+    G = H // K
+
+    def one(qb, bt, ln):
+        k = k_pages[bt]                                   # (npages,page,K,hd)
+        v = v_pages[bt]
+        T = npages * page
+        k = k.reshape(T, K, hd)
+        v = v.reshape(T, K, hd)
+        qg = qb.reshape(K, G, hd)
+        logits = jnp.einsum("kgh,tkh->kgt", qg, k).astype(jnp.float32)
+        logits *= hd ** -0.5
+        valid = jnp.arange(T) < ln
+        logits = jnp.where(valid[None, None], logits, -2.0e38)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("kgt,tkh->kgh", probs, v)
+        return out.reshape(H, hd)
+
+    return jax.vmap(one)(q, block_table, seq_lens)
+
+
+def ssd_scan_ref(x, dt, a, B_, C_, *, chunk: int) -> jax.Array:
+    """Chunked SSD oracle (zero initial state).
+    x: (B,H,S,P) f32; dt: (B,H,S) f32 post-softplus; a: (H,) f32 (<0);
+    B_/C_: (B,G,S,N) f32 with groups broadcast over H//G heads.
+    Returns y: (B,H,S,P) f32."""
+    Bb, H, S, P = x.shape
+    G, N = B_.shape[1], B_.shape[3]
+    hpg = H // G
+    Bh = jnp.repeat(B_, hpg, axis=1)                      # (B,H,S,N)
+    Ch = jnp.repeat(C_, hpg, axis=1)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                             # (B,H,P),(B,H),(B,H,N)
+        decay = jnp.exp(dtt * a[None, :])
+        h = h * decay[..., None, None] + jnp.einsum("bh,bhp,bhn->bhpn",
+                                                    dtt, xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0, (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+                   jnp.moveaxis(Bh, 2, 0), jnp.moveaxis(Ch, 2, 0)))
+    return jnp.moveaxis(ys, 0, 2)                         # (B,H,S,P)

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on placeholder host devices; record memory analysis, cost
+analysis, and collective-byte accounting for the roofline.
+
+MUST be run as its own process (the XLA flag above locks the device count at
+first jax init — tests/benches see 1 device because they never import this).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_parse import collective_stats
+from repro.analysis.roofline import compute_roofline
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.distributed.partition import (
+    batch_pspecs, cache_pspecs, param_pspecs, to_shardings, zero1_pspecs,
+    dp_axes_for,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, make_batch_specs
+from repro.training.optimizer import OptConfig
+from repro.training.train_step import make_train_step, train_state_spec
+
+CACHE_PAD = 128          # decode caches hold seq_len tokens + aligned headroom
+
+
+def _sds(tree):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               dump_hlo: str | None = None,
+               kv_dtype: str | None = None) -> dict:
+    """Lower + compile one (arch, shape, mesh) cell. Returns artifact dict.
+    kv_dtype='int8' lowers decode cells with the quantized KV cache."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    use_int8_kv = (kv_dtype == "int8" and shape.kind == "decode"
+                   and cfg.family in ("dense", "moe", "vlm"))
+    model = build_model(cfg, jnp.bfloat16,
+                        kv_dtype=jnp.int8 if use_int8_kv else None)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(model, OptConfig())
+            state_sds = train_state_spec(model)
+            pspec = param_pspecs(state_sds["params"], mesh)
+            zspec = zero1_pspecs(state_sds["params"], dp_axes_for(mesh), mesh)
+            state_spec = {"params": pspec,
+                          "opt": {"m": zspec, "v": zspec,
+                                  "step": jax.sharding.PartitionSpec()}}
+            batch_sds = make_batch_specs(cfg, "train", shape.global_batch,
+                                         shape.seq_len)
+            in_sh = (to_shardings(mesh, state_spec),
+                     to_shardings(mesh, batch_pspecs(cfg, shape, mesh)))
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              donate_argnums=(0,)).lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, pad_to=shape.seq_len + CACHE_PAD)
+            params_sds = model.param_spec()
+            batch_sds = make_batch_specs(cfg, "prefill", shape.global_batch,
+                                         shape.seq_len)
+            in_sh = (to_shardings(mesh, param_pspecs(params_sds, mesh)),
+                     to_shardings(mesh, batch_pspecs(cfg, shape, mesh)))
+            lowered = jax.jit(prefill_step, in_shardings=in_sh).lower(
+                params_sds, batch_sds)
+        else:  # decode
+            def decode_step(params, cache, batch):
+                return model.decode(params, cache, batch)
+            params_sds = model.param_spec()
+            cache_sds = _sds(model.cache_spec(shape.global_batch,
+                                              shape.seq_len + CACHE_PAD))
+            batch_sds = make_batch_specs(cfg, "decode", shape.global_batch,
+                                         shape.seq_len)
+            in_sh = (to_shardings(mesh, param_pspecs(params_sds, mesh)),
+                     to_shardings(mesh, cache_pspecs(cfg, shape, mesh, cache_sds)),
+                     to_shardings(mesh, batch_pspecs(cfg, shape, mesh)))
+            lowered = jax.jit(decode_step, in_shardings=in_sh,
+                              donate_argnums=(1,)).lower(
+                params_sds, cache_sds, batch_sds)
+
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(text)
+        coll = collective_stats(text)
+
+    elapsed = time.time() - t0
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rl = compute_roofline(cfg, shape, mesh_name, chips,
+                          collective_bytes_per_device=coll["operand_bytes"],
+                          kv_bytes_per=1.0 if use_int8_kv else 2.0,
+                          note="int8-kv" if use_int8_kv else "")
+    print(compiled.memory_analysis())          # proves it fits (per spec)
+    cost_summary = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and
+                    k in ("flops", "bytes accessed", "transcendentals")}
+    print({"cost_analysis(once-per-scan-body)": cost_summary})
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips, "compile_s": round(elapsed, 1),
+        "per_device_bytes": int(per_dev_bytes),
+        "per_device_gb": round(per_dev_bytes / 2**30, 3),
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "out_bytes": int(mem.output_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "cost_analysis": cost_summary,
+        "collectives": {
+            "operand_bytes": coll["operand_bytes"],
+            "wire_bytes": coll["wire_bytes"],
+            "count": coll["count"],
+            "per_kind": {k: v for k, v in coll["per_kind"].items()
+                         if v["count"]},
+        },
+        "roofline": rl.row(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "int8"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip-existing] {tag}")
+                    continue
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    art = lower_cell(arch, shape, mp, dump_hlo=args.dump_hlo,
+                                     kv_dtype=args.kv_dtype)
+                except Exception as e:  # noqa: BLE001 — record & continue
+                    traceback.print_exc()
+                    art = {"arch": arch, "shape": shape,
+                           "mesh": "pod2x16x16" if mp else "pod16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1)
+                cells.append(art)
+                print(json.dumps({k: art[k] for k in
+                                  ("arch", "shape", "mesh", "status")}),
+                      flush=True)
+    print(f"done: {len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from repro.models.model import Model, build_model, make_batch_specs
+
+__all__ = ["Model", "build_model", "make_batch_specs"]

@@ -1,0 +1,216 @@
+"""GQA attention: training/prefill (causal or bidirectional) + cached decode.
+
+Projections are stored head-major — wq: (d, H, hd) — so TP sharding over the
+head axis is a plain PartitionSpec. Softmax runs in fp32.
+
+The jnp paths here ARE the dry-run/lowering paths; on TPU the serving engine
+swaps in the Pallas kernels via repro.kernels.ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.partition import active_mesh, hint
+from repro.models.layers import apply_rope, normal_init, rms_norm
+
+NEG_INF = -2.0e38
+
+
+def _maybe_seq_shard(q: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """When q-heads don't divide the TP axis (wq replicated — see
+    partition._candidates), shard the q SEQUENCE over 'model' instead so the
+    S x T scores stay fully local per device. No-op when head sharding is
+    clean or outside a mesh context."""
+    m = active_mesh()
+    if m is None or "model" not in m.axis_names:
+        return q
+    if cfg.n_heads % m.shape["model"] == 0:
+        return q                      # head sharding already covers TP
+    if "data" in m.axis_names and q.shape[0] % m.shape["data"] == 0:
+        return hint(q, "data", "model", None, None)   # keep batch sharded!
+    return hint(q, None, "model", None, None)
+
+
+def _maybe_seq_shard_stacked(qs_all: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Same as _maybe_seq_shard for the (nq, B, qc, H, hd) chunk stack."""
+    m = active_mesh()
+    if m is None or "model" not in m.axis_names:
+        return qs_all
+    if cfg.n_heads % m.shape["model"] == 0:
+        return qs_all
+    if "data" in m.axis_names and qs_all.shape[1] % m.shape["data"] == 0:
+        return hint(qs_all, None, "data", "model", None, None)
+    return hint(qs_all, None, None, "model", None, None)
+
+
+def init_attn(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = (H * hd) ** -0.5 / (2 * max(cfg.n_layers, 1)) ** 0.5
+    p = {
+        "wq": normal_init(ks[0], (d, H, hd), s_in, dtype),
+        "wk": normal_init(ks[1], (d, K, hd), s_in, dtype),
+        "wv": normal_init(ks[2], (d, K, hd), s_in, dtype),
+        "wo": normal_init(ks[3], (H, hd, d), s_out, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_scale"] = jnp.ones((hd,), dtype)
+        p["k_scale"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_q(p, x, cfg, positions, rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qk_norm and "q_scale" in p:
+        q = rms_norm(q, p["q_scale"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(p, x, cfg, positions, rope: bool):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm and "k_scale" in p:
+        k = rms_norm(k, p["k_scale"], cfg.norm_eps)
+    if rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,S,H,hd)  k/v: (B,T,K,hd)  mask: broadcastable (B,1,S,T) bool."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    logits = jnp.where(mask[:, :, None, :, :] if mask.ndim == 4 else mask,
+                       logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, causal: bool, q_chunk: int):
+    """Query-chunked SDPA (flash-style row streaming at the XLA level) so
+    S x T score tensors never fully materialize. Sequential lax.scan over
+    STATICALLY-sliced chunks (scan xs slicing partitions cleanly; a
+    dynamic_slice at a loop-varying offset makes GSPMD gather the operand —
+    EXPERIMENTS §Perf iter 2); each chunk body is rematerialized in the
+    backward pass."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    nq = S // q_chunk
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    qs_all = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    # shard the STACKED chunks once (constraining only inside the scan body
+    # makes GSPMD re-gather the stack every layer)
+    qs_all = _maybe_seq_shard_stacked(qs_all, cfg)
+
+    @jax.checkpoint
+    def one(_, xs):
+        qs, ci = xs
+        qs = _maybe_seq_shard(qs, cfg)
+        qpos = ci * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+        if causal:
+            mask = (qpos[:, None] >= kv_pos[None, :])[None, None]
+        else:
+            mask = jnp.ones((1, 1, q_chunk, T), bool)
+        return None, _sdpa(qs, k, v, mask, cfg)
+
+    _, out = jax.lax.scan(one, None,
+                          (qs_all, jnp.arange(nq)))              # (nq,B,qc,H,hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+# chunk query rows once sequences get long enough that S x T scores dominate
+Q_CHUNK = 1024
+CHUNK_THRESHOLD = 2048
+
+
+def attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                 causal: bool = True, positions=None, rope: bool = True):
+    """Full-sequence attention (training / prefill). Returns (out, k, v)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q = _project_q(p, x, cfg, positions, rope)
+    k, v = _project_kv(p, x, cfg, positions, rope)
+    if S >= CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        out = _sdpa_chunked(q, k, v, cfg, causal, Q_CHUNK)
+    else:
+        if causal:
+            mask = jnp.tril(jnp.ones((S, S), bool))[None, None]
+        else:
+            mask = jnp.ones((1, 1, S, S), bool)
+        out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, k, v
+
+
+KV_QMAX = 127.0
+
+
+def quantize_kv(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """x: (..., K, hd) -> int8 with per-head scales (..., broadcast K)."""
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                    -KV_QMAX, KV_QMAX).astype(jnp.int8)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_decode(p: dict, x: jax.Array, cache_k, cache_v, positions, cfg: ModelConfig,
+                rope: bool = True, k_scale=None, v_scale=None):
+    """One-token decode. x: (B,1,d); cache_*: (B,Smax,K,hd) bf16/fp32, or
+    int8 with per-head scales k_scale/v_scale (B,K) (int8-KV: halves the
+    decode memory term — EXPERIMENTS §Perf cell C);
+    positions: (B,) index where the new token lands (== current length).
+    Returns (out, new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    pos2 = positions[:, None]                                    # (B,1)
+    q = _project_q(p, x, cfg, pos2, rope)
+    k_new, v_new = _project_kv(p, x, cfg, pos2, rope)
+
+    quantized = cache_k.dtype == jnp.int8
+    if quantized:
+        k_new = quantize_kv(k_new, k_scale[:, None])             # (B,1,K,hd)
+        v_new = quantize_kv(v_new, v_scale[:, None])
+
+    def upd(cache, new, pos):
+        return jax.lax.dynamic_update_slice(cache, new, (pos, 0, 0))
+    cache_k = jax.vmap(upd)(cache_k, k_new, positions)
+    cache_v = jax.vmap(upd)(cache_v, v_new, positions)
+
+    if quantized:
+        k_use = dequantize_kv(cache_k, k_scale[:, None], x.dtype)
+        v_use = dequantize_kv(cache_v, v_scale[:, None], x.dtype)
+    else:
+        k_use, v_use = cache_k, cache_v
+    T = cache_k.shape[1]
+    valid = jnp.arange(T, dtype=jnp.int32)[None, :] <= positions[:, None]  # (B,T)
+    mask = valid[:, None, None, :]                               # (B,1,1,T)
+    out = _sdpa(q, k_use, v_use, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache_k, cache_v
+
+
+def cross_attn_forward(p: dict, x: jax.Array, enc_k, enc_v, cfg: ModelConfig):
+    """Decoder cross-attention over precomputed encoder K/V (no mask)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    mask = jnp.ones((1, 1, S, enc_k.shape[1]), bool)
+    out = _sdpa(q, enc_k, enc_v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_kv(p: dict, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v

@@ -1,0 +1,139 @@
+"""Whisper-style encoder-decoder backbone. The conv frontend is a STUB per
+the assignment: batches carry precomputed frame embeddings (B, F, d_model).
+Encoder: bidirectional attention blocks. Decoder: causal self-attn (cached) +
+cross-attn over encoder output (cross-KV cached at prefill) + MLP.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_mlp, embed_tokens, init_embed, init_mlp, \
+    lm_logits, rms_norm
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.init_attn(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": init_mlp(k2, cfg, dtype)}
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "self": attn.init_attn(k1, cfg, dtype),
+            "ln_x": jnp.ones((cfg.d_model,), dtype),
+            "cross": attn.init_attn(k2, cfg, dtype, cross=True),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": init_mlp(k3, cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, dtype) -> dict:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    p = init_embed(ke, cfg, dtype)
+    p["enc_layers"] = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+        jax.random.split(kenc, cfg.n_enc_layers))
+    p["dec_layers"] = jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+        jax.random.split(kdec, cfg.n_layers))
+    p["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def encode(params, frames, cfg: ModelConfig, dtype):
+    h = frames.astype(dtype)
+
+    @jax.checkpoint
+    def blk(h, lp):
+        y, _, _ = attn.attn_forward(
+            lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg, causal=False)
+        h = h + y
+        h = h + apply_mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return h, None
+
+    h, _ = jax.lax.scan(blk, h, params["enc_layers"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(h, lp, enc_out, cfg):
+    y, k, v = attn.attn_forward(
+        lp["self"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg)
+    h = h + y
+    h = h + attn.cross_attn_forward(
+        lp["cross"], rms_norm(h, lp["ln_x"], cfg.norm_eps),
+        *attn.cross_kv(lp["cross"], enc_out), cfg)
+    h = h + apply_mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+    return h, (k, v)
+
+
+def train_logits(params, batch, cfg: ModelConfig, dtype):
+    enc_out = encode(params, batch["frames"], cfg, dtype)
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    blk = jax.checkpoint(
+        functools.partial(_dec_block, enc_out=enc_out, cfg=cfg))
+    h, _ = jax.lax.scan(lambda c, lp: blk(c, lp), h, params["dec_layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), jnp.float32(0.0)
+
+
+def prefill(params, batch, cfg: ModelConfig, dtype, pad_to: int = 0):
+    enc_out = encode(params, batch["frames"], cfg, dtype)
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    S = h.shape[1]
+    pad = max(pad_to, S)
+
+    def blk(h, lp):
+        h, (k, v) = _dec_block(h, lp, enc_out, cfg)
+        ck, cv = attn.cross_kv(lp["cross"], enc_out)
+        if pad > S:
+            padw = [(0, 0), (0, pad - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        return h, (k, v, ck, cv)
+
+    h, (ks, vs, cks, cvs) = jax.lax.scan(blk, h, params["dec_layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h[:, -1:], cfg), \
+        {"k": ks, "v": vs, "ck": cks, "cv": cvs}
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, dtype):
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    positions = batch["positions"]
+
+    def blk(h, xs):
+        lp, ck_self, cv_self, ck, cv = xs
+        y, ck_self, cv_self = attn.attn_decode(
+            lp["self"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+            ck_self, cv_self, positions, cfg)
+        h = h + y
+        h = h + attn.cross_attn_forward(
+            lp["cross"], rms_norm(h, lp["ln_x"], cfg.norm_eps), ck, cv, cfg)
+        h = h + apply_mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return h, (ck_self, cv_self)
+
+    h, (ks, vs) = jax.lax.scan(
+        blk, h, (params["dec_layers"], cache["k"], cache["v"],
+                 cache["ck"], cache["cv"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), \
+        {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"]}
+
+
+def cache_spec(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    kv = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+    xkv = (cfg.n_layers, batch_size, cfg.src_frames, cfg.n_kv_heads, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(kv, dtype),
+            "v": jax.ShapeDtypeStruct(kv, dtype),
+            "ck": jax.ShapeDtypeStruct(xkv, dtype),
+            "cv": jax.ShapeDtypeStruct(xkv, dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch_size, max_len, dtype))

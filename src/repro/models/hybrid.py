@@ -1,0 +1,172 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention+MLP block
+applied after every `attn_every` SSM layers (13 applications for 81L/6),
+reusing a single parameter set but keeping a distinct KV cache per
+application. Layout: n_groups x group_size mamba layers + tail layers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_mlp, embed_tokens, init_embed, init_mlp, \
+    lm_logits, rms_norm
+from repro.models.mamba2 import init_mamba, mamba_decode, mamba_forward
+
+
+def layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    gsz = cfg.attn_every
+    n_groups = cfg.n_layers // gsz
+    tail = cfg.n_layers - n_groups * gsz
+    return n_groups, gsz, tail
+
+
+def _init_mamba_layer(key, cfg, dtype):
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "mamba": init_mamba(key, cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, dtype) -> dict:
+    n_groups, gsz, tail = layout(cfg)
+    ke, kg, kt, ka, km = jax.random.split(key, 5)
+    gkeys = jax.random.split(kg, n_groups * gsz).reshape(n_groups, gsz, 2)
+    groups = jax.vmap(jax.vmap(lambda k: _init_mamba_layer(k, cfg, dtype)))(gkeys)
+    p = init_embed(ke, cfg, dtype)
+    p["groups"] = groups
+    if tail:
+        tkeys = jax.random.split(kt, tail)
+        p["tail"] = jax.vmap(lambda k: _init_mamba_layer(k, cfg, dtype))(tkeys)
+    p["shared"] = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attn(ka, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(km, cfg, dtype),
+    }
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _mamba_block(h, lp, cfg):
+    return h + mamba_forward(lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps), cfg), None
+
+
+def _shared_attn_forward(h, shared, cfg):
+    y, k, v = attn.attn_forward(
+        shared["attn"], rms_norm(h, shared["ln1"], cfg.norm_eps), cfg)
+    h = h + y
+    h = h + apply_mlp(shared["mlp"], rms_norm(h, shared["ln2"], cfg.norm_eps), cfg)
+    return h, k, v
+
+
+def train_logits(params, batch, cfg: ModelConfig, dtype):
+    _, _, tail = layout(cfg)
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    shared = params["shared"]
+    mblk = jax.checkpoint(functools.partial(_mamba_block, cfg=cfg))
+
+    @jax.checkpoint
+    def group_step(h, gp):
+        h, _ = jax.lax.scan(mblk, h, gp)
+        h, _, _ = _shared_attn_forward(h, shared, cfg)
+        return h, None
+
+    h, _ = jax.lax.scan(group_step, h, params["groups"])
+    if tail:
+        h, _ = jax.lax.scan(mblk, h, params["tail"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), jnp.float32(0.0)
+
+
+def prefill(params, batch, cfg: ModelConfig, dtype, pad_to: int = 0):
+    _, _, tail = layout(cfg)
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    shared = params["shared"]
+    S = h.shape[1]
+    pad = max(pad_to, S)
+
+    def mblk_state(h, lp):
+        y, ((cx, cbc), ssd) = mamba_forward(
+            lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+            return_state=True)
+        return h + y, (cx, cbc, ssd)
+
+    def group_step(h, gp):
+        h, states = jax.lax.scan(mblk_state, h, gp)
+        h, k, v = _shared_attn_forward(h, shared, cfg)
+        if pad > S:
+            padw = [(0, 0), (0, pad - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        return h, (states, k, v)
+
+    h, ((g_cx, g_cbc, g_ssd), ks, vs) = jax.lax.scan(group_step, h, params["groups"])
+    cache = {"g_conv_x": g_cx, "g_conv_bc": g_cbc, "g_ssd": g_ssd, "k": ks, "v": vs}
+    if tail:
+        h, (t_cx, t_cbc, t_ssd) = jax.lax.scan(mblk_state, h, params["tail"])
+        cache["t_conv_x"], cache["t_conv_bc"], cache["t_ssd"] = t_cx, t_cbc, t_ssd
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, dtype):
+    _, _, tail = layout(cfg)
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    positions = batch["positions"]
+    shared = params["shared"]
+
+    def mstep(h, xs):
+        lp, cx, cbc, ssd = xs
+        y, (cx, cbc), ssd = mamba_decode(
+            lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps), (cx, cbc), ssd, cfg)
+        return h + y, (cx, cbc, ssd)
+
+    def group_step(h, xs):
+        gp, cx, cbc, ssd, ck, cv = xs
+        h, (cx, cbc, ssd) = jax.lax.scan(mstep, h, (gp, cx, cbc, ssd))
+        y, ck, cv = attn.attn_decode(
+            shared["attn"], rms_norm(h, shared["ln1"], cfg.norm_eps),
+            ck, cv, positions, cfg)
+        h = h + y
+        h = h + apply_mlp(shared["mlp"], rms_norm(h, shared["ln2"], cfg.norm_eps), cfg)
+        return h, (cx, cbc, ssd, ck, cv)
+
+    h, (g_cx, g_cbc, g_ssd, ks, vs) = jax.lax.scan(
+        group_step, h,
+        (params["groups"], cache["g_conv_x"], cache["g_conv_bc"],
+         cache["g_ssd"], cache["k"], cache["v"]))
+    out = {"g_conv_x": g_cx, "g_conv_bc": g_cbc, "g_ssd": g_ssd, "k": ks, "v": vs}
+    if tail:
+        h, (t_cx, t_cbc, t_ssd) = jax.lax.scan(
+            mstep, h,
+            (params["tail"], cache["t_conv_x"], cache["t_conv_bc"], cache["t_ssd"]))
+        out["t_conv_x"], out["t_conv_bc"], out["t_ssd"] = t_cx, t_cbc, t_ssd
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), out
+
+
+def cache_spec(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    n_groups, gsz, tail = layout(cfg)
+    s = cfg.ssm
+    cx = (batch_size, s.conv_width - 1, cfg.d_inner)
+    cbc = (batch_size, s.conv_width - 1, 2 * s.n_groups * s.state)
+    ssd = (batch_size, cfg.ssm_heads, s.head_dim, s.state)
+    kv = (n_groups, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+    spec = {
+        "g_conv_x": jax.ShapeDtypeStruct((n_groups, gsz) + cx, dtype),
+        "g_conv_bc": jax.ShapeDtypeStruct((n_groups, gsz) + cbc, dtype),
+        "g_ssd": jax.ShapeDtypeStruct((n_groups, gsz) + ssd, jnp.float32),
+        "k": jax.ShapeDtypeStruct(kv, dtype),
+        "v": jax.ShapeDtypeStruct(kv, dtype),
+    }
+    if tail:
+        spec["t_conv_x"] = jax.ShapeDtypeStruct((tail,) + cx, dtype)
+        spec["t_conv_bc"] = jax.ShapeDtypeStruct((tail,) + cbc, dtype)
+        spec["t_ssd"] = jax.ShapeDtypeStruct((tail,) + ssd, jnp.float32)
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch_size, max_len, dtype))

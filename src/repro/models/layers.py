@@ -1,0 +1,83 @@
+"""Shared pure-JAX layers: norms, RoPE, MLPs, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(hd/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S). Pairs are
+    (x[..., :hd/2], x[..., hd/2:]) (llama 'rotate_half' convention)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5 / (2 * max(cfg.n_layers, 1)) ** 0.5
+    p = {"w_up": normal_init(ks[0], (d, f), scale_in, dtype),
+         "w_down": normal_init(ks[1], (f, d), scale_out, dtype)}
+    if cfg.gated_mlp:
+        p["w_gate"] = normal_init(ks[2], (d, f), scale_in, dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    up = x @ p["w_up"]
+    if cfg.gated_mlp:
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------- embedding
+
+def init_embed(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"embedding": normal_init(ks[0], (cfg.vocab, cfg.d_model), 0.02, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal_init(ks[1], (cfg.d_model, cfg.vocab),
+                                   cfg.d_model ** -0.5, dtype)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def lm_logits(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return h @ p["embedding"].T
+    return h @ p["lm_head"]

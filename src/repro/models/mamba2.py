@@ -1,0 +1,198 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk state recurrence via lax.scan); decode is the O(1) recurrent
+update. State math runs in fp32.
+
+TP note: the reference CUDA implementation fuses z/x/B/C/dt into one in_proj
+GEMM. We keep them as separate projections (mathematically identical) so the
+head/channel dims shard cleanly over the 'model' mesh axis — sharding a
+concatenated mixed dim would misalign split boundaries with shard boundaries.
+The depthwise conv is likewise split into its x and BC channel groups (exact,
+since depthwise convs are per-channel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import normal_init, rms_norm
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d, di, G, N, H, W = (cfg.d_model, cfg.d_inner, s.n_groups, s.state,
+                         cfg.ssm_heads, s.conv_width)
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+    dt = jnp.exp(jax.random.uniform(ks[6], (H,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "wz": normal_init(ks[0], (d, di), sc, dtype),
+        "wx": normal_init(ks[1], (d, di), sc, dtype),
+        "wB": normal_init(ks[2], (d, G * N), sc, dtype),
+        "wC": normal_init(ks[3], (d, G * N), sc, dtype),
+        "wdt": normal_init(ks[4], (d, H), sc, dtype),
+        "conv_w_x": normal_init(ks[5], (W, di), W ** -0.5, dtype),
+        "conv_b_x": jnp.zeros((di,), dtype),
+        "conv_w_bc": normal_init(ks[7], (W, 2 * G * N), W ** -0.5, dtype),
+        "conv_b_bc": jnp.zeros((2 * G * N,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[6], (H,), jnp.float32, 1.0, 16.0)),
+        "dt_bias": jnp.log(jnp.expm1(dt)),                      # inv-softplus
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": normal_init(
+            ks[4], (di, d), di ** -0.5 / (2 * max(cfg.n_layers, 1)) ** 0.5, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 cache: jax.Array | None = None):
+    """Depthwise causal conv1d + silu. x: (B,S,ch); w: (W,ch).
+    cache: (B,W-1,ch) previous inputs (decode) or None (prefill, zero-pad).
+    Returns (out (B,S,ch), new_cache (B,W-1,ch))."""
+    B, S, ch = x.shape
+    W = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((B, W - 1, ch), x.dtype)
+    full = jnp.concatenate([cache, x], axis=1)                   # (B, W-1+S, ch)
+    out = jnp.zeros((B, S, ch), jnp.float32)
+    for i in range(W):                                           # W is tiny (4)
+        out = out + full[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_cache = full[:, -(W - 1):, :]
+    return jax.nn.silu(out).astype(x.dtype), new_cache
+
+
+def _project(p, u, cfg: ModelConfig, conv_x_cache=None, conv_bc_cache=None):
+    """u -> (z, x, BC, dt, new conv caches). BC still concatenated (small)."""
+    z = u @ p["wz"]
+    x = u @ p["wx"]
+    BC = jnp.concatenate([u @ p["wB"], u @ p["wC"]], axis=-1)
+    dt = u @ p["wdt"]
+    x, new_cx = _causal_conv(x, p["conv_w_x"], p["conv_b_x"], conv_x_cache)
+    BC, new_cbc = _causal_conv(BC, p["conv_w_bc"], p["conv_b_bc"], conv_bc_cache)
+    return z, x, BC, dt, new_cx, new_cbc
+
+
+def ssd_chunked(x, dt, a, B_, C_, cfg: ModelConfig, h_init=None):
+    """Chunked SSD. x: (B,S,H,P) fp32; dt: (B,S,H) fp32 (already softplus'd);
+    a: (H,) fp32 negative; B_/C_: (B,S,G,N) fp32.
+    Returns (y (B,S,H,P) fp32, h_final (B,H,P,N) fp32)."""
+    s = cfg.ssm
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(s.chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input => state unchanged
+        pad = Q - S % Q
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        B_ = jnp.pad(B_, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        C_ = jnp.pad(C_, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        S = S + pad
+    nc = S // Q
+    hpg = H // G                                                 # heads per group
+
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = B_.reshape(Bb, nc, Q, G, N)
+    Cc = C_.reshape(Bb, nc, Q, G, N)
+
+    delta = dtc * a[None, None, None, :]                         # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(delta, axis=2)                              # inclusive
+
+    # ---- intra-chunk (quadratic within chunk)
+    # L[i,j] = exp(cum_i - cum_j) for j<=i else 0
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcqgn,bcjgn->bcqjg", Cc, Bc)                # (B,nc,Q,Q,G)
+    CB = jnp.repeat(CB, hpg, axis=-1)                            # (B,nc,Q,Q,H)
+    M = CB * L * dtc[:, :, None, :, :]                           # weight dt_j
+    y_intra = jnp.einsum("bcqjh,bcjhp->bcqhp", M, xc)
+
+    # ---- chunk-end states from local inputs
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtc               # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, hpg, axis=3)                             # (B,nc,Q,H,N)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w_end, Bh, xc)
+
+    # ---- inter-chunk recurrence over nc (sequential scan)
+    decay_chunk = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+    if h_init is None:
+        h_init = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        dc, st = inp                                             # (B,H), (B,H,P,N)
+        h_out = h                                                # state ENTERING chunk
+        h = h * dc[:, :, None, None] + st
+        return h, h_out
+
+    h_final, h_entry = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(decay_chunk, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_entry = jnp.moveaxis(h_entry, 0, 1)                        # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution: C_i * exp(cum_i) * h_entry
+    Ch = jnp.repeat(Cc, hpg, axis=3)                             # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, h_entry, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)[:, :S_orig]
+    return y, h_final
+
+
+def mamba_forward(p: dict, u: jax.Array, cfg: ModelConfig,
+                  conv_cache=None, ssd_state=None, return_state: bool = False):
+    """Full-sequence Mamba2 block. u: (B,S,d). Returns y (B,S,d)
+    [+ ((conv_x, conv_bc), ssd_state) if return_state]."""
+    s = cfg.ssm
+    di, G, N, H, P = cfg.d_inner, s.n_groups, s.state, cfg.ssm_heads, s.head_dim
+    Bb, S, _ = u.shape
+    cx, cbc = conv_cache if conv_cache is not None else (None, None)
+    z, x, BC, dt, new_cx, new_cbc = _project(p, u, cfg, cx, cbc)
+    B_, C_ = jnp.split(BC, 2, axis=-1)
+
+    xf = x.astype(jnp.float32).reshape(Bb, S, H, P)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    Bf = B_.astype(jnp.float32).reshape(Bb, S, G, N)
+    Cf = C_.astype(jnp.float32).reshape(Bb, S, G, N)
+
+    y, h_final = ssd_chunked(xf, dtf, a, Bf, Cf, cfg, h_init=ssd_state)
+    y = y + xf * p["D"][None, None, :, None]
+    y = y.reshape(Bb, S, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, ((new_cx, new_cbc), h_final)
+    return out
+
+
+def mamba_decode(p: dict, u: jax.Array, conv_cache, ssd_state, cfg: ModelConfig):
+    """One-token recurrent step. u: (B,1,d);
+    conv_cache: ((B,W-1,di), (B,W-1,2GN)); ssd_state: (B,H,P,N) fp32.
+    Returns (y (B,1,d), conv_cache, ssd_state)."""
+    s = cfg.ssm
+    di, G, N, H, P = cfg.d_inner, s.n_groups, s.state, cfg.ssm_heads, s.head_dim
+    Bb = u.shape[0]
+    cx, cbc = conv_cache
+    z, x, BC, dt, new_cx, new_cbc = _project(p, u, cfg, cx, cbc)
+    B_, C_ = jnp.split(BC, 2, axis=-1)
+
+    xf = x.astype(jnp.float32).reshape(Bb, H, P)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).reshape(Bb, H)
+    a = -jnp.exp(p["A_log"])
+    Bf = B_.astype(jnp.float32).reshape(Bb, G, N)
+    Cf = C_.astype(jnp.float32).reshape(Bb, G, N)
+    hpg = H // G
+    Bh = jnp.repeat(Bf, hpg, axis=1)                             # (B,H,N)
+    Ch = jnp.repeat(Cf, hpg, axis=1)
+
+    decay = jnp.exp(dtf * a[None, :])                            # (B,H)
+    h = ssd_state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dtf, xf, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + xf * p["D"][None, :, None]
+    y = y.reshape(Bb, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"], (new_cx, new_cbc), h

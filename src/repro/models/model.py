@@ -1,0 +1,75 @@
+"""Unified Model facade: family dispatch + the three step functions every
+layer above (training, serving engine, dry-run) builds on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    dtype: Any
+    init: Callable            # rng -> params
+    train_logits: Callable    # (params, batch) -> (logits, aux)
+    prefill: Callable         # (params, batch[, pad_to]) -> (logits, cache)
+    decode: Callable          # (params, cache, batch) -> (logits, cache)
+    cache_spec: Callable      # (batch_size, max_len) -> pytree of SDS
+    init_cache: Callable      # (batch_size, max_len) -> pytree of zeros
+
+    def param_spec(self, rng=None):
+        """ShapeDtypeStructs of params without allocation."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, rng)
+
+
+_FAMILY_MODULES = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "ssm": ssm, "hybrid": hybrid, "audio": encdec,
+}
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.float32, kv_dtype=None) -> Model:
+    """kv_dtype=jnp.int8 enables the quantized KV cache (transformer
+    families only — SSM state stays fp32)."""
+    mod = _FAMILY_MODULES[cfg.family]
+    if kv_dtype is not None and mod is not transformer:
+        raise NotImplementedError("int8-KV applies to transformer families")
+    ckw = {"kv_dtype": kv_dtype} if kv_dtype is not None else {}
+    return Model(
+        cfg=cfg,
+        dtype=dtype,
+        init=lambda rng: mod.init_params(rng, cfg, dtype),
+        train_logits=lambda p, b: mod.train_logits(p, b, cfg, dtype),
+        prefill=lambda p, b, pad_to=0: mod.prefill(p, b, cfg, dtype, pad_to=pad_to),
+        decode=lambda p, c, b: mod.decode_step(p, c, b, cfg, dtype),
+        cache_spec=lambda bs, ml: mod.cache_spec(cfg, bs, ml, dtype, **ckw),
+        init_cache=lambda bs, ml: mod.init_cache(cfg, bs, ml, dtype, **ckw),
+    )
+
+
+def make_batch_specs(cfg: ModelConfig, shape_kind: str, batch: int, seq: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct batch stand-ins for a shape kind (dry-run)."""
+    i32 = jnp.int32
+    b: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape_kind == "train":
+        b["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        b["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    elif shape_kind == "prefill":
+        b["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    elif shape_kind == "decode":
+        b["tokens"] = jax.ShapeDtypeStruct((batch, 1), i32)
+        b["positions"] = jax.ShapeDtypeStruct((batch,), i32)
+    else:
+        raise ValueError(shape_kind)
+    if cfg.is_encdec and shape_kind in ("train", "prefill"):
+        b["frames"] = jax.ShapeDtypeStruct((batch, cfg.src_frames, cfg.d_model), dtype)
+    return b

@@ -1,0 +1,138 @@
+"""Top-k MoE with GROUPED sort-based capacity dispatch (GShard-style token
+dropping, groups = batch rows).
+
+Dispatch is computed independently per group so that, with groups sharded
+over the 'data' mesh axis, the argsort / rank / gather / scatter-add all
+stay DEVICE-LOCAL — a single global sort over B*S*k assignments forces
+GSPMD to replicate the whole dispatched tensor and all-reduce it
+(~64 GB f32 per layer at prefill_32k; EXPERIMENTS §Perf iter 5).
+
+FLOPs scale with top_k * tokens * capacity_factor (not n_experts * tokens),
+so compiled-HLO "useful FLOP" ratios stay honest. Expert weights carry a
+leading E axis -> EP shards experts over the 'model' mesh axis when E
+divides it, falling back to TP-within-expert (f over 'model') otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.partition import hint
+from repro.models.layers import normal_init
+
+
+def _pin_groups(t: jax.Array) -> jax.Array:
+    """Keep the group axis on 'data' through the dispatch pipeline: without
+    explicit constraints GSPMD loses the batch sharding at the per-group
+    gathers and replicates the full (G, E, C, d) dispatch tensors."""
+    return hint(t, *(("data",) + (None,) * (t.ndim - 1)))
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_expert, m.n_experts
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = f ** -0.5 / (2 * max(cfg.n_layers, 1)) ** 0.5
+    return {
+        "router": normal_init(ks[0], (d, E), s_in, jnp.float32),
+        "w_gate": normal_init(ks[1], (E, d, f), s_in, dtype),
+        "w_up": normal_init(ks[2], (E, d, f), s_in, dtype),
+        "w_down": normal_init(ks[3], (E, f, d), s_out, dtype),
+    }
+
+
+def capacity(group_tokens: int, cfg: ModelConfig) -> int:
+    """Per-GROUP expert capacity (a group = one batch row)."""
+    m = cfg.moe
+    c = int(m.top_k * group_tokens * m.capacity_factor / m.n_experts)
+    return max(8, ((c + 7) // 8) * 8)          # pad to multiple of 8
+
+
+def _topk_iterative(probs: jax.Array, k: int):
+    """top_k via k masked argmaxes. lax.top_k lowers to a sort custom-call
+    that GSPMD replicates (it all-gathers the batch dims — §Perf iter 7);
+    argmax/one-hot partition cleanly, and k << E makes this cheap."""
+    vals, idxs = [], []
+    cur = probs
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.take_along_axis(cur, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        hit = jax.nn.one_hot(i, probs.shape[-1], dtype=jnp.bool_)
+        cur = jnp.where(hit, -jnp.inf, cur)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _dispatch_group(gate_vals, eids, E: int, C: int):
+    """Per-group assignment -> slots. gate_vals/eids: (T, k).
+    Returns (slot_tok (E*C,), slot_gate (E*C,)) — all local ops."""
+    T, k = eids.shape
+    A = T * k
+    flat_eid = eids.reshape(A)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_gate = gate_vals.reshape(A)
+    order = jnp.argsort(flat_eid, stable=True)
+    s_eid, s_tok, s_gate = flat_eid[order], flat_tok[order], flat_gate[order]
+
+    # rank within each expert run: arange - index-of-run-start
+    ar = jnp.arange(A, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.array([True]), s_eid[1:] != s_eid[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_start, ar, 0))
+    rank = ar - run_start                                        # (A,)
+
+    keep = rank < C
+    slot = jnp.where(keep, s_eid * C + rank, E * C)              # E*C = trash
+    slot_tok = jnp.zeros(E * C + 1, jnp.int32).at[slot].set(s_tok, mode="drop")
+    slot_gate = jnp.zeros(E * C + 1, jnp.float32).at[slot].set(
+        jnp.where(keep, s_gate, 0.0), mode="drop")
+    return slot_tok[:-1], slot_gate[:-1]
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss). Groups = batch rows; per group:
+    top-k route -> sort by expert -> positional rank -> drop beyond the
+    per-group capacity -> gather (E, C, d) -> expert MLP -> weighted
+    scatter-add back."""
+    m = cfg.moe
+    G, T, d = x.shape                       # groups = batch rows
+    E, k = m.n_experts, m.top_k
+    C = capacity(T, cfg)
+
+    logits = x.astype(jnp.float32) @ p["router"]                 # (G, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = _topk_iterative(probs, k)                  # (G, T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style): reduce PER GROUP first so the
+    # cross-device reduction is (G, E)-sized, not (G, T, E)-sized
+    me_g = _pin_groups(probs.mean(axis=1))                       # (G, E)
+    ce_g = _pin_groups(jax.vmap(
+        lambda e: jnp.zeros(E).at[e.reshape(-1)].add(1.0))(eids)) / (T * k)
+    aux = m.router_aux_coef * E * jnp.sum(me_g.mean(0) * ce_g.mean(0))
+
+    slot_tok, slot_gate = jax.vmap(
+        lambda g, e: _dispatch_group(g, e, E, C))(gate_vals, eids)
+    # (G, E*C) each; gathers/scatters below vmap over the group axis
+    slot_tok = _pin_groups(slot_tok)
+    slot_gate = _pin_groups(slot_gate)
+
+    xe = jax.vmap(lambda xt, st: jnp.take(xt, st, axis=0))(
+        x, slot_tok).reshape(G, E, C, d)
+    xe = _pin_groups(xe)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    # low-precision partials: with w_down f-sharded (TP-within-expert) the
+    # partial products are all-reduced — bf16 partials halve that wire cost
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"],
+                    preferred_element_type=h.dtype)              # (G, E, C, d)
+    ye = _pin_groups(ye)
+
+    yw = ye.reshape(G, E * C, d) * slot_gate[..., None].astype(ye.dtype)
+    out = jax.vmap(lambda y, st: jnp.zeros((T, d), y.dtype).at[st].add(y))(
+        yw, slot_tok)
+    out = _pin_groups(out)
+    return out, aux

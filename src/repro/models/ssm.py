@@ -1,0 +1,87 @@
+"""Pure-SSM decoder (mamba2-780m): stack of Mamba2 blocks, no attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import embed_tokens, init_embed, lm_logits, rms_norm
+from repro.models.mamba2 import init_mamba, mamba_decode, mamba_forward
+
+
+def init_layer(key, cfg: ModelConfig, dtype) -> dict:
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "mamba": init_mamba(key, cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, dtype) -> dict:
+    ke, kl = jax.random.split(key)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(
+        jax.random.split(kl, cfg.n_layers))
+    p = init_embed(ke, cfg, dtype)
+    p["layers"] = layers
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _train_block(h, lp, cfg: ModelConfig):
+    y = mamba_forward(lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps), cfg)
+    return h + y, jnp.float32(0.0)
+
+
+def train_logits(params, batch, cfg: ModelConfig, dtype):
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    blk = jax.checkpoint(functools.partial(_train_block, cfg=cfg))
+    h, auxs = jax.lax.scan(blk, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), jnp.sum(auxs)
+
+
+def prefill(params, batch, cfg: ModelConfig, dtype, pad_to: int = 0):
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+
+    def blk(h, lp):
+        y, ((cx, cbc), ssd) = mamba_forward(
+            lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+            return_state=True)
+        return h + y, (cx, cbc, ssd)
+
+    h, (cxs, cbcs, ssds) = jax.lax.scan(blk, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h[:, -1:], cfg), \
+        {"conv_x": cxs, "conv_bc": cbcs, "ssd": ssds}
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, dtype):
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+
+    def blk(h, xs):
+        lp, cx, cbc, ssd = xs
+        y, (cx, cbc), ssd = mamba_decode(
+            lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps), (cx, cbc), ssd, cfg)
+        return h + y, (cx, cbc, ssd)
+
+    h, (cxs, cbcs, ssds) = jax.lax.scan(
+        blk, h, (params["layers"], cache["conv_x"], cache["conv_bc"], cache["ssd"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), \
+        {"conv_x": cxs, "conv_bc": cbcs, "ssd": ssds}
+
+
+def cache_spec(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    s = cfg.ssm
+    L, W = cfg.n_layers, s.conv_width
+    return {
+        "conv_x": jax.ShapeDtypeStruct((L, batch_size, W - 1, cfg.d_inner), dtype),
+        "conv_bc": jax.ShapeDtypeStruct(
+            (L, batch_size, W - 1, 2 * s.n_groups * s.state), dtype),
+        "ssd": jax.ShapeDtypeStruct(
+            (L, batch_size, cfg.ssm_heads, s.head_dim, s.state), jnp.float32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch_size, max_len, dtype))

@@ -1,0 +1,154 @@
+"""Decoder-only transformer assembly (dense / MoE / early-fusion VLM).
+
+Layer params are stacked along a leading L axis and the stack runs under
+``lax.scan`` (compact HLO for the 512-device dry-run). Training blocks are
+wrapped in ``jax.checkpoint`` (full per-layer remat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import embed_tokens, init_embed, init_mlp, apply_mlp, \
+    lm_logits, rms_norm
+
+
+def init_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attn(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype) -> dict:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    p = init_embed(ke, cfg, dtype)
+    p["layers"] = layers
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _ffn(lp, h, cfg: ModelConfig):
+    if cfg.is_moe:
+        from repro.models import moe_ep
+        if moe_ep.enabled() and moe_ep.ep_applicable(cfg, h.shape):
+            y, aux = moe_ep.apply_moe_ep(lp["moe"], h, cfg)
+        else:
+            y, aux = moe_mod.apply_moe(lp["moe"], h, cfg)
+    else:
+        y, aux = apply_mlp(lp["mlp"], h, cfg), jnp.float32(0.0)
+    return y, aux
+
+
+def _train_block(h, lp, cfg: ModelConfig):
+    y, _, _ = attn.attn_forward(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg)
+    h = h + y
+    y, aux = _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+    return h + y, aux
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, dtype):
+    """Token ids -> final hidden states (training path, rematted scan)."""
+    h = embed_tokens(params, tokens, cfg).astype(dtype)
+    blk = jax.checkpoint(functools.partial(_train_block, cfg=cfg))
+    h, auxs = jax.lax.scan(blk, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, jnp.sum(auxs)
+
+
+def train_logits(params, batch, cfg: ModelConfig, dtype):
+    h, aux = forward_hidden(params, batch["tokens"], cfg, dtype)
+    return lm_logits(params, h, cfg), aux
+
+
+def _prefill_block(h, lp, cfg: ModelConfig, pad_to: int):
+    y, k, v = attn.attn_forward(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg)
+    h = h + y
+    y, _ = _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+    if pad_to > k.shape[1]:
+        pad = [(0, 0), (0, pad_to - k.shape[1]), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    return h + y, (k, v)
+
+
+def prefill(params, batch, cfg: ModelConfig, dtype, pad_to: int = 0):
+    """Returns (logits_last, cache). cache: {"k","v"}: (L,B,Smax,K,hd)."""
+    tokens = batch["tokens"]
+    h = embed_tokens(params, tokens, cfg).astype(dtype)
+    blk = functools.partial(_prefill_block, cfg=cfg, pad_to=pad_to)
+    h, (ks, vs) = jax.lax.scan(blk, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h[:, -1:], cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+def _decode_block(carry, xs, cfg: ModelConfig):
+    h, positions = carry
+    if len(xs) == 5:                        # int8-KV: per-head scales ride along
+        lp, ck, cv, ks, vs = xs
+    else:
+        (lp, ck, cv), ks, vs = xs, None, None
+    y, ck, cv = attn.attn_decode(
+        lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), ck, cv, positions,
+        cfg, k_scale=ks, v_scale=vs)
+    h = h + y
+    y, _ = _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+    return (h + y, positions), (ck, cv)
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, dtype):
+    """One-token decode. batch: {"tokens": (B,1), "positions": (B,)}.
+    cache: {"k","v"} (+ {"k_scale","v_scale"} when the KV pool is int8).
+    Returns (logits, new_cache)."""
+    h = embed_tokens(params, batch["tokens"], cfg).astype(dtype)
+    blk = functools.partial(_decode_block, cfg=cfg)
+    quantized = "k_scale" in cache
+    xs = ((params["layers"], cache["k"], cache["v"], cache["k_scale"],
+           cache["v_scale"]) if quantized
+          else (params["layers"], cache["k"], cache["v"]))
+    (h, _), (ks, vs) = jax.lax.scan(blk, (h, batch["positions"]), xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    new_cache = {"k": ks, "v": vs}
+    if quantized:
+        new_cache["k_scale"] = cache["k_scale"]
+        new_cache["v_scale"] = cache["v_scale"]
+    return lm_logits(params, h, cfg), new_cache
+
+
+def cache_spec(cfg: ModelConfig, batch_size: int, max_len: int, dtype,
+               kv_dtype=None):
+    """ShapeDtypeStructs for the decode cache. kv_dtype=jnp.int8 adds
+    per-(layer, seq, head) scale tensors (int8-KV quantization)."""
+    kv_dtype = kv_dtype or dtype
+    shp = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+    spec = {"k": jax.ShapeDtypeStruct(shp, kv_dtype),
+            "v": jax.ShapeDtypeStruct(shp, kv_dtype)}
+    if kv_dtype == jnp.int8:
+        sshp = (cfg.n_layers, batch_size, cfg.n_kv_heads)
+        spec["k_scale"] = jax.ShapeDtypeStruct(sshp, jnp.float32)
+        spec["v_scale"] = jax.ShapeDtypeStruct(sshp, jnp.float32)
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype,
+               kv_dtype=None):
+    spec = cache_spec(cfg, batch_size, max_len, dtype, kv_dtype)
+    out = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    for k in ("k_scale", "v_scale"):
+        if k in out:
+            out[k] = out[k] + 1.0 / 16.0      # sane default scale
+    return out

@@ -1,0 +1,18 @@
+"""Real JAX inference engine: paged KV cache + block allocator, radix-tree
+prefix cache over pages, continuous-batching scheduler whose *pending queue*
+is exactly what SkyLB's SP-P probes (§3.3), OpenAI-ish request types, and an
+in-process multi-replica router that runs the paper's policies against real
+engines.
+"""
+from repro.serving.blocks import BlockAllocator
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.radix import PagedRadixCache
+from repro.serving.request import (FinishReason, GenRequest, GenResult,
+                                   SamplingParams)
+from repro.serving.router import InProcessRouter
+
+__all__ = [
+    "BlockAllocator", "Engine", "EngineConfig", "PagedRadixCache",
+    "FinishReason", "GenRequest", "GenResult", "SamplingParams",
+    "InProcessRouter",
+]

@@ -1,0 +1,188 @@
+"""Jitted model steps for the serving engine (transformer family: dense /
+MoE / early-fusion VLM).
+
+Differs from repro.models.transformer's dense-cache path: the KV cache here
+is a PAGED pool shared by all sequences —
+
+    k_pages / v_pages: (L, P, page_size, K, hd)
+
+with per-sequence block tables (vLLM layout: one page id list per sequence,
+shared across layers; the L axis of the pool is carried by the layer scan).
+
+Prefill runs one request at a time (SGLang-style) over the uncached suffix,
+attending to the radix-cached prefix gathered from its pages; decode runs
+the whole continuous batch, writing each new token's K/V into its page slot
+and attending over block-table-gathered pages — the jnp gather here is the
+oracle path; on TPU `repro.kernels.ops.paged_decode` swaps in the Pallas
+kernel (same signature).
+
+All functions are pure and jitted with donated pools; the engine holds the
+pools and threads them through.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import apply_mlp, embed_tokens, lm_logits, rms_norm
+from repro.kernels import ops as kops
+
+
+def kv_pool_spec(cfg: ModelConfig, n_pages: int, page_size: int,
+                 dtype=jnp.bfloat16):
+    shp = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return (jax.ShapeDtypeStruct(shp, dtype),
+            jax.ShapeDtypeStruct(shp, dtype))
+
+
+def init_kv_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                 dtype=jnp.bfloat16):
+    ks, vs = kv_pool_spec(cfg, n_pages, page_size, dtype)
+    return jnp.zeros(ks.shape, ks.dtype), jnp.zeros(vs.shape, vs.dtype)
+
+
+def _ffn(lp, h, cfg: ModelConfig):
+    if cfg.is_moe:
+        y, _ = moe_mod.apply_moe(lp["moe"], h, cfg)
+        return y
+    return apply_mlp(lp["mlp"], h, cfg)
+
+
+# ----------------------------------------------------------------- prefill
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnums=(3, 4))
+def prefill_step(params: Any, tokens: jax.Array, new_pages: jax.Array,
+                 k_pages: jax.Array, v_pages: jax.Array,
+                 past_pages: jax.Array, past_len: jax.Array,
+                 new_len: jax.Array, *, cfg: ModelConfig, page_size: int):
+    """One-request prefill over the uncached suffix.
+
+    tokens:     (1, S_pad)   uncached suffix, right-padded
+    new_pages:  (NP,) int32  page ids to write the suffix K/V into (padded
+                             with a scratch page id; suffix starts at slot 0
+                             of new_pages[0] — the engine never splits a
+                             cached prefix mid-page)
+    past_pages: (CP,) int32  radix-cached prefix pages (padded w/ scratch)
+    past_len:   ()   int32   cached prefix token count
+    new_len:    ()   int32   real suffix length (<= S_pad)
+    Returns (logits_last (1, vocab), k_pages, v_pages).
+    """
+    S = tokens.shape[1]
+    h = embed_tokens(params, tokens, cfg)          # compute in param dtype
+    positions = past_len + jnp.arange(S, dtype=jnp.int32)[None, :]   # (1,S)
+
+    def write_pages(pool_l, new_kv):
+        # new_kv: (1, S, K, hd) -> rows i go to page new_pages[i // ps], slot i % ps
+        ps = page_size
+        n_np = new_pages.shape[0]
+        dst = pool_l[new_pages]                          # (NP, ps, K, hd)
+        dst = dst.reshape(n_np * ps, *pool_l.shape[2:])
+        dst = jax.lax.dynamic_update_slice_in_dim(dst, new_kv[0], 0, axis=0)
+        dst = dst.reshape(n_np, ps, *pool_l.shape[2:])
+        return pool_l.at[new_pages].set(dst)
+
+    def blk(carry, xs):
+        h, kp, vp = carry
+        lp, li = xs
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = attn._project_q(lp["attn"], x, cfg, positions, rope=True)
+        k_new, v_new = attn._project_kv(lp["attn"], x, cfg, positions, rope=True)
+        k_new = k_new.astype(kp.dtype)
+        v_new = v_new.astype(vp.dtype)
+        # past K/V gathered from the radix-cached pages
+        k_past = kp[li][past_pages].reshape(1, -1, cfg.n_kv_heads, cfg.hd)
+        v_past = vp[li][past_pages].reshape(1, -1, cfg.n_kv_heads, cfg.hd)
+        T_past = k_past.shape[1]
+        k_all = jnp.concatenate([k_past, k_new], axis=1)
+        v_all = jnp.concatenate([v_past, v_new], axis=1)
+        # mask: past cols < past_len valid for all rows; new cols causal & < new_len
+        qpos = jnp.arange(S, dtype=jnp.int32)
+        past_cols = jnp.arange(T_past, dtype=jnp.int32)
+        m_past = jnp.broadcast_to((past_cols < past_len)[None, :], (S, T_past))
+        new_cols = jnp.arange(S, dtype=jnp.int32)
+        m_new = (new_cols[None, :] <= qpos[:, None]) & (new_cols < new_len)[None, :]
+        mask = jnp.concatenate([m_past, m_new], axis=1)[None, None]   # (1,1,S,T)
+        o = attn._sdpa(q, k_all, v_all, mask, cfg)
+        y = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        h = h + y
+        h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        kp = kp.at[li].set(write_pages(kp[li], k_new))
+        vp = vp.at[li].set(write_pages(vp[li], v_new))
+        return (h, kp, vp), None
+
+    L = cfg.n_layers
+    (h, k_pages, v_pages), _ = jax.lax.scan(
+        blk, (h, k_pages, v_pages),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    last = jnp.clip(new_len - 1, 0, S - 1)
+    logits = lm_logits(params, h[:, last][:, None], cfg)[:, 0]
+    return logits, k_pages, v_pages
+
+
+# ------------------------------------------------------------------ decode
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnums=(2, 3))
+def decode_step(params: Any, tokens: jax.Array, k_pages: jax.Array,
+                v_pages: jax.Array, block_tables: jax.Array,
+                seq_lens: jax.Array, *, cfg: ModelConfig, page_size: int):
+    """Continuous-batch decode: one new token per sequence.
+
+    tokens:       (B, 1) int32   last sampled token per sequence
+    block_tables: (B, NPG) int32 page ids (padded with page 0)
+    seq_lens:     (B,) int32     tokens already in cache (new token lands at
+                                 this position); 0 rows are inactive padding
+    Returns (logits (B, vocab), k_pages, v_pages).
+    """
+    B = tokens.shape[0]
+    h = embed_tokens(params, tokens, cfg)          # compute in param dtype
+    positions = seq_lens                                       # (B,)
+    page_ids = block_tables[jnp.arange(B), seq_lens // page_size]
+    offsets = seq_lens % page_size
+
+    def blk(carry, xs):
+        h, kp, vp = carry
+        lp, li = xs
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = attn._project_q(lp["attn"], x, cfg, positions[:, None], rope=True)
+        k_new, v_new = attn._project_kv(lp["attn"], x, cfg,
+                                        positions[:, None], rope=True)
+        kp = kp.at[li, page_ids, offsets].set(k_new[:, 0].astype(kp.dtype))
+        vp = vp.at[li, page_ids, offsets].set(v_new[:, 0].astype(vp.dtype))
+        o = kops.paged_decode(q[:, 0], kp[li], vp[li], block_tables,
+                              seq_lens + 1)
+        y = jnp.einsum("bhk,hkd->bd", o, lp["attn"]["wo"])[:, None]
+        h = h + y
+        h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return (h, kp, vp), None
+
+    L = cfg.n_layers
+    (h, k_pages, v_pages), _ = jax.lax.scan(
+        blk, (h, k_pages, v_pages),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h, cfg)[:, 0]
+    return logits, k_pages, v_pages
+
+
+# ---------------------------------------------------------------- sampling
+
+@functools.partial(jax.jit, static_argnames=("temperature", "top_k"))
+def sample(logits: jax.Array, key: jax.Array, *, temperature: float,
+           top_k: int) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

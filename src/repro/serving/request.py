@@ -1,0 +1,51 @@
+"""Request/response types for the serving engine (OpenAI-completions-ish,
+token-level: the LB layer and the engine both speak token ids)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import time
+from typing import Optional
+
+_rid = itertools.count()
+
+
+class FinishReason(str, enum.Enum):
+    LENGTH = "length"
+    STOP = "stop"
+    ABORT = "abort"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    max_new_tokens: int = 64
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => disabled
+    stop_token: Optional[int] = None  # eos
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt_tokens: tuple
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid))
+    user_id: str = ""
+    session_key: str = ""
+    arrival_s: float = dataclasses.field(default_factory=time.monotonic)
+    # filled by the engine:
+    cached_tokens: int = 0
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class GenResult:
+    rid: int
+    output_tokens: tuple
+    finish_reason: FinishReason
+    cached_tokens: int
+    prompt_len: int
+    ttft_s: Optional[float] = None
+    e2e_s: Optional[float] = None

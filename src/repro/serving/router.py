@@ -1,0 +1,124 @@
+"""In-process SkyLB router over REAL engines: the same Policy / eligibility
+objects the simulator uses (repro.core.policies), but the TargetViews are
+probed from live Engine instances and routing drives actual JAX prefill /
+decode steps. This is the two-layer system with the network collapsed to
+zero latency — used by tests and the serve_multiregion example to show the
+LB logic and the engine agree on SP-P semantics end-to-end.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+from repro.core.policies import (SP_P, Policy, TargetView, eligible)
+from repro.serving.engine import Engine
+from repro.serving.request import GenRequest, GenResult
+
+
+class _RegionLB:
+    def __init__(self, region: str, policy: Policy, pushing: str = SP_P,
+                 tau: int = 4):
+        self.region = region
+        self.policy = policy
+        self.pushing = pushing
+        self.tau = tau
+        self.engines: dict[str, Engine] = {}
+        self.queue: deque[GenRequest] = deque()
+        self.forwarded_out = 0
+
+    def add_engine(self, eid: str, engine: Engine) -> None:
+        self.engines[eid] = engine
+        self.policy.on_target_added(eid)
+
+    def views(self) -> list[TargetView]:
+        return [TargetView(id=eid, outstanding=e.outstanding(),
+                           pending=e.pending_count(), available=e.available())
+                for eid, e in self.engines.items()]
+
+    def n_avail(self) -> int:
+        return sum(1 for e in self.engines.values() if e.available())
+
+    def as_remote_view(self) -> TargetView:
+        return TargetView(id=self.region, n_avail_replicas=self.n_avail(),
+                          queue_len=len(self.queue), available=True)
+
+
+class InProcessRouter:
+    """Two-layer SkyLB over in-process engines (one LB per region)."""
+
+    def __init__(self, remote_policy: Optional[Policy] = None,
+                 pushing: str = SP_P, cross_region: bool = True):
+        self.lbs: dict[str, _RegionLB] = {}
+        self.remote_policy = remote_policy
+        self.pushing = pushing
+        self.cross_region = cross_region
+
+    def add_region(self, region: str, policy: Policy) -> _RegionLB:
+        lb = _RegionLB(region, policy, self.pushing)
+        self.lbs[region] = lb
+        if self.remote_policy is not None:
+            self.remote_policy.on_target_added(region)
+        return lb
+
+    # ------------------------------------------------------------ routing
+    def submit(self, region: str, req: GenRequest) -> None:
+        self.lbs[region].queue.append(req)
+
+    def _dispatch_lb(self, lb: _RegionLB) -> bool:
+        """Try to move lb's head-of-queue one hop. Returns True if moved."""
+        if not lb.queue:
+            return False
+        req = lb.queue[0]
+        ok = eligible(lb.views(), lb.pushing, tau=self.tau_for(lb))
+        if ok:
+            eid = lb.policy.select(req, ok) or ok[0].id
+            lb.queue.popleft()
+            lb.policy.on_routed(req, eid)
+            lb.engines[eid].submit(req)
+            return True
+        if self.cross_region and self.remote_policy is not None:
+            remotes = [x.as_remote_view() for r, x in self.lbs.items()
+                       if r != lb.region]
+            ok_r = eligible(remotes, lb.pushing, tau=self.tau_for(lb))
+            if ok_r:
+                rid = self.remote_policy.select(req, ok_r)
+                if rid is not None:
+                    lb.queue.popleft()
+                    self.remote_policy.on_routed(req, rid)
+                    lb.forwarded_out += 1
+                    self.lbs[rid].queue.append(req)
+                    return True
+        return False
+
+    def tau_for(self, lb: _RegionLB) -> int:
+        return lb.tau
+
+    # ------------------------------------------------------------ driving
+    def step(self) -> int:
+        """One global tick: route queued requests, then step every engine."""
+        for lb in self.lbs.values():
+            while self._dispatch_lb(lb):
+                pass
+        done = 0
+        for lb in self.lbs.values():
+            for e in lb.engines.values():
+                done += e.step()
+        return done
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            self.step()
+            if self.idle():
+                break
+
+    def idle(self) -> bool:
+        return all(not lb.queue and all(
+            not e.pending and not e.running for e in lb.engines.values())
+            for lb in self.lbs.values())
+
+    def results(self) -> dict[int, GenResult]:
+        out: dict[int, GenResult] = {}
+        for lb in self.lbs.values():
+            for e in lb.engines.values():
+                out.update(e.results)
+        return out

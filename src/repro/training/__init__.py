@@ -1,0 +1,12 @@
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state, \
+    lr_schedule
+from repro.training.train_step import (
+    cross_entropy, make_loss_fn, make_train_state, make_train_step,
+    train_state_spec,
+)
+
+__all__ = [
+    "OptConfig", "adamw_update", "init_opt_state", "lr_schedule",
+    "cross_entropy", "make_loss_fn", "make_train_state", "make_train_step",
+    "train_state_spec",
+]

@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — tests
+run on the single real CPU device; only launch/dryrun.py (its own process)
+asks for 512 placeholder devices."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def qwen_reduced():
+    from repro.configs import get_config
+    return get_config("qwen3-0.6b").reduced()
+
+
+@pytest.fixture(scope="session")
+def qwen_model_params(qwen_reduced):
+    from repro.models import build_model
+    model = build_model(qwen_reduced, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params

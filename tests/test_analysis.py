@@ -1,0 +1,113 @@
+"""Roofline analysis: FLOP/byte formulas, HLO collective parsing, term
+selection."""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.flops import model_flops, step_bytes, step_flops
+from repro.analysis.hlo_parse import collective_stats
+from repro.analysis.roofline import compute_roofline
+from repro.configs import SHAPES, get_config
+
+
+def test_step_flops_positive_all_cells():
+    for arch in ("qwen3-0.6b", "granite-moe-3b-a800m", "mamba2-780m",
+                 "zamba2-7b", "whisper-medium", "chameleon-34b"):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            f = step_flops(cfg, shape)
+            b = step_bytes(cfg, shape)
+            m = model_flops(cfg, shape)
+            assert f["total"] > 0 and b["total"] > 0 and m > 0
+
+
+def test_train_is_4x_forward():
+    cfg = get_config("qwen3-0.6b")
+    f = step_flops(cfg, SHAPES["train_4k"])
+    assert f["total"] == pytest.approx(4 * f["forward"])
+
+
+def test_moe_useful_flops_below_dense_equivalent():
+    cfg = get_config("granite-moe-3b-a800m")
+    assert cfg.active_param_count() < cfg.param_count()
+    m_act = model_flops(cfg, SHAPES["train_4k"])
+    assert m_act == pytest.approx(6 * cfg.active_param_count()
+                                  * 4096 * 256)
+
+
+def test_decode_flops_scale_with_batch_not_seq():
+    cfg = get_config("deepseek-7b")
+    d32 = step_flops(cfg, SHAPES["decode_32k"])["total"]
+    p32 = step_flops(cfg, SHAPES["prefill_32k"])["total"]
+    assert d32 < p32 / 100        # one token vs 32k tokens
+
+
+HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,256] get-tuple-element(%p), index=1
+  %ar = f32[128,256] all-reduce(%x), replica_groups=[8,16]<=[128], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256] parameter(0)
+  %ag = f32[256,256] all-gather(%x), replica_groups=[16,8]<=[128], dimensions={0}
+  %init = (s32[], f32[128,256]) tuple-thing
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_collective_parse_with_while_multiplier():
+    stats = collective_stats(HLO)
+    # all-reduce inside the while body runs 24 times
+    ar = stats["per_kind"]["all-reduce"]
+    assert ar["count"] == 24
+    assert ar["operand_bytes"] == 24 * 128 * 256 * 4
+    # all-gather counted once; operand = result / group_size
+    ag = stats["per_kind"]["all-gather"]
+    assert ag["count"] == 1
+    assert ag["operand_bytes"] == 256 * 256 * 4 // 8
+    assert stats["count"] == 25
+
+
+def test_roofline_bottleneck_selection():
+    cfg = get_config("qwen3-0.6b")
+    shape = SHAPES["decode_32k"]
+    # huge collective bytes => collective-bound
+    r = compute_roofline(cfg, shape, "m", 256,
+                         collective_bytes_per_device=1e12)
+    assert r.bottleneck == "collective"
+    r2 = compute_roofline(cfg, shape, "m", 256,
+                          collective_bytes_per_device=0.0)
+    assert r2.bottleneck in ("compute", "memory")
+    assert r2.step_time_s == max(r2.compute_s, r2.memory_s)
+    assert 0 < r2.roofline_fraction <= 1.05
+
+
+def test_decode_is_memory_bound():
+    """Sanity: single-token decode with a 32k KV cache must be memory-bound
+    (the operational regime SkyLB's replicas live in)."""
+    cfg = get_config("deepseek-7b")
+    r = compute_roofline(cfg, SHAPES["decode_32k"], "m", 256, 0.0)
+    assert r.bottleneck == "memory"

@@ -1,0 +1,114 @@
+"""BlockAllocator + PagedRadixCache invariants (unit + hypothesis)."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.blocks import BlockAllocator
+from repro.serving.radix import PagedRadixCache
+
+
+def test_alloc_free_roundtrip():
+    a = BlockAllocator(8)
+    pages = a.alloc(5)
+    assert len(set(pages)) == 5 and a.free_pages == 3
+    a.free_all(pages)
+    assert a.free_pages == 8
+
+
+def test_alloc_overflow_raises():
+    a = BlockAllocator(4)
+    a.alloc(3)
+    with pytest.raises(MemoryError):
+        a.alloc(2)
+
+
+def test_refcount_sharing():
+    a = BlockAllocator(4)
+    (p,) = a.alloc(1)
+    a.incref(p)
+    a.decref(p)
+    assert a.free_pages == 3        # still held
+    a.decref(p)
+    assert a.free_pages == 4
+
+
+def test_radix_match_insert_page_granularity():
+    a = BlockAllocator(16)
+    r = PagedRadixCache(a, page_size=4)
+    toks = tuple(range(10))                 # 2 full pages + 2 tail tokens
+    pages = a.alloc(3)
+    claimed = r.insert(toks, pages)
+    assert claimed == 2                     # only full pages enter the tree
+    n, got = r.match(toks)
+    assert n == 8 and got == pages[:2]
+    # partial-page prefix matches nothing
+    assert r.match(tuple(range(3)))[0] == 0
+
+
+def test_radix_dedup_keeps_first_copy():
+    a = BlockAllocator(16)
+    r = PagedRadixCache(a, page_size=4)
+    toks = tuple(range(8))
+    p1 = a.alloc(2)
+    p2 = a.alloc(2)
+    assert r.insert(toks, p1) == 2
+    assert r.insert(toks, p2) == 0          # duplicate: not claimed
+    assert r.match(toks)[1] == p1
+
+
+def test_radix_evict_lru_refcount1_only():
+    a = BlockAllocator(16)
+    r = PagedRadixCache(a, page_size=4)
+    t1, t2 = tuple(range(4)), tuple(range(100, 104))
+    p1 = a.alloc(1)
+    p2 = a.alloc(1)
+    r.insert(t1, p1)
+    r.insert(t2, p2)
+    a.free_all(p1 + p2)                     # only the tree holds them now
+    r.take_refs(p1)                         # simulate a running seq on p1
+    assert r.evict(2) == 1                  # p2 evictable, p1 pinned
+    assert r.match(t1)[0] == 4
+    assert r.match(t2)[0] == 0
+
+
+@given(st.lists(st.lists(st.integers(0, 3), min_size=4, max_size=16),
+                min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_prop_radix_refcount_conservation(seqs):
+    """After inserting sequences and evicting everything evictable, every
+    page is either free or referenced exactly once by the tree."""
+    a = BlockAllocator(64)
+    r = PagedRadixCache(a, page_size=4)
+    for toks in seqs:
+        toks = tuple(toks)
+        n_pages = len(toks) // 4
+        if n_pages == 0 or a.free_pages < n_pages:
+            continue
+        pages = a.alloc(n_pages)
+        claimed = r.insert(toks, pages)
+        a.free_all(pages)           # seq done; tree may still hold some
+        assert claimed <= n_pages
+    assert a.free_pages + r.cached_pages == a.n_pages
+    # a match never returns freed pages
+    for toks in seqs:
+        n, pages = r.match(tuple(toks))
+        for p in pages:
+            assert a.refcount(p) >= 1
+    r.evict(10 ** 9)
+    assert a.free_pages == a.n_pages
+
+
+@given(st.lists(st.integers(0, 2), min_size=8, max_size=24),
+       st.lists(st.integers(0, 2), min_size=8, max_size=24))
+@settings(max_examples=40, deadline=None)
+def test_prop_radix_match_is_prefix(s1, s2):
+    a = BlockAllocator(32)
+    r = PagedRadixCache(a, page_size=4)
+    s1, s2 = tuple(s1), tuple(s2)
+    n_pages = len(s1) // 4
+    pages = a.alloc(n_pages)
+    r.insert(s1, pages)
+    n, got = r.match(s2)
+    assert n % 4 == 0 and n <= min(len(s1) // 4 * 4, len(s2))
+    assert s1[:n] == s2[:n]

@@ -1,0 +1,83 @@
+"""Checkpoint layer: atomicity, retention, dtype fidelity, error paths."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.training.checkpoint import (latest_step, list_steps,
+                                       restore_checkpoint, save_checkpoint)
+
+
+def _state():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip_with_bf16(tmp_path):
+    s = _state()
+    save_checkpoint(str(tmp_path), s, step=7)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s)
+    r, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 7
+    assert r["params"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(s["params"]["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(r["params"]["b"], np.float32),
+        np.asarray(s["params"]["b"], np.float32))
+
+
+def test_retention_prunes_old(tmp_path):
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), _state(), step, keep=2)
+    assert list_steps(str(tmp_path)) == [4, 5]
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_no_tmp_dir_left_behind(tmp_path):
+    save_checkpoint(str(tmp_path), _state(), 1)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), _state())
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), _state(), 1)
+    bad = _state()
+    bad["params"]["w"] = jnp.zeros((9, 9), jnp.float32)
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), _state(), 1)
+    extra = _state()
+    extra["params"]["new"] = jnp.zeros((2,), jnp.float32)
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), extra)
+
+
+def test_crash_mid_save_preserves_previous(tmp_path, monkeypatch):
+    """A failed save must leave the previous checkpoint intact."""
+    save_checkpoint(str(tmp_path), _state(), 1)
+    import repro.training.checkpoint as ck
+
+    def boom(*a, **k):
+        raise RuntimeError("disk died")
+    monkeypatch.setattr(ck.np, "save", boom)
+    with pytest.raises(RuntimeError):
+        save_checkpoint(str(tmp_path), _state(), 2)
+    monkeypatch.undo()
+    assert latest_step(str(tmp_path)) == 1
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        _state())
+    r, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 1

@@ -1,0 +1,87 @@
+"""Elastic re-mesh planning, checkpoint-reshard restore, stragglers."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.elastic import (MeshPlan, StragglerPolicy,
+                                       make_mesh_from_plan, plan_remesh)
+
+
+def test_plan_keeps_model_axis():
+    p = plan_remesh(256 - 13, model_parallel=16)
+    assert p.model == 16
+    assert p.data == (256 - 13) // 16
+    assert p.chips <= 256 - 13
+
+
+def test_plan_falls_back_on_tp():
+    p = plan_remesh(8, model_parallel=16)
+    assert p.model == 8 and p.data == 1
+
+
+def test_plan_multi_pod():
+    p = plan_remesh(512 - 40, model_parallel=16, pods=2)
+    assert p.pods == 2 and p.model == 16
+    assert p.chips <= 512 - 40
+
+
+def test_plan_raises_on_zero():
+    with pytest.raises(ValueError):
+        plan_remesh(0, model_parallel=4)
+
+
+@given(st.integers(1, 4096), st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=100, deadline=None)
+def test_prop_plan_valid(alive, tp):
+    p = plan_remesh(alive, model_parallel=tp)
+    assert 1 <= p.chips <= alive
+    assert p.model <= tp and p.data >= 1
+    assert p.dropped_chips == alive - p.chips
+
+
+def test_make_mesh_single_device():
+    plan = MeshPlan(data=1, model=1)
+    mesh = make_mesh_from_plan(plan)
+    assert mesh.shape == {"data": 1, "model": 1}
+
+
+def test_checkpoint_reshard_restore(tmp_path):
+    """Restore onto a DIFFERENT (trivial) mesh: the elastic path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+    state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4),
+             "b": jnp.ones((4,), jnp.bfloat16)}
+    save_checkpoint(str(tmp_path), state, step=3)
+    mesh = make_mesh_from_plan(MeshPlan(data=1, model=1))
+    sh = {"w": NamedSharding(mesh, P("data", "model")),
+          "b": NamedSharding(mesh, P("model"))}
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    restored, step = restore_checkpoint(str(tmp_path), like, shardings=sh)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+    assert restored["w"].sharding.spec == P("data", "model")
+    assert restored["b"].dtype == jnp.bfloat16
+
+
+def test_straggler_policy():
+    sp = StragglerPolicy(factor=1.5, window=4, min_samples=3)
+    for t in range(4):
+        sp.record("fast1", 1.0)
+        sp.record("fast2", 1.1)
+        sp.record("slow", 2.5)
+    assert sp.should_evict("slow")
+    assert not sp.should_evict("fast1")
+    assert sp.evictions() == ["slow"]
+
+
+def test_straggler_needs_samples():
+    sp = StragglerPolicy(min_samples=3)
+    sp.record("a", 9.0)
+    sp.record("b", 1.0)
+    assert not sp.should_evict("a")     # too few samples to judge

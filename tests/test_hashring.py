@@ -1,0 +1,75 @@
+"""HashRing: SkyLB-CH's ring hash with virtual nodes + availability skip."""
+from __future__ import annotations
+
+from collections import Counter
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashring import HashRing
+
+TARGETS = [f"r{i}" for i in range(8)]
+
+
+def test_deterministic_lookup():
+    ring = HashRing(TARGETS)
+    for key in ("alice", "bob", "x" * 50):
+        assert ring.lookup(key) == ring.lookup(key)
+
+
+def test_lookup_only_available():
+    ring = HashRing(TARGETS)
+    avail = {"r3", "r5"}
+    for i in range(200):
+        assert ring.lookup(f"k{i}", available=avail) in avail
+
+
+def test_unavailable_skipped_not_remapped():
+    """Keys NOT mapped to the removed target keep their assignment
+    (consistent hashing's minimal-disruption property)."""
+    ring = HashRing(TARGETS)
+    before = {f"k{i}": ring.lookup(f"k{i}") for i in range(500)}
+    avail = set(TARGETS) - {"r0"}
+    for k, t in before.items():
+        if t != "r0":
+            assert ring.lookup(k, available=avail) == t
+
+
+def test_balance_with_vnodes():
+    ring = HashRing(TARGETS, vnodes=100)
+    counts = Counter(ring.lookup(f"key-{i}") for i in range(8000))
+    assert set(counts) == set(TARGETS)
+    assert max(counts.values()) / min(counts.values()) < 2.5
+
+
+def test_add_remove_roundtrip():
+    ring = HashRing(TARGETS)
+    ring.remove("r1")
+    assert "r1" not in ring.targets
+    for i in range(100):
+        assert ring.lookup(f"k{i}") != "r1"
+    ring.add("r1")
+    assert "r1" in ring.targets
+
+
+def test_empty_ring():
+    assert HashRing().lookup("x") is None
+    ring = HashRing(["a"])
+    assert ring.lookup("x", available=set()) is None
+
+
+@given(st.lists(st.text(min_size=1, max_size=8), min_size=1, max_size=10,
+                unique=True),
+       st.text(min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_prop_lookup_in_targets(targets, key):
+    ring = HashRing(targets, vnodes=10)
+    assert ring.lookup(key) in set(targets)
+
+
+@given(st.sets(st.integers(0, 7), min_size=1))
+@settings(max_examples=50, deadline=None)
+def test_prop_skip_respects_availability(avail_idx):
+    ring = HashRing(TARGETS)
+    avail = {f"r{i}" for i in avail_idx}
+    for i in range(20):
+        assert ring.lookup(f"k{i}", available=avail) in avail

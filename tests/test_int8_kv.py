@@ -1,0 +1,67 @@
+"""int8-KV quantized decode cache (§Perf cell C): correctness vs the fp
+cache and quantize/dequantize roundtrip properties."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.attention import dequantize_kv, quantize_kv
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 7, 2, 8)), jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=(1, 3)), 1e-6) / 127.0  # (4,2)
+    q = quantize_kv(x, scale[:, None])
+    assert q.dtype == jnp.int8
+    back = dequantize_kv(q, scale[:, None], jnp.float32)
+    err = jnp.max(jnp.abs(back - x))
+    assert float(err) <= float(jnp.max(scale)) * 0.5 + 1e-6
+
+
+def test_int8_decode_matches_fp(qwen_reduced, qwen_model_params):
+    cfg = qwen_reduced
+    m_fp, params = qwen_model_params
+    m_q = build_model(cfg, jnp.float32, kv_dtype=jnp.int8)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (2, 9))
+    _, cache = m_fp.prefill(params, {"tokens": jnp.asarray(toks, jnp.int32)},
+                            pad_to=32)
+    qc = m_q.init_cache(2, 32)
+    for name in ("k", "v"):
+        scale = jnp.maximum(jnp.max(jnp.abs(cache[name]), axis=(2, 4)),
+                            1e-6) / 127.0                       # (L,B,K)
+        qc[name] = quantize_kv(cache[name], scale[:, :, None])
+        qc[f"{name}_scale"] = scale
+    batch = {"tokens": jnp.asarray([[5], [7]], jnp.int32),
+             "positions": jnp.asarray([9, 9], jnp.int32)}
+    lf, cf = m_fp.decode(params, cache, batch)
+    lq, cq = m_q.decode(params, qc, batch)
+    a, b = np.asarray(lf), np.asarray(lq)
+    assert np.abs(a - b).max() < 0.1 * np.abs(a).max()
+    assert np.array_equal(a.argmax(-1), b.argmax(-1))
+    assert cq["k"].dtype == jnp.int8            # new token written quantized
+
+
+def test_int8_cache_spec_half_bytes(qwen_reduced):
+    cfg = qwen_reduced
+    m_fp = build_model(cfg, jnp.float32)
+    m_q = build_model(cfg, jnp.float32, kv_dtype=jnp.int8)
+    fp = m_fp.cache_spec(4, 64)
+    q = m_q.cache_spec(4, 64)
+    assert q["k"].dtype == jnp.int8
+    fp_bytes = sum(np.prod(s.shape) * s.dtype.itemsize for s in
+                   jax.tree.leaves(fp))
+    q_bytes = sum(np.prod(s.shape) * s.dtype.itemsize for s in
+                  jax.tree.leaves(q))
+    assert q_bytes < 0.3 * fp_bytes             # fp32 test dtype -> ~4x
+
+
+def test_int8_rejected_for_ssm():
+    with pytest.raises(NotImplementedError):
+        build_model(get_config("mamba2-780m").reduced(), jnp.float32,
+                    kv_dtype=jnp.int8)

@@ -1,0 +1,118 @@
+"""Routing policies + pushing eligibility (paper §3.2/§3.3)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
+                                 ConsistentHash, LeastLoad, PrefixTreePolicy,
+                                 RoundRobin, SGLangRouterLike, TargetView,
+                                 eligible, make_policy)
+
+
+@dataclasses.dataclass
+class Req:
+    session_key: str = "s"
+    prompt_tokens: tuple = (1, 2, 3, 4)
+
+
+def _views(**over):
+    vs = [TargetView(id=f"r{i}") for i in range(4)]
+    for i, kw in over.items():
+        vs[int(i)] = dataclasses.replace(vs[int(i)], **kw)
+    return vs
+
+
+# ------------------------------------------------------------- eligibility
+
+def test_bp_everything_eligible():
+    vs = _views(**{"0": dict(outstanding=999, pending=50, available=False)})
+    assert len(eligible(vs, BP)) == 4
+
+
+def test_spo_threshold():
+    vs = _views(**{"0": dict(outstanding=30), "1": dict(outstanding=23)})
+    ids = {v.id for v in eligible(vs, SP_O, spo_limit=24)}
+    assert ids == {"r1", "r2", "r3"}
+
+
+def test_spp_pending_and_queue():
+    vs = _views(**{"0": dict(available=False),
+                   "1": dict(queue_len=10),
+                   "2": dict(n_avail_replicas=0)})
+    ids = {v.id for v in eligible(vs, SP_P, tau=4)}
+    assert ids == {"r3"}
+
+
+# ------------------------------------------------------------- policies
+
+def test_round_robin_cycles():
+    p = RoundRobin()
+    vs = _views()
+    picks = [p.select(Req(), vs) for _ in range(8)]
+    assert picks == ["r0", "r1", "r2", "r3"] * 2
+
+
+def test_least_load():
+    p = LeastLoad()
+    vs = _views(**{"0": dict(outstanding=5), "1": dict(outstanding=3),
+                   "2": dict(outstanding=1), "3": dict(outstanding=2)})
+    assert p.select(Req(), vs) == "r2"
+
+
+def test_ch_session_affinity():
+    p = ConsistentHash()
+    vs = _views()
+    t1 = p.select(Req(session_key="u1"), vs)
+    assert all(p.select(Req(session_key="u1"), vs) == t1 for _ in range(5))
+    # skips unavailable
+    vs2 = [v for v in vs if v.id != t1]
+    t2 = p.select(Req(session_key="u1"), vs2)
+    assert t2 != t1 and t2 in {v.id for v in vs2}
+
+
+def test_trie_follows_prefix_then_explores():
+    p = PrefixTreePolicy(explore_threshold=0.5)
+    vs = _views(**{"1": dict(outstanding=3)})
+    req = Req(prompt_tokens=(7, 8, 9, 10))
+    p.on_routed(req, "r3")
+    # full match (ratio 1.0) -> follow the trie
+    assert p.select(req, vs) == "r3"
+    # unrelated prompt (ratio 0) -> least-load exploration
+    fresh = Req(prompt_tokens=(1, 1, 1, 1))
+    assert p.select(fresh, vs) == "r0"
+
+
+def test_trie_respects_availability():
+    p = PrefixTreePolicy()
+    req = Req(prompt_tokens=(7, 8, 9, 10))
+    p.on_routed(req, "r3")
+    vs = [v for v in _views() if v.id != "r3"]
+    assert p.select(req, vs) in {v.id for v in vs}
+
+
+def test_sgl_threshold():
+    p = SGLangRouterLike(threshold=0.6)
+    req = Req(prompt_tokens=(1, 2, 3, 4, 5))
+    p.on_routed(req, "r2")
+    # 2/5 match < 0.6 -> least load
+    vs = _views(**{"0": dict(outstanding=1)})
+    assert p.select(Req(prompt_tokens=(1, 2, 9, 9, 9)), vs) != "r2"
+    # 5/5 match -> cache-aware
+    assert p.select(req, _views()) == "r2"
+
+
+def test_blended_prefers_hit_for_long_prompts():
+    p = BlendedScorePolicy(alpha=0.9)
+    long_req = Req(prompt_tokens=tuple(range(2048)))
+    p.on_routed(long_req, "r1")
+    vs = _views(**{"1": dict(outstanding=3)})
+    assert p.select(long_req, vs) == "r1"       # locality wins despite load
+    short = Req(prompt_tokens=(9,))
+    p.on_routed(short, "r2")
+    vs = _views(**{"2": dict(outstanding=9)})
+    assert p.select(short, vs) != "r2"          # load wins for short prompts
+
+
+def test_make_policy_registry():
+    for kind in ("RR", "LL", "CH", "SGL", "TRIE", "BLEND"):
+        assert make_policy(kind).select is not None

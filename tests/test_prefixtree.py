@@ -1,0 +1,108 @@
+"""PrefixTree: SkyLB's trie with per-node target sets (§3.2)."""
+from __future__ import annotations
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prefixtree import PrefixTree
+
+
+def _brute_longest(records, tokens, avail):
+    """Oracle: longest common prefix with any record whose target is
+    available; tie -> any target achieving it at that depth."""
+    best = 0
+    for rec, tgt in records:
+        if tgt not in avail:
+            continue
+        n = 0
+        for a, b in zip(rec, tokens):
+            if a != b:
+                break
+            n += 1
+        best = max(best, n)
+    return best
+
+
+def test_basic_match():
+    t = PrefixTree()
+    t.insert((1, 2, 3, 4), "a")
+    t.insert((1, 2, 9), "b")
+    mlen, tgt = t.match((1, 2, 3, 5), {"a", "b"})
+    assert (mlen, tgt) == (3, "a")
+    mlen, tgt = t.match((1, 2, 9, 9), {"b"})
+    assert (mlen, tgt) == (3, "b")
+
+
+def test_availability_filter_and_subset_early_exit():
+    t = PrefixTree()
+    t.insert((1, 2, 3), "a")
+    t.insert((1, 2), "b")
+    # 'a' unavailable: deepest available target is 'b' at depth 2
+    mlen, tgt = t.match((1, 2, 3), {"b"})
+    assert (mlen, tgt) == (2, "b")
+    # nobody available
+    assert t.match((1, 2, 3), set()) == (0, None)
+
+
+def test_eviction_bounds_memory():
+    t = PrefixTree(max_tokens=10)
+    t.insert((1, 2, 3, 4, 5, 6), "a")
+    t.insert((9, 8, 7, 6, 5, 4), "b")       # evicts the first record
+    assert t.total_tokens <= 10
+    assert t.match((1, 2, 3), {"a"})[1] is None
+    assert t.match((9, 8), {"b"})[1] == "b"
+
+
+def test_remove_target_rebuild():
+    t = PrefixTree()
+    t.insert((1, 2), "a")
+    t.insert((1, 2, 3), "b")
+    t.remove_target("a")
+    assert t.match((1, 2), {"a"})[1] is None
+    assert t.match((1, 2, 3), {"b"}) == (3, "b")
+
+
+def test_most_marked_tiebreak():
+    t = PrefixTree()
+    for _ in range(3):
+        t.insert((5, 5), "hot")
+    t.insert((5, 5), "cold")
+    assert t.match((5, 5), {"hot", "cold"})[1] == "hot"
+
+
+@given(st.lists(
+    st.tuples(st.lists(st.integers(0, 3), min_size=1, max_size=6),
+              st.sampled_from(["a", "b", "c"])),
+    min_size=1, max_size=20),
+    st.lists(st.integers(0, 3), min_size=1, max_size=8),
+    st.sets(st.sampled_from(["a", "b", "c"]), min_size=1))
+@settings(max_examples=120, deadline=None)
+def test_prop_match_equals_bruteforce(records, query, avail):
+    t = PrefixTree()
+    recs = []
+    for toks, tgt in records:
+        t.insert(tuple(toks), tgt)
+        recs.append((tuple(toks), tgt))
+    mlen, tgt = t.match(tuple(query), avail)
+    assert mlen == _brute_longest(recs, tuple(query), avail)
+    if mlen > 0:
+        assert tgt in avail
+    # returned target really served that prefix
+    if tgt is not None:
+        assert any(r[:mlen] == tuple(query[:mlen]) and g == tgt
+                   for r, g in recs)
+
+
+@given(st.lists(
+    st.tuples(st.lists(st.integers(0, 2), min_size=1, max_size=5),
+              st.sampled_from(["a", "b"])),
+    min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_prop_eviction_invariant(records):
+    t = PrefixTree(max_tokens=12)
+    for toks, tgt in records:
+        t.insert(tuple(toks), tgt)
+        assert t.total_tokens <= 12
+    # tree is consistent with its surviving record list
+    for toks, tgt in t._records:
+        mlen, got = t.match(toks, {tgt})
+        assert mlen == len(toks)

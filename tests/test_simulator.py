@@ -1,0 +1,202 @@
+"""Discrete-event simulator: replica continuous batching, two-layer LB
+forwarding, controller failover, stragglers."""
+from __future__ import annotations
+
+from repro.core.policies import LeastLoad, PrefixTreePolicy
+from repro.core.simulator import (Controller, LBConfig, LoadBalancerSim,
+                                  Network, ReplicaConfig, ReplicaSim, Request,
+                                  Sim)
+
+SP_P, BP = "SP-P", "BP"
+
+
+def _req(rid, prompt_len=16, out_len=4, region="us", user="u"):
+    return Request(rid=rid, user_id=user, session_key=user, region=region,
+                   prompt_tokens=tuple(range(prompt_len)), output_len=out_len,
+                   output_tokens=tuple(range(out_len)))
+
+
+# ------------------------------------------------------------- replica
+
+def test_replica_completes_and_counts():
+    sim = Sim()
+    r = ReplicaSim(sim, "r0", "us", ReplicaConfig())
+    done = []
+    q = _req(0)
+    q.done_cb = done.append
+    r.enqueue(q)
+    assert r.pending_count() == 1
+    sim.run(until=60)
+    assert done and done[0].finished is not None
+    assert r.completions == 1
+    assert r.pending_count() == 0 and r.outstanding() == 0
+    assert done[0].ttft is not None and done[0].ttft <= done[0].finished
+
+
+def test_replica_admission_blocked_by_kv_budget():
+    sim = Sim()
+    r = ReplicaSim(sim, "r0", "us", ReplicaConfig(kv_budget=64))
+    reqs = [_req(i, prompt_len=30, out_len=10) for i in range(3)]
+    for q in reqs:
+        q.done_cb = lambda x: None
+        r.enqueue(q)
+    sim.run(until=0.0)      # run the admission events at t=0
+    # 30+10=40 tokens each; budget 64 admits only one at a time
+    assert len(r.running) == 1
+    assert r.pending_count() == 2
+    sim.run(until=120)
+    assert r.completions == 3
+
+
+def test_replica_prefix_cache_reuse():
+    sim = Sim()
+    r = ReplicaSim(sim, "r0", "us", ReplicaConfig())
+    a, b = _req(0, prompt_len=32), _req(1, prompt_len=32)
+    seen = []
+    a.done_cb = lambda x: (seen.append(x), r.enqueue(b))
+    b.done_cb = seen.append
+    r.enqueue(a)
+    sim.run(until=60)
+    assert seen[0].cached_tokens == 0
+    assert seen[1].cached_tokens == 32      # same prompt fully cached
+
+
+def test_straggler_slows_iterations():
+    tA, tB = [], []
+    for factor, sink in ((1.0, tA), (4.0, tB)):
+        sim = Sim()
+        r = ReplicaSim(sim, "r", "us", ReplicaConfig(speed_factor=factor))
+        q = _req(0, out_len=8)
+        q.done_cb = lambda x, s=sink: s.append(x.finished)
+        r.enqueue(q)
+        sim.run(until=300)
+    assert tB[0] > 3 * tA[0]
+
+
+# ------------------------------------------------------------- LB
+
+def _mk_lb(sim, net, pushing=SP_P, n_replicas=2, region="us",
+           kv_budget=55, policy=None):
+    lb = LoadBalancerSim(sim, f"lb-{region}", region, net,
+                         policy or LeastLoad(),
+                         remote_policy=LeastLoad(),
+                         cfg=LBConfig(pushing=pushing))
+    for i in range(n_replicas):
+        lb.add_replica(ReplicaSim(sim, f"{region}-r{i}", region,
+                                  ReplicaConfig(kv_budget=kv_budget)))
+    return lb
+
+
+def test_spp_queues_at_lb_when_replicas_full():
+    """SP-P semantics: once a probe has SEEN the replica with a backlog,
+    later arrivals wait at the LB instead of piling onto the replica."""
+    sim = Sim()
+    net = Network()
+    lb = _mk_lb(sim, net, pushing=SP_P, n_replicas=1, kv_budget=55)
+
+    def submit(i):
+        q = _req(i, prompt_len=30, out_len=20)    # 50 of 55 kv => batch of 1
+        q.done_cb = lambda x: None
+        lb.on_request(q)
+
+    submit(0)
+    submit(1)                       # same probe window: optimistic send
+    sim.after(0.12, lambda: submit(2))   # after a probe saw pending>0
+    sim.after(0.12, lambda: submit(3))
+    sim.run(until=0.3)
+    r = next(iter(lb.replicas.values()))
+    assert len(lb.queue) == 2       # late arrivals held at the LB
+    assert r.pending_count() <= 1
+    sim.run(until=600)
+    assert sum(x.completions for x in lb.replicas.values()) == 4
+
+
+def test_bp_pushes_everything_to_replicas():
+    sim = Sim()
+    net = Network()
+    lb = _mk_lb(sim, net, pushing=BP, n_replicas=1, kv_budget=40)
+    for i in range(4):
+        q = _req(i, prompt_len=30, out_len=8)
+        q.done_cb = lambda x: None
+        lb.on_request(q)
+    sim.run(until=0.2)
+    r = next(iter(lb.replicas.values()))
+    assert len(lb.queue) == 0
+    assert r.outstanding() == 4
+
+
+def test_two_layer_forwarding_on_local_saturation():
+    """SUSTAINED overload spills to the remote region; bursts inside one
+    probe window deliberately stay local (cheaper than the WAN hop)."""
+    sim = Sim()
+    net = Network()
+    us = _mk_lb(sim, net, n_replicas=1, region="us", kv_budget=55)
+    eu = _mk_lb(sim, net, n_replicas=2, region="eu", kv_budget=400)
+    us.peer(eu)
+    eu.peer(us)
+    done = []
+    for i in range(8):
+        q = _req(i, prompt_len=30, out_len=20)
+        q.done_cb = done.append
+        sim.after(0.1 * i, lambda q=q: us.on_request(q))
+    sim.run(until=300)
+    assert len(done) == 8
+    assert us.forwarded_out > 0          # spillover to eu happened
+    assert any(x.replica.startswith("eu") for x in done)
+
+
+def test_no_double_forwarding():
+    """A forwarded request must be served in the remote region, never
+    bounced a second time (req.forwarded guard)."""
+    sim = Sim()
+    net = Network()
+    lbs = [_mk_lb(sim, net, n_replicas=1, region=r, kv_budget=40)
+           for r in ("us", "eu", "asia")]
+    for a in lbs:
+        for b in lbs:
+            a.peer(b)
+    done = []
+    for i in range(9):
+        q = _req(i, prompt_len=30, out_len=8)
+        q.done_cb = done.append
+        lbs[0].on_request(q)
+    sim.run(until=300)
+    assert len(done) == 9
+
+
+# ------------------------------------------------------------- controller
+
+def test_controller_failover_and_restore():
+    sim = Sim()
+    net = Network()
+    us = _mk_lb(sim, net, region="us", n_replicas=2)
+    eu = _mk_lb(sim, net, region="eu", n_replicas=2)
+    us.peer(eu)
+    eu.peer(us)
+    ctl = Controller(sim, net, [us, eu], probe_interval=0.1)
+    ctl.fail_lb("lb-eu")
+    sim.run(until=1.0)
+    assert len(us.replicas) == 4         # eu replicas adopted
+    assert any("failover" in e for _, e in ctl.events)
+    ctl.recover_lb("lb-eu")
+    sim.run(until=2.0)
+    assert len(us.replicas) == 2 and len(eu.replicas) == 2
+    assert any("restore" in e for _, e in ctl.events)
+
+
+def test_requests_survive_lb_failure():
+    sim = Sim()
+    net = Network()
+    us = _mk_lb(sim, net, region="us", n_replicas=1, kv_budget=40)
+    eu = _mk_lb(sim, net, region="eu", n_replicas=1, kv_budget=400)
+    us.peer(eu)
+    eu.peer(us)
+    ctl = Controller(sim, net, [us, eu], probe_interval=0.1)
+    done = []
+    for i in range(4):
+        q = _req(i, prompt_len=30, out_len=8)
+        q.done_cb = done.append
+        eu.on_request(q)
+    sim.after(0.05, lambda: ctl.fail_lb("lb-eu"))
+    sim.run(until=300)
+    assert len(done) == 4                # queue drained to the host LB

@@ -1,0 +1,110 @@
+"""End-to-end behaviour of the named system variants (paper Fig. 8/9/10
+mechanisms at small scale): completion, cross-region offload, failover
+under load, determinism, and the cost model."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.cost import (autoscale_on_demand_cost, global_peak_cost,
+                             region_local_cost, replicas_needed)
+from repro.core.simulator import ReplicaConfig
+from repro.core.system import ServingSystem
+from repro.core.workloads import diurnal_series, multiturn, tot
+
+RCFG = ReplicaConfig(kv_budget=8192)
+
+
+def _run(variant, counts=None, horizon=120.0, rpr=None, seed=0, rcfg=RCFG,
+         turns=4):
+    sys = ServingSystem(variant, rpr or {"us": 2, "eu": 2, "asia": 2},
+                        replica_cfg=rcfg, seed=seed)
+    for s in multiturn(counts or {"us": 6, "eu": 3, "asia": 3},
+                       turns=turns, seed=seed):
+        sys.add_session_client(s, think_mean=0.2)
+    return sys, sys.run(until=horizon)
+
+
+@pytest.mark.parametrize("variant", ["skylb", "skylb-ch", "rr", "ll", "ch",
+                                     "sgl", "gke", "region-local", "blend"])
+def test_variant_completes_requests(variant):
+    _, s = _run(variant)
+    assert s["requests"] > 0
+    assert s["throughput_tok_s"] > 0
+    assert s["ttft_p50"] > 0
+
+
+def test_skylb_forwards_under_skew():
+    sys, s = _run("skylb", counts={"us": 16, "eu": 2, "asia": 2})
+    assert s["forwards"] > 0
+    assert sys.lbs["lb-us"].forwarded_out > 0
+
+
+def test_region_local_never_forwards():
+    _, s = _run("region-local", counts={"us": 16, "eu": 2, "asia": 2})
+    assert s["forwards"] == 0
+
+
+def test_deterministic_same_seed():
+    _, s1 = _run("skylb", seed=5)
+    _, s2 = _run("skylb", seed=5)
+    assert s1["requests"] == s2["requests"]
+    assert s1["throughput_tok_s"] == pytest.approx(s2["throughput_tok_s"])
+    assert s1["ttft_p50"] == pytest.approx(s2["ttft_p50"])
+
+
+def test_skylb_beats_region_local_on_skew():
+    _, sky = _run("skylb", counts={"us": 16, "eu": 2, "asia": 2},
+                  horizon=180.0, turns=8)
+    _, loc = _run("region-local", counts={"us": 16, "eu": 2, "asia": 2},
+                  horizon=180.0, turns=8)
+    assert sky["throughput_tok_s"] >= 0.98 * loc["throughput_tok_s"]
+    assert sky["ttft_p50"] <= loc["ttft_p50"]
+
+
+def test_lb_failure_recovery_under_load():
+    sys = ServingSystem("skylb", {"us": 2, "eu": 2}, replica_cfg=RCFG)
+    for s in multiturn({"us": 4, "eu": 4}, turns=4):
+        sys.add_session_client(s, think_mean=0.2)
+    sys.sim.after(5.0, lambda: sys.controller.fail_lb("lb-eu"))
+    sys.sim.after(30.0, lambda: sys.controller.recover_lb("lb-eu"))
+    summary = sys.run(until=150.0)
+    assert summary["requests"] > 0
+    assert any("failover" in e for _, e in sys.controller.events)
+    assert any("restore" in e for _, e in sys.controller.events)
+    # eu replicas are back home after recovery
+    assert len(sys.lbs["lb-eu"].replicas) == 2
+
+
+def test_straggler_demotion():
+    sys = ServingSystem("skylb", {"us": 2}, replica_cfg=RCFG)
+    victim = sys.replicas[0]
+    sys.controller.mark_straggler(victim, factor=5.0)
+    for s in multiturn({"us": 8}, turns=4):
+        sys.add_session_client(s, think_mean=0.2)
+    sys.run(until=120.0)
+    other = sys.replicas[1]
+    assert other.completions > victim.completions    # SP-P avoids the slow one
+
+
+def test_tot_client_tree_semantics():
+    sys = ServingSystem("skylb", {"us": 2}, replica_cfg=RCFG)
+    trees = tot({"us": 2}, branching=2, depth=3, trees_per_client=1)
+    for t in trees:
+        sys.add_tot_client(t)
+    s = sys.run(until=120.0)
+    assert s["requests"] == 2 * 7        # 2 clients x (1+2+4) nodes
+
+
+# ------------------------------------------------------------- cost model
+
+def test_cost_model_orderings():
+    series = diurnal_series(("us", "eu", "asia", "sa", "oceania"))
+    series = {r: [x * 100 for x in xs] for r, xs in series.items()}
+    kappa = 20.0
+    local = region_local_cost(series, kappa)
+    glob = global_peak_cost(series, kappa)
+    od = autoscale_on_demand_cost(series, kappa)
+    assert glob < local                 # aggregation always saves
+    assert od > glob                    # on-demand premium dominates
+    assert replicas_needed(0.0, kappa) == 1
+    assert replicas_needed(45.0, 20.0) == 3

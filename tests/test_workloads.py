@@ -1,0 +1,71 @@
+"""Workload generators + the paper's prefix-similarity metric."""
+from __future__ import annotations
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workloads import (diurnal_series, multiturn,
+                                  prefix_similarity, tot)
+
+
+def test_prefix_similarity_metric():
+    assert prefix_similarity((1, 2, 3), (1, 2, 3)) == 1.0
+    assert prefix_similarity((1, 2), (1, 2, 3, 4)) == 1.0   # a prefix of b
+    assert prefix_similarity((1, 2, 3), (9, 9)) == 0.0
+    assert prefix_similarity((), (1,)) == 0.0
+    assert prefix_similarity((1, 2, 9), (1, 2, 3)) == 2 / 3
+
+
+@given(st.lists(st.integers(0, 5), max_size=12),
+       st.lists(st.integers(0, 5), max_size=12))
+@settings(max_examples=80, deadline=None)
+def test_prop_prefix_similarity_bounds(a, b):
+    s = prefix_similarity(tuple(a), tuple(b))
+    assert 0.0 <= s <= 1.0
+    assert s == prefix_similarity(tuple(b), tuple(a))       # symmetric
+
+
+def test_multiturn_structure():
+    sessions = multiturn({"us": 3, "eu": 2}, turns=4, seed=1)
+    assert len(sessions) == 5
+    regions = {s.region for s in sessions}
+    assert regions == {"us", "eu"}
+    for s in sessions:
+        assert len(s.turns) == 4
+        assert len(s.system_prompt) > 0
+
+
+def test_multiturn_multi_session_users_share_template():
+    sessions = multiturn({"us": 2}, turns=2, sessions_per_user=3, seed=2)
+    assert len(sessions) == 6
+    by_user = {}
+    for s in sessions:
+        by_user.setdefault(s.user_id, []).append(s)
+    for user, ss in by_user.items():
+        assert len(ss) == 3
+        assert len({s.system_prompt for s in ss}) == 1      # same template
+
+
+def test_tot_request_counts():
+    trees = tot({"us": 1}, branching=2, depth=4, trees_per_client=1)[0]
+    assert trees[0].n_requests() == 15                      # 1+2+4+8
+    trees4 = tot({"us": 1}, branching=4, depth=4, trees_per_client=1)[0]
+    assert trees4[0].n_requests() == 85                     # 1+4+16+64
+
+
+def test_tot_output_sigma_varies_lengths():
+    t = tot({"us": 1}, output_len=100, output_sigma=1.0,
+            trees_per_client=1)[0][0]
+    lens = {t.node_output_len((i,)) for i in range(20)}
+    assert len(lens) > 5
+    t0 = tot({"us": 1}, output_len=100, trees_per_client=1)[0][0]
+    assert t0.node_output_len((0,)) == 100                  # sigma=0 fixed
+
+
+def test_diurnal_aggregation_flattens():
+    series = diurnal_series(("us", "eu", "asia", "sa", "oceania"), hours=24)
+    def ratio(xs):
+        return max(xs) / max(1e-9, min(xs))
+    agg = [sum(series[r][i] for r in series)
+           for i in range(len(series["us"]))]
+    per_region_worst = max(ratio(xs) for xs in series.values())
+    assert ratio(agg) < per_region_worst        # Fig. 3a direction
