@@ -39,10 +39,10 @@ def _drive(variant: str, horizon: float = 240.0, seed: int = 0) -> dict:
     return sys.run(until=horizon)
 
 
-def run() -> dict:
+def run(horizon: float = 240.0) -> dict:
     out = {}
     for v in ("region-local", "skylb", "steal"):
-        s = _drive(v)
+        s = _drive(v, horizon=horizon)
         out[v] = {"tok_s": round(s["throughput_tok_s"], 1),
                   "ttft_p50": round(s["ttft_p50"], 3),
                   "ttft_p90": round(s["ttft_p90"], 3),
@@ -58,8 +58,8 @@ def run() -> dict:
     return out
 
 
-def main() -> dict:
-    out = run()
+def main(smoke: bool = False) -> dict:
+    out = run(horizon=30.0 if smoke else 240.0)
     for v in ("region-local", "skylb", "steal"):
         r = out[v]
         print(f"[steal] {v:13s} tok/s {r['tok_s']:7.1f} ttft50 "

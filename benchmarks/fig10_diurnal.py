@@ -52,8 +52,8 @@ def run(replica_counts=(6, 9, 12), horizon: float = 240.0) -> dict:
     return out
 
 
-def main() -> dict:
-    out = run()
+def main(smoke: bool = False) -> dict:
+    out = run(replica_counts=(6,), horizon=25.0) if smoke else run()
     for n in [k for k in out if isinstance(k, int)]:
         r = out[n]
         print(f"[fig10] {n:2d} replicas: skylb {r['skylb_tok_s']:7.1f} tok/s "

@@ -37,7 +37,7 @@ def run(hours: int = 24, step_h: float = 0.5, kappa: float = 40.0) -> dict:
     }
 
 
-def main() -> dict:
+def main(smoke: bool = False) -> dict:   # analytic, fast either way
     out = run()
     print("[fig3] per-region variance "
           f"{out['per_region_variance_min']}-{out['per_region_variance_max']}x"

@@ -63,8 +63,8 @@ def run(n_users: int = 24, turns: int = 5, seed: int = 3,
     }
 
 
-def main() -> dict:
-    out = run()
+def main(smoke: bool = False) -> dict:
+    out = run(max_pairs=500) if smoke else run()
     print(f"[fig5] within-user {out['within_user']} vs cross-user "
           f"{out['cross_user_same_region']} ({out['within_over_cross']}x) | "
           f"cross-region affinity {out['cross_region']:.3f}")

@@ -15,7 +15,7 @@ from __future__ import annotations
 import random
 from collections import defaultdict
 
-from repro.core.hashring import HashRing
+from repro.routing import HashRing
 from repro.core.simradix import SimRadix
 from repro.core.workloads import _tokens
 
@@ -150,7 +150,7 @@ def run(n_replicas: int = 4, seed: int = 5) -> dict:
     return res
 
 
-def main() -> dict:
+def main(smoke: bool = False) -> dict:   # fast either way
     out = run()
     for k, v in out.items():
         print(f"[fig6] {k:22s} CH {v['ch']:.3f} vs global-view "

@@ -80,8 +80,9 @@ def summarize(out: dict) -> dict:
     return summary
 
 
-def main() -> dict:
-    out = run()
+def main(smoke: bool = False) -> dict:
+    out = (run(horizon=25.0, workloads=("arena", "tot")) if smoke
+           else run())
     hdr = f"{'workload':9s} {'system':9s} {'tok/s':>7s} {'ttft50':>7s} " \
           f"{'ttft90':>7s} {'e2e50':>7s} {'hit':>6s} {'imbal':>6s} {'fwd':>5s}"
     print("[fig8] " + hdr)

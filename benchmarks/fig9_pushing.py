@@ -51,8 +51,10 @@ def run(horizon: float = 240.0) -> dict:
     return out
 
 
-def main() -> dict:
-    out = run()
+def main(smoke: bool = False) -> dict:
+    # smoke: bounded horizon — catches routing-throughput regressions
+    # in CI without the full sweep
+    out = run(horizon=30.0 if smoke else 240.0)
     for k in ("BP", "SP-O", "SP-P"):
         r = out[k]
         print(f"[fig9] {k:5s} tok/s {r['tok_s']:7.1f} ttft50 "

@@ -1,7 +1,11 @@
 """Benchmark harness: one module per paper figure + the kernel sweep.
 Runs everything, prints per-figure results, writes artifacts/bench/*.json.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig9]
+  PYTHONPATH=src python -m benchmarks.run [--only fig9] [--smoke]
+
+--smoke bounds the simulated horizons so the whole sweep finishes in about
+a minute — enough signal to catch routing-throughput regressions in CI
+(scripts/ci.sh) without the full-length figures.
 """
 from __future__ import annotations
 
@@ -15,6 +19,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded sim horizons (fast CI regression check)")
     args = ap.parse_args()
 
     from benchmarks import (beyond_steal, fig3_aggregation, fig5_prefix,
@@ -38,7 +44,7 @@ def main() -> int:
         t0 = time.time()
         print(f"===== {name} =====", flush=True)
         try:
-            result = fn()
+            result = fn(smoke=args.smoke)
             with open(os.path.join(args.out, f"{name}.json"), "w") as f:
                 json.dump(result, f, indent=1, default=str)
         except Exception as e:  # noqa: BLE001

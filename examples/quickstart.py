@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.policies import PrefixTreePolicy, TargetView, eligible
+from repro.routing import PrefixTreePolicy, TargetView, eligible
 from repro.models import build_model
 from repro.serving import Engine, EngineConfig, GenRequest, SamplingParams
 

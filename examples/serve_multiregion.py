@@ -13,8 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.policies import PrefixTreePolicy, make_policy
 from repro.models import build_model
+from repro.routing import build_routing
 from repro.serving import (Engine, EngineConfig, GenRequest, InProcessRouter,
                            SamplingParams)
 
@@ -31,9 +31,14 @@ def main():
     model = build_model(cfg, jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
 
-    router = InProcessRouter(remote_policy=make_policy("TRIE"))
+    # build the LB stack from the same routing spec the simulator uses; with
+    # tick-granularity heartbeats the between-probe optimism budget is cut to
+    # about one engine iteration of headroom, so a burst spills over instead
+    # of piling onto the snapshot-available local engines
+    router = InProcessRouter.from_spec(
+        build_routing("skylb"), cfg_overrides={"max_inflight_per_probe": 2})
     for region in REGIONS:
-        lb = router.add_region(region, PrefixTreePolicy())
+        lb = router.add_region(region)
         # US gets less KV capacity than its load share => must offload
         n_pages = 48 if region == "us" else 96
         for k in range(2):

@@ -1,17 +1,17 @@
-"""The paper's primary contribution: SkyLB's locality-aware cross-region
-load balancing — hash ring, prefix trie, routing policies, selective
-pushing, two-layer LBs, controller, and the multi-region simulator."""
-from repro.core.hashring import HashRing
-from repro.core.prefixtree import PrefixTree
-from repro.core.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
-                                 ConsistentHash, LeastLoad, Policy,
-                                 PrefixTreePolicy, RoundRobin,
-                                 SGLangRouterLike, TargetView, eligible,
-                                 make_policy)
+"""Multi-region discrete-event testbed for SkyLB: replicas, WAN network,
+LB hosts, controller, workloads, metrics, and the `ServingSystem` builder.
+The routing DECISIONS themselves live in the transport-agnostic
+`repro.routing` package (shared with the real-engine path); the old
+`repro.core.{policies,hashring,prefixtree}` import paths remain as
+deprecated shims."""
 from repro.core.simulator import (Controller, LBConfig, LoadBalancerSim,
                                   Network, ReplicaConfig, ReplicaSim, Request,
                                   Sim)
 from repro.core.system import ServingSystem
+from repro.routing import (BP, SP_O, SP_P, BlendedScorePolicy, ConsistentHash,
+                           HashRing, LeastLoad, Policy, PrefixTree,
+                           PrefixTreePolicy, RoundRobin, SGLangRouterLike,
+                           TargetView, eligible, make_policy)
 
 __all__ = [
     "HashRing", "PrefixTree", "BP", "SP_O", "SP_P", "BlendedScorePolicy",

@@ -15,11 +15,14 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import warnings
 from collections import deque
 from typing import Callable, Optional
 
-from repro.core.policies import (BP, SP_O, SP_P, Policy, TargetView, eligible)
 from repro.core.simradix import SimRadix
+from repro.routing.core import RoutingConfig, RoutingCore
+from repro.routing.failover import FailoverTracker
+from repro.routing.policies import BP, SP_O, SP_P, Policy, TargetView  # noqa: F401 — BP/SP_O/SP_P re-exported for callers
 
 
 # ------------------------------------------------------------------ engine
@@ -203,83 +206,138 @@ class Network:
         if rtt:
             self.rtt.update(rtt)
         self.local_rtt = local_rtt
+        self._warned_pairs: set = set()
 
     def one_way(self, a: str, b: str) -> float:
         if a == b:
             return self.local_rtt / 2
         key = (a, b) if (a, b) in self.rtt else (b, a)
-        return self.rtt.get(key, 0.15) / 2
+        if key not in self.rtt:
+            pair = frozenset((a, b))        # direction-independent dedup
+            if pair not in self._warned_pairs:
+                self._warned_pairs.add(pair)
+                warnings.warn(
+                    f"Network: no RTT configured for region pair {a}<->{b}; "
+                    f"assuming 0.15 s RTT", stacklevel=2)
+            return 0.15 / 2
+        return self.rtt[key] / 2
 
 
 # ------------------------------------------------------------------ LB
 
-@dataclasses.dataclass
-class LBConfig:
-    pushing: str = SP_P             # BP | SP-O | SP-P
-    spo_limit: int = 24
-    tau: int = 4                    # remote-forward queue buffer
-    probe_interval: float = 0.05
-    # cross-region heartbeats ride the WAN: they are refreshed slower than
-    # local probes (>= one RTT; the paper's regions are 140-200 ms apart)
-    remote_probe_interval: float = 0.2
-    cross_region: bool = True       # two-layer forwarding enabled
-    # SP-P optimism bound: between heartbeats the LB may send at most this
-    # many requests to a replica last seen with an empty pending queue.
-    # Alg. 1 is unbounded between probes (availability only refreshes at
-    # heartbeats), so the default is high — a backstop, not a throttle;
-    # lowering it trades burst absorption for stricter queue control.
-    max_inflight_per_probe: int = 64
-    # BEYOND-PAPER work stealing (paper §6 cites stealing > shedding for
-    # CPU loads): an idle LB PULLS from the most-backlogged peer instead of
-    # waiting for that peer to push. Complements SP-P forwarding, which is
-    # sender-initiated (shedding-style).
-    work_stealing: bool = False
-    steal_threshold: int = 4        # only steal from queues deeper than this
-    steal_batch: int = 2            # requests pulled per steal
+# LB behaviour is configured by the transport-agnostic RoutingConfig; the
+# old name stays as an alias for existing callers/tests.
+LBConfig = RoutingConfig
+
+
+class _SimTransport:
+    """WAN transport for RoutingCore: one-way latencies from `Network`,
+    delivery as discrete events on the shared `Sim` clock."""
+
+    def __init__(self, lb: "LoadBalancerSim"):
+        self.lb = lb
+
+    def now(self) -> float:
+        return self.lb.sim.now
+
+    def target_alive(self, target_id: str) -> bool:
+        r = self.lb.replicas.get(target_id)
+        return r is not None and r.alive
+
+    def peer_alive(self, peer_id: str) -> bool:
+        p = self.lb.remote_lbs.get(peer_id)
+        return p is not None and p.alive
+
+    def deliver(self, req: Request, target_id: str) -> None:
+        r = self.lb.replicas[target_id]
+        self.lb.sim.after(self.lb.net.one_way(self.lb.region, r.region),
+                          lambda: r.enqueue(req))
+
+    def forward(self, req: Request, peer_id: str) -> None:
+        peer = self.lb.remote_lbs[peer_id]
+        if self.lb.metrics is not None:
+            self.lb.metrics.forwards.append(
+                (self.lb.sim.now, self.lb.id, peer_id))
+        self.lb.sim.after(self.lb.net.one_way(self.lb.region, peer.region),
+                          lambda: peer.on_request(req))
+
+    def steal_request(self, peer_id: str, n: int) -> None:
+        victim = self.lb.remote_lbs[peer_id]
+        lat = self.lb.net.one_way(self.lb.region, victim.region)
+        self.lb.sim.after(lat, lambda: victim.on_steal_request(self.lb, n))
 
 
 class LoadBalancerSim:
+    """Simulator host for the shared `repro.routing.RoutingCore`: schedules
+    heartbeat probes as discrete events, builds TargetViews from live
+    ReplicaSims / peer LBs, and moves requests over the simulated WAN.
+    All routing DECISIONS (eligibility, two-layer dispatch, optimism
+    accounting, stealing) live in the core — shared with the real-engine
+    `InProcessRouter`."""
+
     def __init__(self, sim: Sim, lid: str, region: str, net: Network,
                  policy: Policy, remote_policy: Optional[Policy] = None,
-                 cfg: LBConfig = LBConfig(), metrics=None):
+                 cfg: Optional[LBConfig] = None, metrics=None):
         self.sim = sim
         self.id = lid
         self.region = region
         self.net = net
         self.policy = policy
         self.remote_policy = remote_policy
-        self.cfg = cfg
+        # copy: a caller-held (or default) config instance must never be
+        # shared mutable state between LBs
+        self.cfg = dataclasses.replace(cfg) if cfg is not None else LBConfig()
         self.replicas: dict[str, ReplicaSim] = {}
         self.remote_lbs: dict[str, "LoadBalancerSim"] = {}
-        self.queue: deque[Request] = deque()
         self.alive = True
         self.metrics = metrics
-        # probe snapshots (stale between probes — like real heartbeats)
-        self._replica_snap: dict[str, TargetView] = {}
-        self._lb_snap: dict[str, TargetView] = {}
-        self._sent_since_probe: dict[str, int] = {}
-        self.forwarded_out = 0
-        self.peak_queue = 0
-        sim.after(0.0, self._probe)
-        sim.after(0.0, self._probe_remote)
+        self.core = RoutingCore(lid, policy, remote_policy, self.cfg,
+                                _SimTransport(self))
+        # heartbeat chains die while the LB is dead; each revive() bumps the
+        # epoch so stale chains can't double-fire after recovery
+        self._hb_epoch = 0
+        self._start_probes()
+
+    def _start_probes(self) -> None:
+        epoch = self._hb_epoch
+        self.sim.after(0.0, lambda: self._probe(epoch))
+        self.sim.after(0.0, lambda: self._probe_remote(epoch))
+
+    def revive(self) -> None:
+        """Bring a dead LB back: restart the heartbeat loops (they exited
+        while alive was False, so flipping the flag alone leaves snapshots
+        permanently stale)."""
+        self.alive = True
+        self._hb_epoch += 1
+        self._start_probes()
+
+    # ---- routing state lives in the core
+    @property
+    def queue(self) -> deque:
+        return self.core.queue
+
+    @property
+    def forwarded_out(self) -> int:
+        return self.core.forwarded_out
+
+    @property
+    def peak_queue(self) -> int:
+        return self.core.peak_queue
 
     # ---- topology
     def add_replica(self, r: ReplicaSim) -> None:
         self.replicas[r.id] = r
-        self.policy.on_target_added(r.id)
-        self._replica_snap[r.id] = self._view_of(r)
+        self.core.target_added(self._view_of(r))
 
     def remove_replica(self, rid: str) -> Optional[ReplicaSim]:
         r = self.replicas.pop(rid, None)
-        self.policy.on_target_removed(rid)
-        self._replica_snap.pop(rid, None)
+        self.core.target_removed(rid)
         return r
 
     def peer(self, lb: "LoadBalancerSim") -> None:
         if lb.id != self.id:
             self.remote_lbs[lb.id] = lb
-            if self.remote_policy:
-                self.remote_policy.on_target_added(lb.id)
+            self.core.peer_added(lb.id)
 
     # ---- availability monitor (Alg.1 MonitorAvailability)
     def _view_of(self, r: ReplicaSim) -> TargetView:
@@ -291,60 +349,36 @@ class LoadBalancerSim:
         return sum(1 for r in self.replicas.values()
                    if r.pending_count() == 0 and r.alive)
 
-    def _probe(self) -> None:
-        if not self.alive:
+    def _probe(self, epoch: int = 0) -> None:
+        if not self.alive or epoch != self._hb_epoch:
             return
-        self._sent_since_probe.clear()
-        for rid, r in self.replicas.items():
-            self._replica_snap[rid] = self._view_of(r)
-        self._try_dispatch()
-        if self.cfg.work_stealing:
-            self._maybe_steal()
-        self.sim.after(self.cfg.probe_interval, self._probe)
+        self.core.refresh_local(
+            [self._view_of(r) for r in self.replicas.values()])
+        self.core.maybe_steal()
+        self.sim.after(self.cfg.probe_interval, lambda: self._probe(epoch))
 
-    def _probe_remote(self) -> None:
+    def _probe_remote(self, epoch: int = 0) -> None:
         """WAN heartbeat: refresh peer-LB snapshots (slower than local)."""
-        if not self.alive:
+        if not self.alive or epoch != self._hb_epoch:
             return
-        for lid, lb in self.remote_lbs.items():
-            self._lb_snap[lid] = TargetView(
-                id=lid, available=lb.alive,
-                n_avail_replicas=lb.n_avail_replicas() if lb.alive else 0,
-                queue_len=len(lb.queue) if lb.alive else 10 ** 9,
-                outstanding=sum(x.outstanding() for x in lb.replicas.values())
-                if lb.alive else 10 ** 9)
-        self._try_dispatch()
-        self.sim.after(self.cfg.remote_probe_interval, self._probe_remote)
+        self.core.refresh_remote([
+            TargetView(
+                id=lid, available=True,
+                n_avail_replicas=lb.n_avail_replicas(),
+                queue_len=len(lb.queue),
+                outstanding=sum(x.outstanding()
+                                for x in lb.replicas.values()))
+            if lb.alive else TargetView.unavailable(lid)
+            for lid, lb in self.remote_lbs.items()])
+        self.sim.after(self.cfg.remote_probe_interval,
+                       lambda: self._probe_remote(epoch))
 
     # ---- work stealing (beyond-paper; receiver-initiated rebalancing)
-    def _maybe_steal(self) -> None:
-        """Idle here + deep queue there => pull work (one steal per probe)."""
-        if self.queue or self.n_avail_replicas() == 0 or not self.remote_lbs:
-            return
-        victim_view = max(self._lb_snap.values(),
-                          key=lambda v: v.queue_len, default=None)
-        if victim_view is None or victim_view.queue_len <= self.cfg.steal_threshold:
-            return
-        victim = self.remote_lbs[victim_view.id]
-        lat = self.net.one_way(self.region, victim.region)
-        self.sim.after(lat, lambda: victim.on_steal_request(
-            self, self.cfg.steal_batch))
-
     def on_steal_request(self, thief: "LoadBalancerSim", n: int) -> None:
-        """A peer with idle capacity asks for up to n TAIL requests (the
-        head keeps local FCFS fairness). Never re-steal forwarded work."""
         if not self.alive:
             return
         lat = self.net.one_way(self.region, thief.region)
-        for _ in range(n):
-            if len(self.queue) <= self.cfg.steal_threshold:
-                break
-            req = self.queue.pop()          # tail
-            if req.forwarded:
-                self.queue.append(req)      # don't bounce; put it back
-                break
-            req.forwarded = True            # one WAN hop max, like _forward
-            self.forwarded_out += 1
+        for req in self.core.release_for_steal(n, thief.id):
             if self.metrics is not None:
                 self.metrics.forwards.append((self.sim.now, self.id,
                                               f"steal->{thief.id}"))
@@ -356,72 +390,7 @@ class LoadBalancerSim:
             req.arrival = self.sim.now
         if req.origin_lb is None:
             req.origin_lb = self.id
-        self.queue.append(req)
-        self.peak_queue = max(self.peak_queue, len(self.queue))
-        self._try_dispatch()
-
-    def _local_views(self) -> list[TargetView]:
-        return [v for v in self._replica_snap.values()
-                if self.replicas.get(v.id) is not None
-                and self.replicas[v.id].alive]
-
-    def _try_dispatch(self) -> None:
-        while self.queue:
-            req = self.queue[0]
-            locals_ok = eligible(self._local_views(), self.cfg.pushing,
-                                 self.cfg.spo_limit, self.cfg.tau)
-            if locals_ok:
-                tid = self.policy.select(req, locals_ok)
-                if tid is None:
-                    tid = locals_ok[0].id
-                self.queue.popleft()
-                self._send_local(req, tid)
-                continue
-            if (self.cfg.cross_region and not req.forwarded
-                    and self.remote_lbs and self.remote_policy is not None):
-                remotes_ok = eligible(list(self._lb_snap.values()),
-                                      self.cfg.pushing, self.cfg.spo_limit,
-                                      self.cfg.tau)
-                remotes_ok = [v for v in remotes_ok
-                              if self.remote_lbs[v.id].alive]
-                if remotes_ok:
-                    lbid = self.remote_policy.select(req, remotes_ok)
-                    if lbid is not None:
-                        self.queue.popleft()
-                        self._forward(req, lbid)
-                        continue
-            break   # head-of-line waits for capacity
-
-    def _send_local(self, req: Request, rid: str) -> None:
-        self.policy.on_routed(req, rid)
-        # bump snapshot counts so least-load tie-breaks shift between probes;
-        # availability refreshes at probes (Alg. 1), with optimistic sends
-        # between heartbeats bounded by max_inflight_per_probe
-        snap = self._replica_snap.get(rid)
-        if snap:
-            snap.pending += 1
-            snap.outstanding += 1
-            sent = self._sent_since_probe.get(rid, 0) + 1
-            self._sent_since_probe[rid] = sent
-            if sent >= self.cfg.max_inflight_per_probe:
-                snap.available = False
-        r = self.replicas[rid]
-        self.sim.after(self.net.one_way(self.region, r.region),
-                       lambda: r.enqueue(req))
-
-    def _forward(self, req: Request, lbid: str) -> None:
-        req.forwarded = True
-        self.forwarded_out += 1
-        if self.remote_policy:
-            self.remote_policy.on_routed(req, lbid)
-        snap = self._lb_snap.get(lbid)
-        if snap:
-            snap.queue_len += 1
-        lb = self.remote_lbs[lbid]
-        if self.metrics is not None:
-            self.metrics.forwards.append((self.sim.now, self.id, lbid))
-        self.sim.after(self.net.one_way(self.region, lb.region),
-                       lambda: lb.on_request(req))
+        self.core.on_request(req)
 
 
 # ------------------------------------------------------------------ controller
@@ -437,7 +406,7 @@ class Controller:
         self.net = net
         self.lbs = {lb.id: lb for lb in lbs}
         self.probe_interval = probe_interval
-        self._adopted: dict[str, list[tuple[str, ReplicaSim]]] = {}
+        self.tracker = FailoverTracker()
         self.events: list[tuple[float, str]] = []
         sim.after(probe_interval, self._probe)
 
@@ -449,9 +418,9 @@ class Controller:
 
     def _probe(self) -> None:
         for lb in self.lbs.values():
-            if not lb.alive and lb.id not in self._adopted:
+            if self.tracker.needs_failover(lb.id, lb.alive):
                 self._failover(lb)
-            elif lb.alive and lb.id in self._adopted:
+            elif self.tracker.needs_restore(lb.id, lb.alive):
                 self._restore(lb)
         self.sim.after(self.probe_interval, self._probe)
 
@@ -459,32 +428,36 @@ class Controller:
         host = self._closest_live(dead.region)
         if host is None:
             return
-        moved = []
+        self.tracker.record_failover(dead.id, list(dead.replicas.items()))
         for rid in list(dead.replicas):
             r = dead.remove_replica(rid)
             if r is not None:
                 host.add_replica(r)
-                moved.append((host.id, r))
         # drain the dead LB's queue to the host as well
         while dead.queue:
             req = dead.queue.popleft()
             self.sim.after(self.net.one_way(dead.region, host.region),
                            lambda q=req: host.on_request(q))
-        self._adopted[dead.id] = moved
         self.events.append((self.sim.now, f"failover {dead.id} -> {host.id}"))
 
     def _restore(self, lb: LoadBalancerSim) -> None:
-        for host_id, r in self._adopted.pop(lb.id, []):
-            host = self.lbs[host_id]
-            host.remove_replica(r.id)
+        """Reclaim the replicas whose HOME this LB is, from wherever
+        cascading failovers moved them since."""
+        for rid, r in self.tracker.reclaimable(lb.id):
+            owner = next((x for x in self.lbs.values()
+                          if rid in x.replicas), None)
+            if owner is None or owner is lb:   # removed meanwhile / already home
+                continue
+            owner.remove_replica(rid)
             lb.add_replica(r)
+        self.tracker.mark_restored(lb.id)
         self.events.append((self.sim.now, f"restore {lb.id}"))
 
     def fail_lb(self, lbid: str) -> None:
         self.lbs[lbid].alive = False
 
     def recover_lb(self, lbid: str) -> None:
-        self.lbs[lbid].alive = True
+        self.lbs[lbid].revive()
 
     def mark_straggler(self, replica: ReplicaSim, factor: float) -> None:
         replica.cfg.speed_factor = factor

@@ -21,13 +21,10 @@ import random
 from typing import Optional
 
 from repro.core.metrics import RunMetrics
-from repro.core.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
-                                 ConsistentHash, LeastLoad, PrefixTreePolicy,
-                                 RoundRobin, SGLangRouterLike)
-from repro.core.simulator import (Controller, LBConfig, LoadBalancerSim,
-                                  Network, ReplicaConfig, ReplicaSim, Request,
-                                  Sim)
+from repro.core.simulator import (Controller, LoadBalancerSim, Network,
+                                  ReplicaConfig, ReplicaSim, Request, Sim)
 from repro.core.workloads import SessionSpec, TreeSpec, _tokens
+from repro.routing import build_routing
 
 REGIONS = ("us", "eu", "asia")
 
@@ -41,6 +38,7 @@ class ServingSystem:
         self.variant = variant
         self.metrics = RunMetrics()
         self.replicas: list[ReplicaSim] = []
+        self._region_of: dict[str, str] = {}    # rid -> region (O(1) lookups)
         self.lbs: dict[str, LoadBalancerSim] = {}
         self._rid = itertools.count()
         self._req_id = itertools.count()
@@ -56,18 +54,17 @@ class ServingSystem:
             r = ReplicaSim(self.sim, f"{region}-r{next(self._rid)}", region,
                            dataclasses.replace(cfg))
             self.replicas.append(r)
+            self._region_of[r.id] = region
             out.append(r)
         return out
 
     def _build(self, variant, rpr, rcfg):
-        v = variant.lower()
-        if v in ("rr", "ll", "ch", "sgl", "trie"):
-            # 'trie' = single global-view prefix-trie router (longest match
-            # + least-load exploration) — the Fig. 6 'optimal' stand-in
-            pol = {"rr": RoundRobin, "ll": LeastLoad, "ch": ConsistentHash,
-                   "sgl": SGLangRouterLike, "trie": PrefixTreePolicy}[v]()
-            lb = LoadBalancerSim(self.sim, "lb-us", "us", self.net, pol,
-                                 cfg=LBConfig(pushing=BP, cross_region=False),
+        spec = build_routing(variant)
+        if spec.single_lb:
+            # e.g. 'trie' = single global-view prefix-trie router (longest
+            # match + least-load exploration) — the Fig. 6 'optimal' stand-in
+            lb = LoadBalancerSim(self.sim, "lb-us", "us", self.net,
+                                 spec.local_policy(), cfg=spec.make_config(),
                                  metrics=self.metrics)
             for region, n in rpr.items():
                 for r in self._mk_replicas(region, n, rcfg):
@@ -75,30 +72,11 @@ class ServingSystem:
             self.lbs = {"lb-us": lb}
             return
         # one LB per region
-        def mk_policies():
-            if v in ("skylb", "sp-o", "bp", "steal"):
-                return PrefixTreePolicy(), PrefixTreePolicy()
-            if v == "skylb-ch":
-                return ConsistentHash(), ConsistentHash()
-            if v == "blend":
-                return BlendedScorePolicy(), PrefixTreePolicy()
-            if v == "gke":
-                return RoundRobin(), RoundRobin()
-            if v == "region-local":
-                return LeastLoad(), LeastLoad()
-            raise ValueError(variant)
-        pushing = {"skylb": SP_P, "skylb-ch": SP_P, "blend": SP_P,
-                   "sp-o": SP_O, "bp": BP, "gke": SP_O,
-                   "region-local": SP_P, "steal": SP_P}[v]
-        cross = v != "region-local"
         for region, n in rpr.items():
-            local_pol, remote_pol = mk_policies()
             lb = LoadBalancerSim(
-                self.sim, f"lb-{region}", region, self.net, local_pol,
-                remote_policy=remote_pol,
-                cfg=LBConfig(pushing=pushing, cross_region=cross,
-                             work_stealing=(v == "steal")),
-                metrics=self.metrics)
+                self.sim, f"lb-{region}", region, self.net,
+                spec.local_policy(), remote_policy=spec.remote_policy(),
+                cfg=spec.make_config(), metrics=self.metrics)
             for r in self._mk_replicas(region, n, rcfg):
                 lb.add_replica(r)
             self.lbs[lb.id] = lb
@@ -118,8 +96,7 @@ class ServingSystem:
 
         def wrapped_done(r: Request):
             back = self.net.one_way(
-                next((x.region for x in self.replicas if x.id == r.replica),
-                     r.region), r.region)
+                self._region_of.get(r.replica, r.region), r.region)
             if r.ttft is not None:
                 r.ttft += back          # client-observed first token
             r.finished += back

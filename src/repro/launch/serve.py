@@ -5,7 +5,7 @@ router over several in-process replicas across simulated regions.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b-reduced \
       --requests 24 --max-new 16
-  PYTHONPATH=src python -m repro.launch.serve --multiregion --policy trie
+  PYTHONPATH=src python -m repro.launch.serve --multiregion --variant skylb
 """
 from __future__ import annotations
 
@@ -18,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.policies import make_policy
 from repro.models import build_model
+from repro.routing import build_routing
 from repro.serving import (Engine, EngineConfig, GenRequest, InProcessRouter,
                            SamplingParams)
 
@@ -66,13 +66,14 @@ def serve_single(arch: str, n_requests: int, max_new: int) -> dict:
 
 
 def serve_multiregion(arch: str, n_requests: int, max_new: int,
-                      policy: str = "TRIE") -> dict:
+                      variant: str = "skylb") -> dict:
     cfg = get_config(arch)
     model = build_model(cfg, jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
-    router = InProcessRouter(remote_policy=make_policy(policy))
+    # the same build_routing() spec the simulator's ServingSystem uses
+    router = InProcessRouter.from_spec(build_routing(variant))
     for r, region in enumerate(REGIONS):
-        lb = router.add_region(region, make_policy(policy))
+        lb = router.add_region(region)
         for k in range(2):
             lb.add_engine(f"{region}-r{k}", Engine(
                 cfg, params, EngineConfig(page_size=8, n_pages=128,
@@ -102,11 +103,12 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--multiregion", action="store_true")
-    ap.add_argument("--policy", default="TRIE")
+    ap.add_argument("--variant", default="skylb",
+                    help="routing variant (see repro.routing.VARIANTS)")
     args = ap.parse_args()
     if args.multiregion:
         out = serve_multiregion(args.arch, args.requests, args.max_new,
-                                args.policy.upper())
+                                args.variant.lower())
     else:
         out = serve_single(args.arch, args.requests, args.max_new)
     print(out)

@@ -1,0 +1,25 @@
+"""SkyLB's routing brain, transport-agnostic: policies + pushing modes,
+hash ring, prefix trie, the `RoutingCore` two-layer dispatch engine, and
+the `build_routing()` variant factory.  The discrete-event simulator
+(`repro.core.simulator`) and the real-engine router (`repro.serving.router`)
+are both thin transports around this package.
+"""
+from repro.routing.build import RoutingSpec, VARIANTS, build_routing
+from repro.routing.core import RoutingConfig, RoutingCore, Transport
+from repro.routing.failover import FailoverTracker
+from repro.routing.hashring import HashRing
+from repro.routing.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
+                                    ConsistentHash, LeastLoad, Policy,
+                                    PrefixTreePolicy, RoundRobin,
+                                    SGLangRouterLike, TargetView, eligible,
+                                    make_policy)
+from repro.routing.prefixtree import PrefixTree
+
+__all__ = [
+    "RoutingSpec", "VARIANTS", "build_routing",
+    "RoutingConfig", "RoutingCore", "Transport", "FailoverTracker",
+    "HashRing", "PrefixTree",
+    "BP", "SP_O", "SP_P", "BlendedScorePolicy", "ConsistentHash",
+    "LeastLoad", "Policy", "PrefixTreePolicy", "RoundRobin",
+    "SGLangRouterLike", "TargetView", "eligible", "make_policy",
+]

@@ -1,0 +1,255 @@
+"""Transport-agnostic routing brain (paper §3.2-§3.3, Alg. 1).
+
+One `RoutingCore` per load balancer holds everything that makes SkyLB's
+decisions: heartbeat snapshots of local replicas and peer LBs, pushing-mode
+eligibility, the two-layer dispatch loop, snapshot-optimism accounting
+between probes (`max_inflight_per_probe`), cross-region forwarding, and
+receiver-initiated work stealing.  What it deliberately does NOT know is how
+requests move or time passes — that lives behind the `Transport` protocol,
+so the discrete-event simulator (`repro.core.simulator.LoadBalancerSim`) and
+the real-engine router (`repro.serving.router.InProcessRouter`) run the
+byte-identical decision procedure over different substrates.
+
+Hosts drive the core through four entry points:
+
+  on_request(req)        a request arrives at this LB (local client, a
+                         peer's forward, or a stolen request)
+  refresh_local(views)   a heartbeat probe of local replicas completed
+  refresh_remote(views)  a WAN heartbeat of peer LBs completed
+  maybe_steal()          after a local probe, consider pulling peer work
+
+Requests only need `rid` plus a writable `forwarded` attribute slot (both
+the simulator's `Request` and the engine's `GenRequest` qualify); policies
+additionally read `session_key` / `prompt_tokens`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+from repro.routing.policies import SP_P, Policy, TargetView, eligible
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """How a RoutingCore's decisions reach the world.
+
+    Implementations own latency (WAN one-way delays, tick queues, zero),
+    liveness, and the clock; the core owns the decisions.
+    """
+
+    def now(self) -> float:
+        """Current time (simulated seconds, ticks — any monotonic unit)."""
+        ...
+
+    def target_alive(self, target_id: str) -> bool:
+        """Is this local replica/engine currently usable?"""
+        ...
+
+    def peer_alive(self, peer_id: str) -> bool:
+        """Is this peer LB currently usable?"""
+        ...
+
+    def deliver(self, req, target_id: str) -> None:
+        """Hand `req` to a local replica/engine (transport adds latency)."""
+        ...
+
+    def forward(self, req, peer_id: str) -> None:
+        """Hand `req` to a peer LB (transport adds WAN latency)."""
+        ...
+
+    def steal_request(self, peer_id: str, n: int) -> None:
+        """Ask a peer LB to release up to n queued requests to us."""
+        ...
+
+
+@dataclasses.dataclass
+class RoutingConfig:
+    pushing: str = SP_P             # BP | SP-O | SP-P
+    spo_limit: int = 24
+    tau: int = 4                    # remote-forward queue buffer
+    probe_interval: float = 0.05
+    # cross-region heartbeats ride the WAN: they are refreshed slower than
+    # local probes (>= one RTT; the paper's regions are 140-200 ms apart)
+    remote_probe_interval: float = 0.2
+    cross_region: bool = True       # two-layer forwarding enabled
+    # SP-P optimism bound: between heartbeats the LB may send at most this
+    # many requests to a replica last seen with an empty pending queue.
+    # Alg. 1 is unbounded between probes (availability only refreshes at
+    # heartbeats), so the default is high — a backstop, not a throttle;
+    # lowering it trades burst absorption for stricter queue control.
+    max_inflight_per_probe: int = 64
+    # BEYOND-PAPER work stealing (paper §6 cites stealing > shedding for
+    # CPU loads): an idle LB PULLS from the most-backlogged peer instead of
+    # waiting for that peer to push. Complements SP-P forwarding, which is
+    # sender-initiated (shedding-style).
+    work_stealing: bool = False
+    steal_threshold: int = 4        # only steal from queues deeper than this
+    steal_batch: int = 2            # requests pulled per steal
+    # Record ("local"|"forward"|"steal", rid, target) tuples for parity
+    # tests / tracing. Off by default (unbounded list).
+    record_decisions: bool = False
+
+
+class RoutingCore:
+    """The single implementation of SkyLB eligibility + two-layer dispatch."""
+
+    def __init__(self, lb_id: str, policy: Policy,
+                 remote_policy: Optional[Policy] = None,
+                 cfg: Optional[RoutingConfig] = None,
+                 transport: Optional[Transport] = None):
+        if transport is None:
+            raise ValueError("RoutingCore requires a Transport")
+        self.id = lb_id
+        self.policy = policy
+        self.remote_policy = remote_policy
+        self.cfg = cfg if cfg is not None else RoutingConfig()
+        self.transport = transport
+        self.queue: deque = deque()
+        # probe snapshots (stale between probes — like real heartbeats)
+        self._replica_snap: dict[str, TargetView] = {}
+        self._lb_snap: dict[str, TargetView] = {}
+        self._sent_since_probe: dict[str, int] = {}
+        self.forwarded_out = 0
+        self.peak_queue = 0
+        self.decisions: Optional[list[tuple]] = (
+            [] if self.cfg.record_decisions else None)
+
+    # ---- topology
+    def target_added(self, view: TargetView) -> None:
+        """A local replica joined (fresh view, routable before next probe)."""
+        self.policy.on_target_added(view.id)
+        self._replica_snap[view.id] = view
+
+    def target_removed(self, target_id: str) -> None:
+        self.policy.on_target_removed(target_id)
+        self._replica_snap.pop(target_id, None)
+
+    def peer_added(self, peer_id: str) -> None:
+        if self.remote_policy is not None:
+            self.remote_policy.on_target_added(peer_id)
+
+    # ---- availability monitor (Alg.1 MonitorAvailability)
+    def refresh_local(self, views: Sequence[TargetView]) -> None:
+        """A local heartbeat completed: replace snapshots, reset the
+        between-probe optimism budget, and drain what became routable."""
+        self._sent_since_probe.clear()
+        for v in views:
+            self._replica_snap[v.id] = v
+        self.try_dispatch()
+
+    def refresh_remote(self, views: Sequence[TargetView]) -> None:
+        """A WAN heartbeat of peer LBs completed."""
+        for v in views:
+            self._lb_snap[v.id] = v
+        self.try_dispatch()
+
+    def n_avail_local(self) -> int:
+        return sum(1 for v in self._replica_snap.values()
+                   if v.available and self.transport.target_alive(v.id))
+
+    # ---- request path (Alg.1 HandleRequest)
+    def on_request(self, req) -> None:
+        self.queue.append(req)
+        self.peak_queue = max(self.peak_queue, len(self.queue))
+        self.try_dispatch()
+
+    def _local_views(self) -> list[TargetView]:
+        return [v for v in self._replica_snap.values()
+                if self.transport.target_alive(v.id)]
+
+    def try_dispatch(self) -> None:
+        """Two-layer dispatch: drain the FCFS queue head while some local
+        replica is eligible; else forward the head once across regions;
+        else the head waits for capacity (later arrivals wait behind it)."""
+        cfg = self.cfg
+        while self.queue:
+            req = self.queue[0]
+            locals_ok = eligible(self._local_views(), cfg.pushing,
+                                 cfg.spo_limit, cfg.tau)
+            if locals_ok:
+                tid = self.policy.select(req, locals_ok)
+                if tid is None:
+                    tid = locals_ok[0].id
+                self.queue.popleft()
+                self._send_local(req, tid)
+                continue
+            if (cfg.cross_region and not getattr(req, "forwarded", False)
+                    and self._lb_snap and self.remote_policy is not None):
+                remotes_ok = eligible(list(self._lb_snap.values()),
+                                      cfg.pushing, cfg.spo_limit, cfg.tau)
+                remotes_ok = [v for v in remotes_ok
+                              if self.transport.peer_alive(v.id)]
+                if remotes_ok:
+                    lbid = self.remote_policy.select(req, remotes_ok)
+                    if lbid is not None:
+                        self.queue.popleft()
+                        self._forward(req, lbid)
+                        continue
+            break   # head-of-line waits for capacity
+
+    def _send_local(self, req, rid: str) -> None:
+        self.policy.on_routed(req, rid)
+        # bump snapshot counts so least-load tie-breaks shift between probes;
+        # availability refreshes at probes (Alg. 1), with optimistic sends
+        # between heartbeats bounded by max_inflight_per_probe
+        snap = self._replica_snap.get(rid)
+        if snap:
+            snap.pending += 1
+            snap.outstanding += 1
+            sent = self._sent_since_probe.get(rid, 0) + 1
+            self._sent_since_probe[rid] = sent
+            if sent >= self.cfg.max_inflight_per_probe:
+                snap.available = False
+        if self.decisions is not None:
+            self.decisions.append(("local", req.rid, rid))
+        self.transport.deliver(req, rid)
+
+    def _forward(self, req, lbid: str) -> None:
+        req.forwarded = True
+        self.forwarded_out += 1
+        if self.remote_policy:
+            self.remote_policy.on_routed(req, lbid)
+        snap = self._lb_snap.get(lbid)
+        if snap:
+            snap.queue_len += 1
+        if self.decisions is not None:
+            self.decisions.append(("forward", req.rid, lbid))
+        self.transport.forward(req, lbid)
+
+    # ---- work stealing (beyond-paper; receiver-initiated rebalancing)
+    def maybe_steal(self) -> None:
+        """Idle here + deep queue there => pull work (one steal per probe)."""
+        if not self.cfg.work_stealing:
+            return
+        if self.queue or self.n_avail_local() == 0 or not self._lb_snap:
+            return
+        # dead peers advertise sentinel (10**9) queue lengths; skip them or
+        # one downed LB would monopolize (and void) every steal attempt
+        victim = max((v for v in self._lb_snap.values()
+                      if self.transport.peer_alive(v.id)),
+                     key=lambda v: v.queue_len, default=None)
+        if victim is None or victim.queue_len <= self.cfg.steal_threshold:
+            return
+        self.transport.steal_request(victim.id, self.cfg.steal_batch)
+
+    def release_for_steal(self, n: int,
+                          thief_id: Optional[str] = None) -> list:
+        """A peer with idle capacity asks for up to n TAIL requests (the
+        head keeps local FCFS fairness). Never re-steal forwarded work.
+        Returns the released requests; the host delivers them."""
+        out = []
+        for _ in range(n):
+            if len(self.queue) <= self.cfg.steal_threshold:
+                break
+            req = self.queue.pop()          # tail
+            if getattr(req, "forwarded", False):
+                self.queue.append(req)      # don't bounce; put it back
+                break
+            req.forwarded = True            # one WAN hop max, like _forward
+            self.forwarded_out += 1
+            if self.decisions is not None:
+                self.decisions.append(("steal", req.rid, thief_id))
+            out.append(req)
+        return out

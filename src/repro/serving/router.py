@@ -1,108 +1,297 @@
-"""In-process SkyLB router over REAL engines: the same Policy / eligibility
-objects the simulator uses (repro.core.policies), but the TargetViews are
-probed from live Engine instances and routing drives actual JAX prefill /
-decode steps. This is the two-layer system with the network collapsed to
-zero latency — used by tests and the serve_multiregion example to show the
-LB logic and the engine agree on SP-P semantics end-to-end.
+"""In-process SkyLB router over REAL engines, driven by the same
+transport-agnostic `repro.routing.RoutingCore` as the discrete-event
+simulator: the TargetViews are probed from live Engine instances and routing
+drives actual JAX prefill / decode steps.
+
+Time is ticks (one `step()` = one continuous-batching iteration everywhere).
+The WAN is modeled as tick-delayed delivery queues: a cross-region forward,
+steal, or failover handoff arrives `wan_delay_ticks` later, and heartbeats
+refresh every `probe_every` (local) / `remote_probe_every` (remote) ticks —
+so the engine path sees the same stale-snapshot regime, work stealing, and
+controller-style LB failover the simulator models, just with real tokens
+moving through real paged KV caches.
 """
 from __future__ import annotations
 
+import dataclasses
+import heapq
+import itertools
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
-from repro.core.policies import (SP_P, Policy, TargetView, eligible)
+from repro.routing import (RoutingConfig, RoutingCore, RoutingSpec, SP_P,
+                           LeastLoad, Policy, TargetView, build_routing)
+from repro.routing.failover import FailoverTracker
 from repro.serving.engine import Engine
 from repro.serving.request import GenRequest, GenResult
 
 
+class _TickTransport:
+    """Transport for RoutingCore over in-process engines: latency = ticks,
+    delivery via the router's mailbox heap."""
+
+    def __init__(self, router: "InProcessRouter", lb: "_RegionLB"):
+        self.router = router
+        self.lb = lb
+
+    def now(self) -> float:
+        return float(self.router.tick)
+
+    def target_alive(self, target_id: str) -> bool:
+        return target_id in self.lb.engines
+
+    def peer_alive(self, peer_id: str) -> bool:
+        peer = self.router.lbs.get(peer_id)
+        return peer is not None and peer.alive
+
+    def deliver(self, req: GenRequest, target_id: str) -> None:
+        self.router._after(
+            self.router.local_delay_ticks,
+            lambda: self.router._deliver_engine(self.lb, target_id, req))
+
+    def forward(self, req: GenRequest, peer_id: str) -> None:
+        self.router._after(self.router.wan_delay_ticks,
+                           lambda: self.router._arrive(peer_id, req))
+
+    def steal_request(self, peer_id: str, n: int) -> None:
+        self.router._after(
+            self.router.wan_delay_ticks,
+            lambda: self.router._serve_steal(peer_id, self.lb.region, n))
+
+
 class _RegionLB:
-    def __init__(self, region: str, policy: Policy, pushing: str = SP_P,
-                 tau: int = 4):
+    """One region's LB: a RoutingCore probing live Engine instances."""
+
+    def __init__(self, router: "InProcessRouter", region: str, policy: Policy,
+                 remote_policy: Optional[Policy], cfg: RoutingConfig):
+        self.router = router
         self.region = region
         self.policy = policy
-        self.pushing = pushing
-        self.tau = tau
+        self.alive = True
         self.engines: dict[str, Engine] = {}
-        self.queue: deque[GenRequest] = deque()
-        self.forwarded_out = 0
+        self.core = RoutingCore(region, policy, remote_policy, cfg,
+                                _TickTransport(router, self))
+
+    @property
+    def queue(self) -> deque:
+        return self.core.queue
+
+    @property
+    def forwarded_out(self) -> int:
+        return self.core.forwarded_out
 
     def add_engine(self, eid: str, engine: Engine) -> None:
         self.engines[eid] = engine
-        self.policy.on_target_added(eid)
+        self.router._engine_home[eid] = self
+        self.core.target_added(self._view_of(eid, engine))
+
+    def remove_engine(self, eid: str) -> Optional[Engine]:
+        e = self.engines.pop(eid, None)
+        self.core.target_removed(eid)
+        self.router._engine_home.pop(eid, None)
+        return e
+
+    # ---- what probes see
+    def _view_of(self, eid: str, e: Engine) -> TargetView:
+        return TargetView(id=eid, outstanding=e.outstanding(),
+                          pending=e.pending_count(), available=e.available())
 
     def views(self) -> list[TargetView]:
-        return [TargetView(id=eid, outstanding=e.outstanding(),
-                           pending=e.pending_count(), available=e.available())
-                for eid, e in self.engines.items()]
+        return [self._view_of(eid, e) for eid, e in self.engines.items()]
 
     def n_avail(self) -> int:
         return sum(1 for e in self.engines.values() if e.available())
 
     def as_remote_view(self) -> TargetView:
-        return TargetView(id=self.region, n_avail_replicas=self.n_avail(),
-                          queue_len=len(self.queue), available=True)
+        if not self.alive:
+            return TargetView.unavailable(self.region)
+        return TargetView(
+            id=self.region, n_avail_replicas=self.n_avail(),
+            queue_len=len(self.queue),
+            outstanding=sum(e.outstanding() for e in self.engines.values()))
 
 
 class InProcessRouter:
     """Two-layer SkyLB over in-process engines (one LB per region)."""
 
     def __init__(self, remote_policy: Optional[Policy] = None,
-                 pushing: str = SP_P, cross_region: bool = True):
-        self.lbs: dict[str, _RegionLB] = {}
+                 pushing: str = SP_P, cross_region: bool = True, *,
+                 work_stealing: bool = False,
+                 cfg: Optional[RoutingConfig] = None,
+                 wan_delay_ticks: int = 1, local_delay_ticks: int = 0,
+                 probe_every: int = 1, remote_probe_every: int = 2):
         self.remote_policy = remote_policy
-        self.pushing = pushing
-        self.cross_region = cross_region
+        self.cfg = (dataclasses.replace(cfg) if cfg is not None
+                    else RoutingConfig(pushing=pushing,
+                                       cross_region=cross_region,
+                                       work_stealing=work_stealing))
+        self.lbs: dict[str, _RegionLB] = {}
+        self.wan_delay_ticks = wan_delay_ticks
+        self.local_delay_ticks = local_delay_ticks
+        self.probe_every = max(1, probe_every)
+        self.remote_probe_every = max(1, remote_probe_every)
+        self.tick = 0
+        self._mail: list[tuple[int, int, Callable]] = []   # (due, seq, fn)
+        self._seq = itertools.count()
+        self._engine_home: dict[str, _RegionLB] = {}
+        self.tracker = FailoverTracker()
+        self._spec: Optional[RoutingSpec] = None
+        self.events: list[tuple[int, str]] = []
 
-    def add_region(self, region: str, policy: Policy) -> _RegionLB:
-        lb = _RegionLB(region, policy, self.pushing)
+    @classmethod
+    def from_spec(cls, spec: RoutingSpec | str,
+                  cfg_overrides: Optional[dict] = None,
+                  **kw) -> "InProcessRouter":
+        """Build from a `build_routing()` spec (or variant name): the same
+        policies/pushing/stealing wiring the simulator's ServingSystem uses.
+        `cfg_overrides` tweaks RoutingConfig fields (e.g. a tighter
+        `max_inflight_per_probe` for tick-granularity heartbeats).
+        """
+        if isinstance(spec, str):
+            spec = build_routing(spec)
+        router = cls(cfg=spec.make_config(**(cfg_overrides or {})), **kw)
+        router._spec = spec
+        return router
+
+    def add_region(self, region: str,
+                   policy: Optional[Policy] = None) -> _RegionLB:
+        if policy is None:
+            policy = (self._spec.local_policy() if self._spec is not None
+                      else LeastLoad())
+        # spec-built routers give each region its OWN remote policy instance
+        # (matching the simulator's per-LB wiring); the legacy constructor
+        # arg shares one instance across regions, as the old router did
+        if self._spec is not None and self._spec.remote_policy is not None:
+            remote_policy = self._spec.remote_policy()
+        else:
+            remote_policy = self.remote_policy
+        lb = _RegionLB(self, region, policy, remote_policy,
+                       dataclasses.replace(self.cfg))
         self.lbs[region] = lb
-        if self.remote_policy is not None:
-            self.remote_policy.on_target_added(region)
+        for other in self.lbs.values():
+            if other is not lb:
+                other.core.peer_added(region)
+                lb.core.peer_added(other.region)
         return lb
+
+    # ------------------------------------------------------------ mailbox
+    def _after(self, delay_ticks: int, fn: Callable) -> None:
+        if delay_ticks <= 0:
+            fn()
+            return
+        heapq.heappush(self._mail,
+                       (self.tick + delay_ticks, next(self._seq), fn))
+
+    def _run_mail(self) -> None:
+        while self._mail and self._mail[0][0] <= self.tick:
+            _, _, fn = heapq.heappop(self._mail)
+            fn()
+
+    # ------------------------------------------------------------ arrival
+    def _live_fallback(self) -> Optional[_RegionLB]:
+        return next((x for x in self.lbs.values() if x.alive), None)
+
+    def _arrive(self, region: str, req: GenRequest) -> None:
+        """A request reaches a region LB (forward, steal, or failover)."""
+        lb = self.lbs.get(region)
+        if lb is None or not lb.alive:
+            lb = self._live_fallback() or lb
+        if lb is not None:
+            lb.core.on_request(req)
+
+    def _deliver_engine(self, lb: _RegionLB, eid: str,
+                        req: GenRequest) -> None:
+        eng = lb.engines.get(eid)
+        if eng is None:                       # engine moved by failover
+            home = self._engine_home.get(eid)
+            if home is not None:
+                eng = home.engines.get(eid)
+        if eng is not None:
+            eng.submit(req)
+        else:                                 # engine gone: route again
+            lb.core.on_request(req)
+
+    def _serve_steal(self, victim_region: str, thief_region: str,
+                     n: int) -> None:
+        victim = self.lbs.get(victim_region)
+        if victim is None or not victim.alive:
+            return
+        for req in victim.core.release_for_steal(n, thief_region):
+            self._after(self.wan_delay_ticks,
+                        lambda q=req: self._arrive(thief_region, q))
+
+    # ------------------------------------------------------------ failover
+    def fail_lb(self, region: str) -> None:
+        self.lbs[region].alive = False
+
+    def recover_lb(self, region: str) -> None:
+        self.lbs[region].alive = True
+
+    def _controller_check(self) -> None:
+        """Controller-style LB failover (paper §4.2) on the engine path:
+        a dead LB's engines and queue move to a live host; on recovery the
+        LB reclaims the engines whose HOME region it is, from wherever
+        cascading failures moved them."""
+        for region, lb in self.lbs.items():
+            if self.tracker.needs_failover(region, lb.alive):
+                host = self._live_fallback()
+                if host is None:
+                    continue
+                self.tracker.record_failover(region,
+                                             list(lb.engines.items()))
+                for eid in list(lb.engines):
+                    e = lb.remove_engine(eid)
+                    if e is not None:
+                        host.add_engine(eid, e)
+                while lb.core.queue:
+                    req = lb.core.queue.popleft()
+                    self._after(self.wan_delay_ticks,
+                                lambda q=req: self._arrive(host.region, q))
+                self.events.append(
+                    (self.tick, f"failover {region} -> {host.region}"))
+            elif self.tracker.needs_restore(region, lb.alive):
+                for eid, _e in self.tracker.reclaimable(region):
+                    home = self._engine_home.get(eid)
+                    if home is None or home is lb:
+                        continue
+                    e = home.remove_engine(eid)
+                    if e is not None:
+                        lb.add_engine(eid, e)
+                self.tracker.mark_restored(region)
+                self.events.append((self.tick, f"restore {region}"))
 
     # ------------------------------------------------------------ routing
     def submit(self, region: str, req: GenRequest) -> None:
-        self.lbs[region].queue.append(req)
-
-    def _dispatch_lb(self, lb: _RegionLB) -> bool:
-        """Try to move lb's head-of-queue one hop. Returns True if moved."""
-        if not lb.queue:
-            return False
-        req = lb.queue[0]
-        ok = eligible(lb.views(), lb.pushing, tau=self.tau_for(lb))
-        if ok:
-            eid = lb.policy.select(req, ok) or ok[0].id
-            lb.queue.popleft()
-            lb.policy.on_routed(req, eid)
-            lb.engines[eid].submit(req)
-            return True
-        if self.cross_region and self.remote_policy is not None:
-            remotes = [x.as_remote_view() for r, x in self.lbs.items()
-                       if r != lb.region]
-            ok_r = eligible(remotes, lb.pushing, tau=self.tau_for(lb))
-            if ok_r:
-                rid = self.remote_policy.select(req, ok_r)
-                if rid is not None:
-                    lb.queue.popleft()
-                    self.remote_policy.on_routed(req, rid)
-                    lb.forwarded_out += 1
-                    self.lbs[rid].queue.append(req)
-                    return True
-        return False
-
-    def tau_for(self, lb: _RegionLB) -> int:
-        return lb.tau
+        lb = self.lbs[region]
+        if not lb.alive:
+            lb = self._live_fallback() or lb
+        lb.core.on_request(req)
 
     # ------------------------------------------------------------ driving
     def step(self) -> int:
-        """One global tick: route queued requests, then step every engine."""
+        """One global tick: deliver in-flight WAN messages, fire due
+        heartbeats (which dispatch), run failover, then step every engine
+        one continuous-batching iteration."""
+        self._run_mail()
+        if self.tick % self.probe_every == 0:
+            for lb in self.lbs.values():
+                if lb.alive:
+                    lb.core.refresh_local(lb.views())
+        if self.tick % self.remote_probe_every == 0:
+            for lb in self.lbs.values():
+                if lb.alive:
+                    lb.core.refresh_remote(
+                        [o.as_remote_view() for o in self.lbs.values()
+                         if o is not lb])
         for lb in self.lbs.values():
-            while self._dispatch_lb(lb):
-                pass
+            if lb.alive:
+                lb.core.maybe_steal()
+        self._controller_check()
         done = 0
         for lb in self.lbs.values():
             for e in lb.engines.values():
                 done += e.step()
+        self.tick += 1
         return done
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
@@ -112,9 +301,11 @@ class InProcessRouter:
                 break
 
     def idle(self) -> bool:
-        return all(not lb.queue and all(
-            not e.pending and not e.running for e in lb.engines.values())
-            for lb in self.lbs.values())
+        return (not self._mail
+                and all(not lb.queue and all(
+                    not e.pending and not e.running
+                    for e in lb.engines.values())
+                    for lb in self.lbs.values()))
 
     def results(self) -> dict[int, GenResult]:
         out: dict[int, GenResult] = {}

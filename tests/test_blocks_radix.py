@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.serving.blocks import BlockAllocator

@@ -5,6 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.elastic import (MeshPlan, StragglerPolicy,

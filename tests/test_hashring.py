@@ -3,6 +3,9 @@ from __future__ import annotations
 
 from collections import Counter
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hashring import HashRing

@@ -1,6 +1,9 @@
 """PrefixTree: SkyLB's trie with per-node target sets (§3.2)."""
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.prefixtree import PrefixTree

@@ -1,0 +1,243 @@
+"""RoutingCore is transport-agnostic: identical request traces + TargetView
+sequences must yield byte-identical routing decisions (targets, forwards,
+steals) no matter which Transport carries them — that's what lets the
+discrete-event simulator and the real-engine router share one brain.
+Plus unit tests for the Transport protocol surface itself."""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from repro.routing import (RoutingConfig, RoutingCore, TargetView, Transport,
+                           LeastLoad, PrefixTreePolicy)
+
+
+@dataclasses.dataclass
+class Req:
+    rid: int
+    session_key: str = "u"
+    prompt_tokens: tuple = ()
+    forwarded: bool = False
+
+
+class SimStyleTransport:
+    """Sim-flavoured transport: float clock, latency-delayed delivery via an
+    event heap (drained by the test harness)."""
+
+    def __init__(self, latency: float = 0.07):
+        self.t = 0.0
+        self.latency = latency
+        self._heap: list = []
+        self._seq = 0
+        self.sent: list[tuple] = []
+        self.steal_asks: list[tuple] = []
+
+    def now(self) -> float:
+        return self.t
+
+    def target_alive(self, tid: str) -> bool:
+        return True
+
+    def peer_alive(self, pid: str) -> bool:
+        return True
+
+    def deliver(self, req, tid: str) -> None:
+        self._push(self.latency, ("local", req.rid, tid))
+
+    def forward(self, req, pid: str) -> None:
+        self._push(self.latency, ("forward", req.rid, pid))
+
+    def steal_request(self, pid: str, n: int) -> None:
+        self.steal_asks.append((pid, n))
+
+    def _push(self, dt: float, item) -> None:
+        heapq.heappush(self._heap, (self.t + dt, self._seq, item))
+        self._seq += 1
+
+    def drain(self) -> None:
+        while self._heap:
+            t, _, item = heapq.heappop(self._heap)
+            self.t = max(self.t, t)
+            self.sent.append(item)
+
+
+class TickStyleTransport:
+    """Engine-flavoured transport: integer tick clock, mailbox queues."""
+
+    def __init__(self, delay_ticks: int = 1):
+        self.tick = 0
+        self.delay_ticks = delay_ticks
+        self._mail: list[tuple[int, tuple]] = []
+        self.sent: list[tuple] = []
+        self.steal_asks: list[tuple] = []
+
+    def now(self) -> float:
+        return float(self.tick)
+
+    def target_alive(self, tid: str) -> bool:
+        return True
+
+    def peer_alive(self, pid: str) -> bool:
+        return True
+
+    def deliver(self, req, tid: str) -> None:
+        self._mail.append((self.tick + self.delay_ticks,
+                           ("local", req.rid, tid)))
+
+    def forward(self, req, pid: str) -> None:
+        self._mail.append((self.tick + self.delay_ticks,
+                           ("forward", req.rid, pid)))
+
+    def steal_request(self, pid: str, n: int) -> None:
+        self.steal_asks.append((pid, n))
+
+    def drain(self) -> None:
+        while self._mail:
+            due, item = self._mail.pop(0)
+            self.tick = max(self.tick, due)
+            self.sent.append(item)
+
+
+def _cfg(**kw) -> RoutingConfig:
+    return RoutingConfig(record_decisions=True, **kw)
+
+
+def _drive_trace(core: RoutingCore) -> None:
+    """One scripted trace: fresh probe, a burst, a congested probe that
+    forces forwarding, a recovery probe that drains the backlog."""
+    core.peer_added("eu")
+    core.refresh_remote([TargetView(id="eu", n_avail_replicas=2)])
+    core.refresh_local([TargetView(id="r0"), TargetView(id="r1")])
+    for i in range(4):
+        core.on_request(Req(rid=i, prompt_tokens=(1, 2, 3, i)))
+    # heartbeat sees both replicas backlogged -> SP-P holds, head forwards
+    core.refresh_local([
+        TargetView(id="r0", outstanding=6, pending=3, available=False),
+        TargetView(id="r1", outstanding=4, pending=1, available=False)])
+    for i in range(4, 9):
+        core.on_request(Req(rid=i, prompt_tokens=(9, 9, i)))
+    # forwarded arrivals from a peer must not bounce again
+    core.on_request(Req(rid=100, prompt_tokens=(7,), forwarded=True))
+    # recovery heartbeat drains whatever queued
+    core.refresh_local([TargetView(id="r0"), TargetView(id="r1")])
+
+
+def _mk_core(transport, policy=None, **cfg_kw) -> RoutingCore:
+    return RoutingCore("lb-us", policy or PrefixTreePolicy(),
+                       remote_policy=PrefixTreePolicy(),
+                       cfg=_cfg(**cfg_kw), transport=transport)
+
+
+def test_parity_sim_vs_tick_transport():
+    """The tentpole invariant: byte-identical decision logs across the two
+    transport styles backing the simulator and the JAX engine path."""
+    sim_t, tick_t = SimStyleTransport(), TickStyleTransport()
+    sim_core, tick_core = _mk_core(sim_t), _mk_core(tick_t)
+    _drive_trace(sim_core)
+    _drive_trace(tick_core)
+    sim_t.drain()
+    tick_t.drain()
+    assert sim_core.decisions == tick_core.decisions
+    assert sim_core.decisions, "trace must actually route something"
+    kinds = {d[0] for d in sim_core.decisions}
+    assert "local" in kinds and "forward" in kinds
+    # the transports carried exactly what the cores decided, in order
+    assert sim_t.sent == [(k, r, t) for k, r, t in sim_core.decisions]
+    assert tick_t.sent == [(k, r, t) for k, r, t in tick_core.decisions]
+    assert sim_core.forwarded_out == tick_core.forwarded_out > 0
+
+
+def test_parity_work_stealing():
+    logs = []
+    for transport in (SimStyleTransport(), TickStyleTransport()):
+        core = _mk_core(transport, policy=LeastLoad(), work_stealing=True,
+                        steal_threshold=1, steal_batch=3)
+        core.peer_added("eu")
+        core.refresh_local([TargetView(id="r0")])    # idle local capacity
+        core.refresh_remote([TargetView(id="eu", queue_len=7,
+                                        n_avail_replicas=0)])
+        core.maybe_steal()
+        assert transport.steal_asks == [("eu", 3)]
+        # now play the victim side: deep queue, nothing eligible locally
+        victim = _mk_core(type(transport)(), policy=LeastLoad(),
+                          steal_threshold=1)
+        victim.refresh_local([TargetView(id="v0", available=False)])
+        for i in range(5):
+            victim.on_request(Req(rid=i))
+        released = victim.release_for_steal(3, "lb-us")
+        assert [r.rid for r in released] == [4, 3, 2]   # tail first, FCFS head kept
+        assert all(r.forwarded for r in released)
+        logs.append((victim.decisions, victim.forwarded_out))
+    assert logs[0] == logs[1]
+
+
+def test_real_host_transports_satisfy_protocol():
+    """The simulator's and the engine router's transports both implement the
+    runtime-checkable Transport protocol."""
+    from repro.core.simulator import LoadBalancerSim, Network, Sim
+    from repro.serving.router import InProcessRouter
+
+    lb = LoadBalancerSim(Sim(), "lb-us", "us", Network(), LeastLoad())
+    assert isinstance(lb.core.transport, Transport)
+    router = InProcessRouter()
+    rlb = router.add_region("us", LeastLoad())
+    assert isinstance(rlb.core.transport, Transport)
+
+
+def test_optimism_bound_between_probes():
+    t = TickStyleTransport()
+    core = _mk_core(t, policy=LeastLoad(), max_inflight_per_probe=2)
+    core.refresh_local([TargetView(id="r0")])
+    for i in range(3):
+        core.on_request(Req(rid=i))
+    # two optimistic sends per probe window; the third waits at the LB
+    assert [d for d in core.decisions] == [("local", 0, "r0"),
+                                           ("local", 1, "r0")]
+    assert len(core.queue) == 1
+    core.refresh_local([TargetView(id="r0")])       # next heartbeat
+    assert core.decisions[-1] == ("local", 2, "r0")
+    assert not core.queue
+
+
+def test_forwarded_requests_never_bounce():
+    t = TickStyleTransport()
+    core = _mk_core(t)
+    core.peer_added("eu")
+    core.refresh_local([TargetView(id="r0", available=False)])
+    core.refresh_remote([TargetView(id="eu", n_avail_replicas=1)])
+    req = Req(rid=1, forwarded=True)
+    core.on_request(req)
+    assert not core.decisions            # neither local nor re-forwarded
+    assert list(core.queue) == [req]     # waits for local capacity
+    fresh = Req(rid=2)
+    core.on_request(fresh)
+    # head-of-line (forwarded) blocks; FCFS is preserved
+    assert len(core.queue) == 2 and core.queue[0] is req
+
+
+def test_steal_skips_dead_peer_victims():
+    """A downed peer advertises a sentinel queue length; it must not
+    monopolize (and void) every steal attempt while a live peer backlogs."""
+    t = TickStyleTransport()
+    t.peer_alive = lambda pid: pid != "eu"          # eu is down
+    core = _mk_core(t, policy=LeastLoad(), work_stealing=True,
+                    steal_threshold=1, steal_batch=2)
+    core.refresh_local([TargetView(id="r0")])
+    core.refresh_remote([
+        TargetView(id="eu", available=False, queue_len=10 ** 9,
+                   n_avail_replicas=0),
+        TargetView(id="asia", queue_len=6, n_avail_replicas=0)])
+    core.maybe_steal()
+    assert t.steal_asks == [("asia", 2)]
+
+
+def test_steal_never_releases_forwarded_tail():
+    core = _mk_core(TickStyleTransport(), policy=LeastLoad(),
+                    steal_threshold=0)
+    core.refresh_local([TargetView(id="r0", available=False)])
+    for i in range(3):
+        core.on_request(Req(rid=i))
+    core.on_request(Req(rid=3, forwarded=True))     # tail is stolen work
+    released = core.release_for_steal(4, "thief")
+    assert released == []                # forwarded tail stops the steal
+    assert len(core.queue) == 4

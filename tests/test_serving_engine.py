@@ -143,11 +143,16 @@ def test_router_two_layer_spp(qwen_reduced, qwen_model_params):
             EngineConfig(page_size=8, n_pages=n_pages, max_batch=2,
                          max_seq_len=128, prefill_pad=16)))
     rng = np.random.default_rng(6)
+    # submit across probe windows (the unified RoutingCore refreshes
+    # availability at heartbeats, like the simulator — a single-tick burst
+    # would ride the optimistic between-probe budget instead)
     for i in range(5):
         router.submit("us", GenRequest(
             prompt_tokens=tuple(rng.integers(0, qwen_reduced.vocab,
                                              size=18).tolist()),
             sampling=SamplingParams(max_new_tokens=6)))
+        router.step()
+        router.step()
     router.run_until_idle()
     res = router.results()
     assert len(res) == 5

@@ -184,6 +184,30 @@ def test_controller_failover_and_restore():
     assert any("restore" in e for _, e in ctl.events)
 
 
+def test_recovered_lb_resumes_probing_and_dispatch():
+    """recover_lb must restart the heartbeat loops (they die with the LB);
+    otherwise snapshots stay stale forever and local dispatch wedges."""
+    sim = Sim()
+    net = Network()
+    us = _mk_lb(sim, net, region="us", n_replicas=1, kv_budget=400)
+    eu = _mk_lb(sim, net, region="eu", n_replicas=1, kv_budget=400)
+    us.peer(eu)
+    eu.peer(us)
+    ctl = Controller(sim, net, [us, eu], probe_interval=0.1)
+    ctl.fail_lb("lb-eu")
+    sim.run(until=1.0)
+    ctl.recover_lb("lb-eu")
+    sim.run(until=2.0)                   # replicas restored to eu
+    done = []
+    for i in range(3):
+        q = _req(i, prompt_len=30, out_len=8)
+        q.done_cb = done.append
+        eu.on_request(q)
+    sim.run(until=120)
+    assert len(done) == 3
+    assert all(x.replica.startswith("eu") for x in done)   # served LOCALLY
+
+
 def test_requests_survive_lb_failure():
     sim = Sim()
     net = Network()

@@ -1,6 +1,9 @@
 """Workload generators + the paper's prefix-similarity metric."""
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.workloads import (diurnal_series, multiturn,
