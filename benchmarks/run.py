@@ -1,5 +1,9 @@
 """Benchmark harness: one module per paper figure + the kernel sweep.
-Runs everything, prints per-figure results, writes artifacts/bench/*.json.
+Runs everything, prints per-figure results, writes artifacts/bench/*.json
+plus a consolidated BENCH_summary.json at the repo root (throughput / TTFT
+/ hit-rate per figure) that scripts/ci.sh diffs against the committed
+baseline (artifacts/bench-smoke/BENCH_summary.json) so the perf trajectory
+is tracked across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig9] [--smoke]
 
@@ -13,6 +17,44 @@ import argparse
 import json
 import os
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# deterministic sim metrics worth tracking across PRs (wall-clock metrics
+# like the kernel sweep's *_us timings are deliberately NOT matched)
+SUMMARY_KEYS = frozenset({
+    "tok_s", "req_s", "ttft_p50", "ttft_p90", "e2e_p50", "hit_rate",
+    "throughput_tok_s", "skylb_tok_s", "local_tok_s", "gap_pct",
+    "within_user", "cross_user_same_region", "cross_region",
+    "saving_vs_region_local", "forwards", "rejected",
+})
+
+
+def _flatten(node, prefix: str, out: dict) -> None:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _flatten(v, f"{prefix}.{k}" if prefix else str(k), out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _flatten(v, f"{prefix}[{i}]", out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        # "a.b.tok_s" and "a.b.tok_s[1]" both key on "tok_s"
+        key = prefix.rsplit(".", 1)[-1].split("[", 1)[0]
+        if key in SUMMARY_KEYS:
+            out[prefix] = node
+
+
+def write_summary(results: dict, path: str) -> dict:
+    """Consolidate per-figure results into {figure: {metric.path: value}}."""
+    summary = {}
+    for name, res in sorted(results.items()):
+        flat: dict = {}
+        _flatten(res, "", flat)
+        if flat:
+            summary[name] = flat
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+    return summary
 
 
 def main() -> int:
@@ -38,6 +80,7 @@ def main() -> int:
     }
     os.makedirs(args.out, exist_ok=True)
     failures = 0
+    results: dict = {}
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
@@ -45,6 +88,7 @@ def main() -> int:
         print(f"===== {name} =====", flush=True)
         try:
             result = fn(smoke=args.smoke)
+            results[name] = result
             with open(os.path.join(args.out, f"{name}.json"), "w") as f:
                 json.dump(result, f, indent=1, default=str)
         except Exception as e:  # noqa: BLE001
@@ -53,7 +97,24 @@ def main() -> int:
             print(f"[{name}] FAILED: {e}")
             failures += 1
         print(f"[{name}] {time.time() - t0:.1f}s", flush=True)
-    print(f"benchmarks done; {failures} failures")
+    summary_path = os.path.join(REPO_ROOT, "BENCH_summary.json")
+    if args.only or failures:
+        # partial or failed runs must not clobber the full consolidated
+        # summary (scripts/ci.sh diffs it figure-by-figure; a baseline
+        # missing a figure loses that figure's CI coverage silently) —
+        # and a STALE root summary must not validate against the baseline
+        # as if it were fresh
+        if os.path.exists(summary_path):
+            os.remove(summary_path)
+        print(f"benchmarks done; {failures} failures (summary not written)")
+    else:
+        # one copy beside the per-figure jsons (so regenerating the
+        # committed artifacts/bench-smoke baseline needs no hand-copy) and
+        # one at the repo root (what scripts/ci.sh diffs)
+        write_summary(results, os.path.join(args.out, "BENCH_summary.json"))
+        write_summary(results, summary_path)
+        print(f"benchmarks done; {failures} failures; "
+              f"summary -> {summary_path}")
     return 1 if failures else 0
 
 

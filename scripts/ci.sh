@@ -24,6 +24,13 @@ python -m pytest -x -q \
     --ignore=tests/test_compress.py
 
 echo "=== smoke benchmarks ==="
-python -m benchmarks.run --smoke --out artifacts/bench-smoke
+# fresh per-figure outputs land in a scratch dir (the committed
+# artifacts/bench-smoke/ stays the baseline); benchmarks.run also writes the
+# consolidated BENCH_summary.json at the repo root
+python -m benchmarks.run --smoke --out artifacts/bench-smoke-ci
+
+echo "=== bench summary vs committed baseline ==="
+python scripts/diff_bench.py BENCH_summary.json \
+    artifacts/bench-smoke/BENCH_summary.json
 
 echo "CI OK"

@@ -1,0 +1,68 @@
+"""Diff a fresh BENCH_summary.json against the committed baseline so perf
+trajectory is tracked across PRs (called from scripts/ci.sh after the smoke
+sweep).
+
+  python scripts/diff_bench.py NEW BASELINE [--rtol 0.05]
+
+The summaries are deterministic simulator metrics ({figure: {metric.path:
+value}} — see benchmarks/run.py); a relative drift beyond --rtol on any
+shared metric, or a figure/metric disappearing, fails the check. New
+metrics (coverage growth) are reported but never fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def close(a: float, b: float, rtol: float) -> bool:
+    return math.isclose(a, b, rel_tol=rtol, abs_tol=rtol * 1e-9)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new")
+    ap.add_argument("baseline")
+    ap.add_argument("--rtol", type=float, default=0.05)
+    args = ap.parse_args()
+
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    drifted, missing, added = [], [], []
+    for fig, metrics in base.items():
+        if fig not in new:
+            missing.append(fig)
+            continue
+        for key, bval in metrics.items():
+            if key not in new[fig]:
+                missing.append(f"{fig}:{key}")
+            elif not close(new[fig][key], bval, args.rtol):
+                drifted.append((fig, key, bval, new[fig][key]))
+    for fig, metrics in new.items():
+        for key in metrics:
+            if key not in base.get(fig, {}):
+                added.append(f"{fig}:{key}")
+
+    for fig, key, bval, nval in drifted:
+        rel = (nval - bval) / max(abs(bval), 1e-9)
+        print(f"DRIFT  {fig}:{key}  {bval} -> {nval}  ({rel:+.1%})")
+    for m in missing:
+        print(f"MISSING  {m}")
+    if added:
+        print(f"new metrics (ok): {len(added)}")
+    if drifted or missing:
+        print(f"bench diff FAILED: {len(drifted)} drifted, "
+              f"{len(missing)} missing (rtol {args.rtol})")
+        return 1
+    n = sum(len(m) for m in base.values())
+    print(f"bench diff OK: {n} metrics within rtol {args.rtol}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,12 +18,17 @@ def pct(xs: list[float], p: float) -> float:
 @dataclasses.dataclass
 class RunMetrics:
     completed: list = dataclasses.field(default_factory=list)
+    rejected: list = dataclasses.field(default_factory=list)
     forwards: list = dataclasses.field(default_factory=list)
     t_start: float = 0.0
     t_end: float = 0.0
 
     def on_done(self, req) -> None:
         self.completed.append(req)
+
+    def on_rejected(self, req) -> None:
+        """Replica refused the request (oversized for its KV budget)."""
+        self.rejected.append(req)
 
     # ---- summary -----------------------------------------------------
     def summary(self, replicas: Optional[list] = None) -> dict:
@@ -45,6 +50,7 @@ class RunMetrics:
             "e2e_mean": statistics.fmean(e2e) if e2e else float("nan"),
             "hit_rate": cached / max(1, prompt_tokens),
             "forwards": len(self.forwards),
+            "rejected": len(self.rejected),
         }
         if replicas:
             peaks = [r.peak_outstanding for r in replicas]

@@ -1,94 +1,57 @@
-"""Replica-side radix prefix cache model (token-level, LRU) for the
-simulator: tracks which prefixes are KV-resident so prefill can skip them.
-Mirrors SGLang's RadixAttention semantics at block granularity 1.
+"""DEPRECATED adapter: token-level radix cache for analytic studies.
+
+The simulator's replica path no longer uses this — `ReplicaSim` runs the
+unified page-granular `repro.replica.radix.PagedRadix` (at page_size=1)
+inside the shared `ReplicaCore`. This class remains as a thin token-level
+facade over that same implementation for offline cache models (e.g. the
+Fig. 6 hit-rate study) that want SGLang-RadixAttention semantics with a
+plain token-capacity budget and no external allocator.
 """
 from __future__ import annotations
 
-
-class _RNode:
-    __slots__ = ("children", "last_access", "parent", "token")
-
-    def __init__(self, parent=None, token=None):
-        self.children: dict = {}
-        self.parent = parent
-        self.token = token
-        self.last_access = 0.0
+from repro.replica.blocks import BlockAllocator
+from repro.replica.radix import PagedRadix
 
 
 class SimRadix:
     def __init__(self, capacity_tokens: int):
         self.capacity = capacity_tokens
-        self.root = _RNode()
-        self.size = 0            # tokens resident
+        self.alloc = BlockAllocator(capacity_tokens)
+        self._radix = PagedRadix(self.alloc, page_size=1)
 
-    def match(self, tokens, now: float) -> int:
-        """Length of the longest cached prefix; touches it (LRU)."""
-        node = self.root
-        n = 0
-        for t in tokens:
-            child = node.children.get(t)
-            if child is None:
-                break
-            child.last_access = now
-            node = child
-            n += 1
+    @property
+    def size(self) -> int:
+        return self._radix.cached_pages
+
+    def match(self, tokens, now: float = 0.0) -> int:
+        """Length of the longest cached prefix; touches it (LRU). `now` is
+        accepted for backward compatibility — recency comes from the radix's
+        per-instance access clock."""
+        n, _ = self._radix.match(tuple(tokens))
         return n
 
-    def insert(self, tokens, now: float) -> int:
-        """Insert a sequence; returns tokens newly added."""
-        node = self.root
-        added = 0
-        for t in tokens:
-            child = node.children.get(t)
-            if child is None:
-                child = _RNode(node, t)
-                node.children[t] = child
-                added += 1
-            child.last_access = now
-            node = child
-        self.size += added
-        if self.size > self.capacity:
-            self.evict(self.size - self.capacity)
+    def insert(self, tokens, now: float = 0.0) -> int:
+        """Insert a sequence; returns tokens newly added. Evicts LRU entries
+        when the capacity budget would overflow (truncating the insert if
+        the sequence alone exceeds capacity)."""
+        tokens = tuple(tokens)
+        n_cached, matched = self._radix.match(tokens)
+        new = len(tokens) - n_cached
+        if new <= 0:
+            return 0
+        # pin the matched prefix so making room can't evict the very path
+        # this insert extends
+        self._radix.take_refs(matched)
+        short = new - self.alloc.free_pages
+        if short > 0:
+            self._radix.evict(short)
+        new = min(new, self.alloc.free_pages)      # truncate oversized tails
+        fresh = self.alloc.alloc(new)
+        added = self._radix.insert(tokens[:n_cached + new], matched + fresh)
+        self.alloc.free_all(fresh)                 # tree holds its own refs
+        self._radix.release_refs(matched)
         return added
 
     def evict(self, n_tokens: int) -> int:
-        """Evict ~n_tokens by repeatedly removing the LRU leaf chain."""
-        removed = 0
-        while removed < n_tokens and self.size > 0:
-            leaf = self._lru_leaf()
-            if leaf is None:
-                break
-            # remove the maximal chain of single-child ancestors
-            node = leaf
-            while (node.parent is not self.root and node.parent is not None
-                   and len(node.parent.children) == 1):
-                node = node.parent
-            parent = node.parent
-            if parent is None:
-                break
-            chain = self._count(node)
-            del parent.children[node.token]
-            self.size -= chain
-            removed += chain
-        return removed
-
-    def _lru_leaf(self):
-        best, best_t = None, float("inf")
-        stack = [self.root]
-        while stack:
-            nd = stack.pop()
-            if not nd.children and nd is not self.root:
-                if nd.last_access < best_t:
-                    best, best_t = nd, nd.last_access
-            stack.extend(nd.children.values())
-        return best
-
-    @staticmethod
-    def _count(node) -> int:
-        n = 0
-        stack = [node]
-        while stack:
-            nd = stack.pop()
-            n += 1
-            stack.extend(nd.children.values())
-        return n
+        """Evict ~n_tokens in LRU order; returns tokens actually removed."""
+        return self._radix.evict(n_tokens)

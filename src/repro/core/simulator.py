@@ -6,6 +6,13 @@ iteration), regional LBs with FCFS queues / heartbeat probes / two-layer
 forwarding, a fault-tolerant controller (LB failover per paper §4.2),
 stragglers and elastic scale-out.
 
+The replica scheduler itself lives in the backend-agnostic
+`repro.replica.ReplicaCore` — shared verbatim with the real JAX paged
+engine — here driven with an analytic `CostModelBackend` at page_size=1
+(pages == tokens). `ReplicaSim` is only the Sim-event host: it schedules
+one event per continuous-batching iteration and puts the iteration's
+analytic latency between the core's admission and decode phases.
+
 Timing constants are calibrated to the paper's setup (Llama-3.1-8B on one
 L4 via SGLang): ~1.7k tok/s prefill, ~30 tok/s/stream decode, KV budget
 ~32k tokens.
@@ -19,7 +26,7 @@ import warnings
 from collections import deque
 from typing import Callable, Optional
 
-from repro.core.simradix import SimRadix
+from repro.replica import CostModelBackend, ReplicaCore, ReplicaCoreConfig
 from repro.routing.core import RoutingConfig, RoutingCore
 from repro.routing.failover import FailoverTracker
 from repro.routing.policies import BP, SP_O, SP_P, Policy, TargetView  # noqa: F401 — BP/SP_O/SP_P re-exported for callers
@@ -62,6 +69,7 @@ class Request:
     prompt_tokens: tuple
     output_len: int
     output_tokens: tuple = ()       # deterministic completion (for reuse)
+    priority: int = 0               # higher may preempt lower (replica core)
     arrival: float = 0.0            # at first LB
     issued: float = 0.0             # at client
     ttft: Optional[float] = None    # absolute time of first token
@@ -71,6 +79,7 @@ class Request:
     replica: Optional[str] = None
     forwarded: bool = False
     origin_lb: Optional[str] = None
+    error: Optional[str] = None     # set when the replica rejects (oversized)
 
 
 # ------------------------------------------------------------------ replica
@@ -82,40 +91,77 @@ class ReplicaConfig:
     decode_base: float = 0.03       # s per iteration
     decode_per_seq: float = 0.0008  # s per running sequence
     speed_factor: float = 1.0       # >1 = straggler
+    max_batch: int = 0              # max concurrent sequences; 0 = unbounded
+    max_seq_len: int = 0            # prompt+output token cap; 0 = unbounded
+    prefill_chunk: int = 0          # tokens per prefill chunk; 0 = unchunked
+    preemption: bool = False        # priority preemption (recompute on resume)
 
 
 class ReplicaSim:
+    """Thin Sim-event host around the shared `repro.replica.ReplicaCore`
+    (CostModelBackend, page_size=1 so pages == tokens): one event per
+    continuous-batching iteration, with the analytic iteration latency
+    between the core's admission (`begin_step`) and decode (`finish_step`)
+    phases. All admission / KV / radix / rejection / preemption decisions
+    live in the core — shared with the real JAX `Engine`."""
+
     def __init__(self, sim: Sim, rid: str, region: str,
                  cfg: ReplicaConfig = ReplicaConfig()):
         self.sim = sim
         self.id = rid
         self.region = region
+        # copy; backend reads it LIVE so straggler demotion applies at once
         self.cfg = dataclasses.replace(cfg)
-        self.radix = SimRadix(cfg.kv_budget)
-        self.pending: deque[Request] = deque()
-        self.running: list[dict] = []
+        self.backend = CostModelBackend(self.cfg)
+        self.core = ReplicaCore(ReplicaCoreConfig(
+            page_size=1, n_pages=cfg.kv_budget, max_batch=cfg.max_batch,
+            max_seq_len=cfg.max_seq_len, prefill_chunk=cfg.prefill_chunk,
+            preemption=cfg.preemption), self.backend)
         self._stepping = False
         self.alive = True
-        # stats
-        self.peak_outstanding = 0
-        self.peak_tokens = 0
-        self.total_prefill_tokens = 0
-        self.total_cached_tokens = 0
-        self.completions = 0
 
     # ---- introspection (what probes see)
     def pending_count(self) -> int:
-        return len(self.pending)
+        return self.core.pending_count()
 
     def outstanding(self) -> int:
-        return len(self.pending) + len(self.running)
+        return self.core.outstanding()
 
-    def kv_tokens_running(self) -> int:
-        return sum(r["kv"] for r in self.running)
+    def kv_utilization(self) -> float:
+        return self.core.kv_utilization()
+
+    # ---- core state / stats pass-throughs
+    @property
+    def pending(self):
+        return self.core.pending
+
+    @property
+    def running(self):
+        return self.core.running
+
+    @property
+    def radix(self):
+        return self.core.radix
+
+    @property
+    def peak_outstanding(self) -> int:
+        return self.core.peak_outstanding
+
+    @property
+    def total_prefill_tokens(self) -> int:
+        return self.core.total_prefill_tokens
+
+    @property
+    def total_cached_tokens(self) -> int:
+        return self.core.total_cached_tokens
+
+    @property
+    def completions(self) -> int:
+        return self.core.completions
 
     # ---- request entry
     def enqueue(self, req: Request) -> None:
-        self.pending.append(req)
+        self.core.submit(req)
         self._kick()
 
     def _kick(self) -> None:
@@ -128,66 +174,37 @@ class ReplicaSim:
         if not self.alive:
             self._stepping = False
             return
+        plan = self.core.begin_step()
         now = self.sim.now
-        # 1) admit pending while the batch has KV headroom
-        prefill_tokens = 0
-        admitted = []
-        while self.pending:
-            req = self.pending[0]
-            need = len(req.prompt_tokens) + req.output_len
-            if self.kv_tokens_running() + need > self.cfg.kv_budget:
-                break
-            self.pending.popleft()
-            cached = self.radix.match(req.prompt_tokens, now)
-            uncached = len(req.prompt_tokens) - cached
-            req.cached_tokens = cached
-            req.replica = self.id
-            self.total_prefill_tokens += len(req.prompt_tokens)
-            self.total_cached_tokens += cached
-            prefill_tokens += uncached
-            # cache pressure: make room for the new tokens
-            overflow = (self.radix.size + self.kv_tokens_running() + need
-                        - self.cfg.kv_budget)
-            if overflow > 0:
-                self.radix.evict(overflow)
-            admitted.append(req)
-            self.running.append({"req": req, "kv": len(req.prompt_tokens),
-                                 "left": req.output_len})
-        self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
-        self.peak_tokens = max(self.peak_tokens,
-                               self.kv_tokens_running() + self.radix.size)
-        if not self.running:
-            self._stepping = False
-            return
-        # 2) iteration time: prefill the admitted + one decode token for all
-        t = prefill_tokens / self.cfg.prefill_tps
-        t += self.cfg.decode_base + self.cfg.decode_per_seq * len(self.running)
-        t *= self.cfg.speed_factor
-        self.sim.after(t, lambda a=admitted: self._finish_step(a))
-
-    def _finish_step(self, admitted: list) -> None:
-        now = self.sim.now
-        for req in admitted:
-            if req.ttft is None:
-                req.ttft = now
-        done = []
-        for r in self.running:
-            r["left"] -= 1
-            r["kv"] += 1
-            if r["left"] <= 0:
-                done.append(r)
-        for r in done:
-            self.running.remove(r)
-            req: Request = r["req"]
+        for seq in plan.admitted:
+            seq.req.replica = self.id
+        for seq in plan.rejected:       # oversized: error result, not HOL wedge
+            req: Request = seq.req
+            req.error = seq.error
             req.finished = now
-            self.completions += 1
-            # prompt + generated output become reusable cache content (the
-            # next conversation turn extends exactly this sequence)
-            self.radix.insert(tuple(req.prompt_tokens) + tuple(req.output_tokens),
-                              now)
             if req.done_cb:
                 req.done_cb(req)
-        if self.running or self.pending:
+        if not self.core.running:
+            if self.core.pending:       # a rejection callback re-enqueued
+                self.sim.after(0.0, self._step)
+            else:
+                self._stepping = False
+            return
+        dt = self.backend.step_cost(len(self.core.running))
+        self.sim.after(dt, lambda a=plan.admitted: self._finish_step(a))
+
+    def _finish_step(self, admitted: list) -> None:
+        finished = self.core.finish_step()
+        now = self.sim.now
+        for seq in admitted:
+            if seq.req.ttft is None:
+                seq.req.ttft = now
+        for seq in finished:
+            req: Request = seq.req
+            req.finished = now
+            if req.done_cb:
+                req.done_cb(req)
+        if self.core.running or self.core.pending:
             self.sim.after(0.0, self._step)
         else:
             self._stepping = False

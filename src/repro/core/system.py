@@ -23,7 +23,7 @@ from typing import Optional
 from repro.core.metrics import RunMetrics
 from repro.core.simulator import (Controller, LoadBalancerSim, Network,
                                   ReplicaConfig, ReplicaSim, Request, Sim)
-from repro.core.workloads import SessionSpec, TreeSpec, _tokens
+from repro.core.workloads import SessionSpec, TreeSpec, _tokens, stable_hash
 from repro.routing import build_routing
 
 REGIONS = ("us", "eu", "asia")
@@ -95,6 +95,10 @@ class ServingSystem:
         lb = self.lb_for(req.region)
 
         def wrapped_done(r: Request):
+            if r.error is not None:     # replica rejected (oversized)
+                self.metrics.on_rejected(r)
+                self.sim.after(0.0, lambda: done_cb(r))
+                return
             back = self.net.one_way(
                 self._region_of.get(r.replica, r.region), r.region)
             if r.ttft is not None:
@@ -125,6 +129,10 @@ class ServingSystem:
             self.submit(req, done)
 
         def done(r: Request):
+            if r.error is not None:
+                # replica rejected the turn (oversized): the history only
+                # grows, so every later turn would fail too — end the session
+                return
             i = state["i"]
             turn = spec.turns[i]
             state["history"] = tuple(r.prompt_tokens) + tuple(turn.output_tokens)
@@ -143,6 +151,7 @@ class ServingSystem:
             tree = trees[state["ti"]]
             trng = random.Random(tree.seed)
             thoughts: dict[tuple, tuple] = {}
+            aborted = {"v": False}
 
             def node_prompt(path: tuple) -> tuple:
                 """question + thoughts of all ANCESTORS (root .. parent)."""
@@ -161,6 +170,15 @@ class ServingSystem:
 
                 def one_done(path):
                     def cb(r: Request):
+                        if aborted["v"]:
+                            return
+                        if r.error is not None:
+                            # a rejected node breaks the tree's prefix chain:
+                            # abandon this tree, move on to the next one
+                            aborted["v"] = True
+                            state["ti"] += 1
+                            self.sim.after(0.5, run_tree)
+                            return
                         thoughts[path] = tuple(r.output_tokens)
                         for b in range(tree.branching):
                             children.append(path + (b,))
@@ -170,7 +188,7 @@ class ServingSystem:
                     return cb
 
                 for path in frontier:
-                    rng = random.Random(hash((tree.seed, path)) & 0xFFFFFFFF)
+                    rng = random.Random(stable_hash(tree.seed, path))
                     olen = tree.node_output_len(path)
                     out = _tokens(rng, olen)
                     req = Request(

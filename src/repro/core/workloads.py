@@ -17,9 +17,19 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
+import zlib
 from typing import Iterator, Optional
 
 REGIONS = ("us", "eu", "asia")
+
+
+def stable_hash(*parts) -> int:
+    """Process-stable substitute for hash(tuple): builtin str hashing is
+    randomized per-process (PYTHONHASHSEED), which made workload streams —
+    and therefore every benchmark number — differ across runs. CI diffs
+    BENCH_summary.json against a committed baseline, so seeds must derive
+    from something reproducible."""
+    return zlib.crc32(repr(parts).encode())
 
 
 @dataclasses.dataclass
@@ -63,7 +73,7 @@ def multiturn(n_users_per_region: dict[str, int], *, turns: int = 6,
     for region, n_users in n_users_per_region.items():
         for u in range(n_users):
             user_id = f"{region}-u{u}"
-            urng = random.Random(hash((seed, region, u)) & 0xFFFFFFFF)
+            urng = random.Random(stable_hash(seed, region, u))
             tmpl = templates[urng.randrange(n_templates)]
             hetero = urng.random() < heterogeneous_frac
             for sess in range(sessions_per_user):
@@ -72,8 +82,8 @@ def multiturn(n_users_per_region: dict[str, int], *, turns: int = 6,
                     plen = _lognormal_len(urng, user_msg_median, sigma, 8, 2048)
                     olen = _lognormal_len(urng, output_median, sigma, 4, 2048)
                     prefix = _tokens(urng, plen) if not hetero else \
-                        _tokens(random.Random(hash((seed, region, u, t, sess,
-                                                    "h")) & 0xFFFFFFFF), plen)
+                        _tokens(random.Random(stable_hash(
+                            seed, region, u, t, sess, "h")), plen)
                     tlist.append(Turn(prompt_suffix=prefix,
                                       output_tokens=_tokens(urng, olen)))
                 sessions.append(SessionSpec(user_id, region, tuple(tmpl),
@@ -100,7 +110,7 @@ class TreeSpec:
     def node_output_len(self, path: tuple) -> int:
         if self.output_sigma <= 0.0:
             return self.output_len
-        rng = random.Random(hash((self.seed, path, "olen")) & 0xFFFFFFFF)
+        rng = random.Random(stable_hash(self.seed, path, "olen"))
         return _lognormal_len(rng, self.output_len, self.output_sigma,
                               8, 16 * self.output_len)
 
@@ -118,7 +128,7 @@ def tot(clients_per_region: dict[str, int], *, branching: int = 2,
     for region, n_clients in clients_per_region.items():
         b = (branching_overrides or {}).get(region, branching)
         for c in range(n_clients):
-            crng = random.Random(hash((seed, region, c, "tot")) & 0xFFFFFFFF)
+            crng = random.Random(stable_hash(seed, region, c, "tot"))
             trees = []
             for t in range(trees_per_client):
                 trees.append(TreeSpec(

@@ -1,0 +1,16 @@
+"""Backend-agnostic replica scheduler core shared by the discrete-event
+simulator and the real JAX paged engine: ReplicaCore owns admission, KV
+page accounting, the radix prefix cache, chunked prefill, rejection, and
+priority preemption behind the ReplicaBackend protocol. See repro.replica.core
+for the full story; the JAX backend lives in repro.serving.jax_backend.
+"""
+from repro.replica.blocks import BlockAllocator
+from repro.replica.backends import CostModelBackend, CostParams
+from repro.replica.core import (ReplicaBackend, ReplicaCore,
+                                ReplicaCoreConfig, Seq, StepPlan)
+from repro.replica.radix import PagedRadix
+
+__all__ = [
+    "BlockAllocator", "CostModelBackend", "CostParams", "PagedRadix",
+    "ReplicaBackend", "ReplicaCore", "ReplicaCoreConfig", "Seq", "StepPlan",
+]

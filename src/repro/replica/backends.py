@@ -1,0 +1,65 @@
+"""Analytic cost-model backend for ReplicaCore (the simulator's side).
+
+Tokens are not computed: "generation" replays the request's predetermined
+`output_tokens` (how the discrete-event workloads model reusable
+completions); what the backend produces is the iteration's LATENCY, from
+the same calibration the old ReplicaSim used (~1.7k tok/s prefill,
+~30 tok/s/stream decode on one L4 via SGLang). The host (ReplicaSim) calls
+`step_cost()` after `core.begin_step()` and schedules `core.finish_step()`
+that far in the future.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class CostParams:
+    prefill_tps: float = 1700.0
+    decode_base: float = 0.03       # s per iteration
+    decode_per_seq: float = 0.0008  # s per running sequence
+    speed_factor: float = 1.0       # >1 = straggler
+
+# Stands in for a generated token the workload didn't predetermine. Fillers
+# flow into the radix cache on completion like any generated token would on
+# a real engine: generated KV occupies cache until LRU-evicted, and is
+# reused only if a later prompt extends it (which a filler chain never is —
+# it just models the residency cost). Workloads that model multi-turn reuse
+# must supply real `output_tokens`, as every in-repo generator does.
+FILLER_TOKEN = -1
+
+
+class CostModelBackend:
+    """ReplicaBackend with analytic timing. `cost` is any object with
+    CostParams' attributes (the simulator passes its live ReplicaConfig so
+    straggler demotion takes effect immediately)."""
+
+    def __init__(self, cost=None):
+        self.cost = cost if cost is not None else CostParams()
+        self._prefill_tokens = 0     # uncached tokens prefilled this step
+
+    # ---- ReplicaBackend protocol
+    def prefill(self, seq, start: int, end: int, sample: bool) -> Optional[int]:
+        self._prefill_tokens += end - start
+        return self._next_token(seq) if sample else None
+
+    def decode(self, seqs) -> list:
+        return [self._next_token(s) for s in seqs]
+
+    # ---- cost model
+    def step_cost(self, n_running: int) -> float:
+        """Latency of the iteration just planned: prefill the admitted
+        suffixes + one decode for the running batch. Resets the prefill
+        accumulator."""
+        c = self.cost
+        t = self._prefill_tokens / c.prefill_tps
+        self._prefill_tokens = 0
+        t += c.decode_base + c.decode_per_seq * n_running
+        return t * c.speed_factor
+
+    @staticmethod
+    def _next_token(seq) -> int:
+        out = getattr(seq.req, "output_tokens", None) or ()
+        i = len(seq.out)
+        return int(out[i]) if i < len(out) else FILLER_TOKEN

@@ -1,0 +1,358 @@
+"""Backend-agnostic replica scheduler core (the layer under repro.routing).
+
+`ReplicaCore` owns the WHOLE continuous-batching scheduler that used to be
+implemented twice — once as the simulator's `ReplicaSim` and once as the JAX
+paged `Engine`: pending-queue admission, page-granular KV accounting
+(`BlockAllocator`), radix prefix-cache bookkeeping (match / insert / evict /
+refcounts, `PagedRadix`), chunked prefill, oversized-request rejection,
+priority preemption, and the probe surface consumed by `repro.routing`
+(`pending_count` / `available` / `kv_utilization`). What it deliberately
+does NOT know is how tokens are produced or how long an iteration takes —
+that lives behind the `ReplicaBackend` protocol:
+
+  `CostModelBackend` (repro.replica.backends)  analytic timing; tokens are
+      replayed from the request's predetermined completion. The simulator's
+      `ReplicaSim` is a thin Sim-event host around it.
+  `JaxPagedBackend` (repro.serving.jax_backend)  real prefill/decode over a
+      paged KV pool via `model_runner`. The serving `Engine` is a thin host.
+
+Hosts drive one continuous-batching iteration in two phases,
+
+    plan = core.begin_step()       # admit + prefill (backend) + reject
+    ...                            # the sim host puts the iteration's
+                                   # latency here; the engine runs on
+    finished = core.finish_step()  # decode (backend) + reap
+
+so the discrete-event simulator can schedule the iteration's analytic cost
+between the phases while the real engine runs both back-to-back. Admission,
+KV, cache, and preemption DECISIONS are identical across backends — the
+parity test (tests/test_replica_parity.py) asserts it on a shared trace.
+
+Requests only need `prompt_tokens`, a writable `cached_tokens` slot, and
+either `sampling.max_new_tokens` (engine `GenRequest`) or `output_len`
+(simulator `Request`); an optional integer `priority` (higher wins) feeds
+preemption.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.replica.blocks import BlockAllocator
+from repro.replica.radix import PagedRadix
+
+
+@runtime_checkable
+class ReplicaBackend(Protocol):
+    """How a ReplicaCore's scheduled work turns into tokens.
+
+    Implementations own compute (real forward passes or analytic cost
+    accumulation) and sampling; the core owns every scheduling decision.
+    """
+
+    def prefill(self, seq: "Seq", start: int, end: int,
+                sample: bool) -> Optional[int]:
+        """Process `seq.tokens[start:end]` (KV lands in `seq.pages`).
+        `start` is page-aligned; `end == len(seq.tokens)` iff `sample`.
+        When `sample`, return the boundary next token; else None."""
+        ...
+
+    def decode(self, seqs: list["Seq"]) -> list[int]:
+        """One continuous-batch decode iteration: one new token per seq."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaCoreConfig:
+    page_size: int = 16
+    n_pages: int = 512        # KV budget = n_pages * page_size tokens
+    max_batch: int = 0        # max concurrent sequences; 0 = unbounded
+    max_seq_len: int = 0      # prompt + output token cap; 0 = unbounded
+    prefill_chunk: int = 0    # max tokens per backend.prefill call (rounded
+                              # down to a page multiple); 0 = whole suffix
+    preemption: bool = False  # higher-priority head may preempt running work
+    reserved_pages: int = 0   # pinned at init (engine scratch pages)
+    record_decisions: bool = False  # ("admit"|"reject"|"evict"|"preempt", ..)
+
+
+class Seq:
+    """One scheduled sequence. `tokens` = prompt + everything generated so
+    far (it BECOMES the prompt again after a preemption); `pages` = block
+    table over the shared allocator, cached prefix pages first."""
+
+    __slots__ = ("req", "tokens", "pages", "cached_pages", "out",
+                 "prompt_len", "max_new", "priority", "admit_index",
+                 "new_this_step", "preemptions", "error")
+
+    def __init__(self, req, prompt: tuple, max_new: int, priority: int):
+        self.req = req
+        self.tokens: list = list(prompt)
+        self.prompt_len = len(prompt)
+        self.pages: list[int] = []
+        self.cached_pages = 0
+        self.out: list = []
+        self.max_new = max_new
+        self.priority = priority
+        self.admit_index = -1
+        self.new_this_step = False
+        self.preemptions = 0
+        self.error: Optional[str] = None
+
+    @property
+    def pos(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def final_len(self) -> int:
+        """Token length once generation completes (KV reserved upfront)."""
+        return len(self.tokens) + (self.max_new - len(self.out))
+
+    def done(self) -> bool:
+        if len(self.out) >= self.max_new:
+            return True
+        sp = getattr(self.req, "sampling", None)
+        stop = getattr(sp, "stop_token", None)
+        return stop is not None and bool(self.out) and self.out[-1] == stop
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """What begin_step did: hosts stamp TTFTs on `admitted` and deliver
+    error results for `rejected`."""
+    admitted: list
+    rejected: list
+
+
+def _describe(req) -> tuple[tuple, int, int]:
+    sp = getattr(req, "sampling", None)
+    max_new = sp.max_new_tokens if sp is not None else req.output_len
+    return tuple(req.prompt_tokens), int(max_new), int(getattr(req, "priority", 0))
+
+
+class ReplicaCore:
+    """The single implementation of replica-side continuous batching."""
+
+    def __init__(self, cfg: ReplicaCoreConfig, backend: ReplicaBackend):
+        if cfg.reserved_pages >= cfg.n_pages:
+            raise ValueError("reserved_pages must leave room for sequences")
+        self.cfg = cfg
+        self.backend = backend
+        self.alloc = BlockAllocator(cfg.n_pages)
+        self.reserved: list[int] = (self.alloc.alloc(cfg.reserved_pages)
+                                    if cfg.reserved_pages else [])
+        self.radix = PagedRadix(self.alloc, cfg.page_size)
+        self.pending: deque[Seq] = deque()
+        self.running: list[Seq] = []
+        # stats
+        self.steps = 0
+        self.total_prefill_tokens = 0
+        self.total_cached_tokens = 0
+        self.completions = 0
+        self.rejections = 0
+        self.preemptions = 0
+        self.peak_running = 0
+        self.peak_outstanding = 0
+        self.peak_pages = 0
+        self._admit_counter = 0
+        # (head seq, radix content version, free pages) of the last
+        # capacity-blocked admission attempt: while none of the three
+        # change, re-matching the head would restamp its prefix MRU and
+        # burn O(prompt) work every iteration for an identical outcome
+        self._blocked: Optional[tuple] = None
+        self.decisions: Optional[list[tuple]] = (
+            [] if cfg.record_decisions else None)
+
+    # ------------------------------------------------------------ probes
+    def pending_count(self) -> int:
+        return len(self.pending)
+
+    def outstanding(self) -> int:
+        return len(self.pending) + len(self.running)
+
+    def available(self) -> bool:
+        """SP-P availability: no pending request (Alg. 1 line 5)."""
+        return not self.pending
+
+    def kv_utilization(self) -> float:
+        return self.alloc.used_pages / self.alloc.n_pages
+
+    @property
+    def pool_pages(self) -> int:
+        """Pages a sequence can ever hold (total minus reserved)."""
+        return self.cfg.n_pages - self.cfg.reserved_pages
+
+    # ------------------------------------------------------------ submit
+    def submit(self, req) -> None:
+        prompt, max_new, priority = _describe(req)
+        self.pending.append(Seq(req, prompt, max_new, priority))
+        self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
+
+    # ------------------------------------------------------------ helpers
+    def _pages(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.cfg.page_size)
+
+    def _record(self, *evt) -> None:
+        if self.decisions is not None:
+            self.decisions.append(evt)
+
+    def _oversized(self, seq: Seq) -> Optional[str]:
+        """A request that can NEVER fit must be rejected, not left at the
+        head of `pending` starving everything behind it (HOL deadlock)."""
+        if self.cfg.max_seq_len and seq.final_len > self.cfg.max_seq_len:
+            return (f"sequence length {seq.final_len} exceeds max_seq_len "
+                    f"{self.cfg.max_seq_len}")
+        if self._pages(seq.final_len) > self.pool_pages:
+            return (f"request needs {self._pages(seq.final_len)} KV pages; "
+                    f"replica budget is {self.pool_pages}")
+        return None
+
+    def _preempt_for(self, requester: Seq) -> bool:
+        """Free pages for a higher-priority head by rolling the lowest-
+        priority (then most recently admitted) running sequence back into
+        `pending` right behind the requester. Its KV is recomputed on
+        resume (tokens generated so far become part of its prompt)."""
+        if not self.cfg.preemption:
+            return False
+        # a sequence that already finished (e.g. admitted this very step and
+        # completed at prefill) must not be preempted: its pages free at the
+        # coming finish_step anyway, and re-admitting it would sample one
+        # token beyond its budget
+        candidates = [s for s in self.running if not s.done()]
+        if not candidates:
+            return False
+        victim = min(candidates, key=lambda s: (s.priority, -s.admit_index))
+        if victim.priority >= requester.priority:
+            return False
+        self.running.remove(victim)
+        self.alloc.free_all(victim.pages)
+        victim.pages = []
+        victim.cached_pages = 0
+        victim.new_this_step = False
+        victim.preemptions += 1
+        self.preemptions += 1
+        self._record("preempt", victim.req.rid)
+        self.pending.insert(1, victim)
+        return True
+
+    # ------------------------------------------------------------ admit
+    def begin_step(self) -> StepPlan:
+        """Admission phase of one continuous-batching iteration: admit from
+        `pending` while pages and batch slots allow (prefilling each
+        admission through the backend), rejecting oversized requests."""
+        admitted: list[Seq] = []
+        rejected: list[Seq] = []
+        while self.pending:
+            if self.cfg.max_batch and len(self.running) >= self.cfg.max_batch:
+                break
+            seq = self.pending[0]
+            if self._blocked is not None:
+                bseq, bver, bfree = self._blocked
+                if (bseq is seq and bver == self.radix.content_version
+                        and bfree == self.alloc.free_pages):
+                    break               # nothing changed: still blocked
+                self._blocked = None
+            why = self._oversized(seq)
+            if why is not None:
+                self.pending.popleft()
+                seq.error = why
+                self.rejections += 1
+                self._record("reject", seq.req.rid)
+                rejected.append(seq)
+                continue
+            cached_len, cached_pages = self.radix.match(tuple(seq.tokens))
+            # never let the cache cover the WHOLE sequence — the last token
+            # must be (re)prefilled so prefill produces next-token logits
+            if cached_len >= len(seq.tokens):
+                drop = ((cached_len - len(seq.tokens))
+                        // self.cfg.page_size + 1)
+                cached_pages = cached_pages[:len(cached_pages) - drop]
+                cached_len = len(cached_pages) * self.cfg.page_size
+            need = self._pages(seq.final_len) - len(cached_pages)
+            # hold refs on the matched prefix BEFORE evicting so eviction
+            # pressure can never free the pages this admission depends on
+            self.radix.take_refs(cached_pages)
+            short = need - self.alloc.free_pages
+            if short > 0:
+                freed: list[int] = []
+                got = self.radix.evict(short, freed)
+                for p in freed:
+                    self._record("evict", p)
+                if got < short:
+                    self.radix.release_refs(cached_pages)
+                    if self._preempt_for(seq):
+                        continue            # retry the head with freed pages
+                    self._blocked = (seq, self.radix.content_version,
+                                     self.alloc.free_pages)
+                    break                   # head waits for capacity
+            self.pending.popleft()
+            seq.pages = list(cached_pages) + self.alloc.alloc(need)
+            seq.cached_pages = len(cached_pages)
+            resumed = seq.admit_index >= 0      # preempted earlier
+            seq.admit_index = self._admit_counter
+            self._admit_counter += 1
+            if not resumed:
+                # hit-rate stats cover served PROMPTS; a preemption resume
+                # re-prefills recompute overhead (its cost still lands in
+                # the backend), and the request keeps its first-admission
+                # cached_tokens
+                seq.req.cached_tokens = cached_len
+                self.total_prefill_tokens += len(seq.tokens)
+                self.total_cached_tokens += cached_len
+            tok = self._prefill(seq, cached_len)
+            if tok is not None:
+                seq.out.append(int(tok))
+                seq.tokens.append(int(tok))
+            seq.new_this_step = True
+            self.running.append(seq)
+            admitted.append(seq)
+            self._record("admit", seq.req.rid, cached_len)
+        self.steps += 1
+        self.peak_running = max(self.peak_running, len(self.running))
+        self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
+        self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
+        return StepPlan(admitted, rejected)
+
+    def _prefill(self, seq: Seq, cached_len: int) -> Optional[int]:
+        """Chunked prefill over the uncached suffix: page-aligned chunks of
+        at most cfg.prefill_chunk tokens; only the final chunk samples."""
+        ps = self.cfg.page_size
+        chunk = self.cfg.prefill_chunk
+        if chunk:
+            chunk = max(ps, (chunk // ps) * ps)
+        n = len(seq.tokens)
+        start, tok = cached_len, None
+        while start < n:
+            end = n if not chunk else min(n, start + chunk)
+            tok = self.backend.prefill(seq, start, end, sample=(end == n))
+            start = end
+        return tok
+
+    # ------------------------------------------------------------ decode
+    def finish_step(self) -> list[Seq]:
+        """Decode phase: one token for every previously-running sequence
+        (admissions already got theirs from prefill), then reap."""
+        batch = [s for s in self.running
+                 if not s.new_this_step and not s.done()]
+        if batch:
+            toks = self.backend.decode(batch)
+            for s, t in zip(batch, toks):
+                s.out.append(int(t))
+                s.tokens.append(int(t))
+        for s in self.running:
+            s.new_this_step = False
+        finished = [s for s in self.running if s.done()]
+        for s in finished:
+            self.running.remove(s)
+            # claim the sequence's FULL pages into the radix cache so the
+            # next turn of this conversation reuses them (the final token
+            # was sampled but never written to KV), then drop the seq refs
+            full = (s.pos - 1) // self.cfg.page_size
+            self.radix.insert(tuple(s.tokens[:full * self.cfg.page_size]),
+                              s.pages[:full])
+            self.alloc.free_all(s.pages)
+            self.completions += 1
+        return finished
+
+    def hit_rate(self) -> float:
+        return self.total_cached_tokens / max(1, self.total_prefill_tokens)

@@ -1,0 +1,152 @@
+"""Unified page-granular radix prefix cache (SGLang-RadixAttention-style):
+maps token-block prefixes to resident page ids so prefill can skip
+recomputation — the mechanism whose locality SkyWalker's routing protects.
+
+This is the ONE radix implementation behind both replica backends: the JAX
+paged engine runs it at its KV page size; the simulator runs it at
+page_size=1, which recovers token-level semantics (the old `SimRadix`).
+
+Each node = one FULL page (page_size tokens), keyed by that page's token
+tuple. Nodes hold the page id and a last-access stamp from a PER-INSTANCE
+LRU clock (a module-global clock would make eviction stamps — and any test
+comparing them — depend on unrelated caches created earlier in the same
+process). Pages referenced by the tree carry one allocator ref, plus one
+per sequence currently using them. Eviction drops refcount-1 leaves
+(tree-only refs) in LRU order; a leaf registry keeps each eviction
+O(#leaves) instead of O(#nodes).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+from repro.replica.blocks import BlockAllocator
+
+
+class _Node:
+    __slots__ = ("children", "page", "stamp", "parent", "key")
+
+    def __init__(self, parent: Optional["_Node"], key, page: int, stamp: int):
+        self.children: dict[tuple, _Node] = {}
+        self.page = page
+        self.stamp = stamp
+        self.parent = parent
+        self.key = key
+
+
+class PagedRadix:
+    def __init__(self, allocator: BlockAllocator, page_size: int):
+        self.alloc = allocator
+        self.page_size = page_size
+        self._clock = itertools.count()          # per-instance (determinism)
+        self.root = _Node(None, None, -1, next(self._clock))
+        self.cached_pages = 0
+        self._leaves: dict[int, _Node] = {}      # id(node) -> node
+        # bumped whenever tree CONTENT changes (insert/evict/clear) — lets a
+        # scheduler skip re-matching a blocked head against an unchanged tree
+        self.content_version = 0
+
+    # ---------------------------------------------------------- lookup
+    def match(self, tokens: tuple) -> tuple[int, list[int]]:
+        """Longest full-page cached prefix. Returns (n_cached_tokens,
+        page_ids). Does NOT take refs — call `take_refs` on admit."""
+        node = self.root
+        pages: list[int] = []
+        ps = self.page_size
+        for i in range(0, len(tokens) - ps + 1, ps):
+            child = node.children.get(tuple(tokens[i:i + ps]))
+            if child is None:
+                break
+            child.stamp = next(self._clock)
+            pages.append(child.page)
+            node = child
+        return len(pages) * ps, pages
+
+    def take_refs(self, pages: list[int]) -> None:
+        for p in pages:
+            self.alloc.incref(p)
+
+    def release_refs(self, pages: list[int]) -> None:
+        for p in pages:
+            self.alloc.decref(p)
+
+    # ---------------------------------------------------------- insert
+    def insert(self, tokens: tuple, pages: list[int]) -> int:
+        """Claim a finished sequence's FULL pages into the tree. Page ids in
+        `pages` must line up with token blocks. For pages already present the
+        caller's page is NOT claimed (dedup keeps the older copy). Returns
+        number of pages newly claimed (each gains one tree ref)."""
+        node = self.root
+        ps = self.page_size
+        claimed = 0
+        for bi, i in enumerate(range(0, len(tokens) - ps + 1, ps)):
+            if bi >= len(pages):
+                break
+            key = tuple(tokens[i:i + ps])
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(node, key, pages[bi], next(self._clock))
+                if not node.children and node is not self.root:
+                    self._leaves.pop(id(node), None)   # node stops being a leaf
+                node.children[key] = child
+                self._leaves[id(child)] = child
+                self.alloc.incref(pages[bi])           # tree's own ref
+                claimed += 1
+                self.cached_pages += 1
+            else:
+                child.stamp = next(self._clock)
+            node = child
+        if claimed:
+            self.content_version += 1
+        return claimed
+
+    # ---------------------------------------------------------- evict
+    def evict(self, n_pages: int, freed: Optional[list] = None) -> int:
+        """Drop up to n_pages LRU leaf pages whose only ref is the tree's.
+        Returns pages actually freed; page ids are appended to `freed` when
+        given (parity tracing)."""
+        done = 0
+        while done < n_pages:
+            victim = self._lru_evictable_leaf()
+            if victim is None:
+                break
+            self._remove_leaf(victim)
+            if freed is not None:
+                freed.append(victim.page)
+            done += 1
+        if done:
+            self.content_version += 1
+        return done
+
+    def _remove_leaf(self, victim: _Node) -> None:
+        parent = victim.parent
+        del parent.children[victim.key]
+        del self._leaves[id(victim)]
+        victim.parent = None
+        if parent is not self.root and not parent.children:
+            self._leaves[id(parent)] = parent
+        self.alloc.decref(victim.page)
+        self.cached_pages -= 1
+
+    def _lru_evictable_leaf(self) -> Optional[_Node]:
+        best: Optional[_Node] = None
+        for nd in self._leaves.values():
+            if self.alloc.refcount(nd.page) == 1:       # tree-only ref
+                if best is None or nd.stamp < best.stamp:
+                    best = nd
+        return best
+
+    def evictable_pages(self) -> int:
+        return sum(1 for nd in self._leaves.values()
+                   if self.alloc.refcount(nd.page) == 1)
+
+    def clear(self) -> None:
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            self.alloc.decref(nd.page)
+        self.root = _Node(None, None, -1, next(self._clock))
+        self.cached_pages = 0
+        self._leaves = {}
+        self.content_version += 1

@@ -1,18 +1,23 @@
-"""Real JAX inference engine: paged KV cache + block allocator, radix-tree
-prefix cache over pages, continuous-batching scheduler whose *pending queue*
-is exactly what SkyLB's SP-P probes (§3.3), OpenAI-ish request types, and an
-in-process multi-replica router that runs the paper's policies against real
-engines.
+"""Real JAX inference engine: paged KV cache, continuous batching via the
+shared backend-agnostic `repro.replica.ReplicaCore` (admission, radix
+prefix cache, chunked prefill, rejection, preemption) with a JAX paged
+backend, OpenAI-ish request types, and an in-process multi-replica router
+that runs the paper's policies against real engines. The scheduler's
+*pending queue* is exactly what SkyLB's SP-P probes (§3.3).
+
+`BlockAllocator` / `PagedRadixCache` now live in `repro.replica`
+(re-exported here for compatibility).
 """
 from repro.serving.blocks import BlockAllocator
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.jax_backend import JaxPagedBackend
 from repro.serving.radix import PagedRadixCache
 from repro.serving.request import (FinishReason, GenRequest, GenResult,
                                    SamplingParams)
 from repro.serving.router import InProcessRouter
 
 __all__ = [
-    "BlockAllocator", "Engine", "EngineConfig", "PagedRadixCache",
-    "FinishReason", "GenRequest", "GenResult", "SamplingParams",
-    "InProcessRouter",
+    "BlockAllocator", "Engine", "EngineConfig", "JaxPagedBackend",
+    "PagedRadixCache", "FinishReason", "GenRequest", "GenResult",
+    "SamplingParams", "InProcessRouter",
 ]

@@ -1,33 +1,27 @@
 """Continuous-batching JAX inference engine with paged KV + radix prefix
-cache.
+cache — now a thin host around the shared `repro.replica.ReplicaCore`.
 
-The scheduling loop is the real-system mirror of the simulator's ReplicaSim:
-requests land in `pending`; each `step()` admits from pending while pages
-allow (prefilling one request per admission, SGLang-style), then decodes the
-whole running batch one token. ``pending_count() == 0`` is exactly the
-availability signal SkyLB's SP-P probes (§3.3).
+Every scheduling decision (pending-queue admission, page-granular KV
+accounting, radix match/insert/evict, chunked prefill, oversized-request
+rejection, priority preemption) lives in the backend-agnostic core, shared
+verbatim with the simulator's `ReplicaSim`; this module only provides the
+JAX compute backend and turns finished sequences into `GenResult`s.
+``pending_count() == 0`` is exactly the availability signal SkyLB's SP-P
+probes (§3.3).
 
-Page accounting: a running sequence holds refs on its block-table pages;
-full pages of finished sequences are claimed by the radix cache (shared,
-refcounted) so future requests with a common prefix skip prefill for them.
-When allocation falls short, LRU radix pages are evicted first; if still
-short, the request stays pending (== the engine reports itself full).
+A request whose KV need can NEVER fit (pages or max_seq_len) is rejected
+with a `FinishReason.ABORT` result instead of wedging the pending queue
+(head-of-line starvation); see `GenResult.error`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Any, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Any
 
 from repro.configs.base import ModelConfig
-from repro.serving import model_runner as mr
-from repro.serving.blocks import BlockAllocator
-from repro.serving.radix import PagedRadixCache
+from repro.replica import ReplicaCore, ReplicaCoreConfig
+from repro.serving.jax_backend import JaxPagedBackend
 from repro.serving.request import FinishReason, GenRequest, GenResult
 
 
@@ -39,19 +33,8 @@ class EngineConfig:
     max_seq_len: int = 2048
     prefill_pad: int = 64         # pad uncached suffix to a multiple (fewer recompiles)
     scratch_pages: int = 1        # reserved ids for padding block tables
-
-
-@dataclasses.dataclass
-class _Seq:
-    req: GenRequest
-    tokens: list                  # prompt + generated so far
-    pages: list                   # block table (page ids, allocator-ref'd)
-    cached_pages: int             # leading pages borrowed from the radix cache
-    out: list = dataclasses.field(default_factory=list)
-
-    @property
-    def pos(self) -> int:
-        return len(self.tokens)
+    prefill_chunk: int = 0        # max tokens per prefill call; 0 = whole suffix
+    preemption: bool = False      # priority preemption (recompute on resume)
 
 
 class Engine:
@@ -65,181 +48,103 @@ class Engine:
         self.cfg = model_cfg
         self.ecfg = ecfg
         self.params = params
-        self.alloc = BlockAllocator(ecfg.n_pages)
-        # scratch pages pin ids used to pad block tables (never read back
-        # thanks to seq_len masking, but must stay allocated)
-        self._scratch = self.alloc.alloc(ecfg.scratch_pages)
-        self.radix = PagedRadixCache(self.alloc, ecfg.page_size)
-        kv_dtype = jax.tree.leaves(params)[0].dtype
-        self.k_pages, self.v_pages = mr.init_kv_pool(
-            model_cfg, ecfg.n_pages, ecfg.page_size, kv_dtype)
-        self.pending: deque[GenRequest] = deque()
-        self.running: list[_Seq] = []
+        self.backend = JaxPagedBackend(
+            model_cfg, params, n_pages=ecfg.n_pages, page_size=ecfg.page_size,
+            prefill_pad=ecfg.prefill_pad, seed=seed)
+        self.core = ReplicaCore(ReplicaCoreConfig(
+            page_size=ecfg.page_size, n_pages=ecfg.n_pages,
+            max_batch=ecfg.max_batch, max_seq_len=ecfg.max_seq_len,
+            prefill_chunk=ecfg.prefill_chunk, preemption=ecfg.preemption,
+            reserved_pages=ecfg.scratch_pages), self.backend)
+        self.backend.bind(self.core)
         self.results: dict[int, GenResult] = {}
-        self._key = jax.random.PRNGKey(seed)
-        # stats
-        self.steps = 0
-        self.prefill_tokens = 0
-        self.cached_tokens = 0
-        self.completions = 0
-        self.peak_running = 0
 
     # ------------------------------------------------------------ probes
     def pending_count(self) -> int:
-        return len(self.pending)
+        return self.core.pending_count()
 
     def outstanding(self) -> int:
-        return len(self.pending) + len(self.running)
+        return self.core.outstanding()
 
     def available(self) -> bool:
         """SP-P availability: no pending request (Alg. 1 line 5)."""
-        return len(self.pending) == 0
+        return self.core.available()
 
     def kv_utilization(self) -> float:
-        return self.alloc.used_pages / self.alloc.n_pages
+        return self.core.kv_utilization()
+
+    # ---- core state pass-throughs (probe surface + tests)
+    @property
+    def pending(self):
+        return self.core.pending
+
+    @property
+    def running(self):
+        return self.core.running
+
+    @property
+    def alloc(self):
+        return self.core.alloc
+
+    @property
+    def radix(self):
+        return self.core.radix
+
+    @property
+    def steps(self) -> int:
+        return self.core.steps
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self.core.total_prefill_tokens
+
+    @property
+    def cached_tokens(self) -> int:
+        return self.core.total_cached_tokens
+
+    @property
+    def completions(self) -> int:
+        return self.core.completions
+
+    @property
+    def peak_running(self) -> int:
+        return self.core.peak_running
 
     # ------------------------------------------------------------ submit
     def submit(self, req: GenRequest) -> None:
-        if len(req.prompt_tokens) + req.sampling.max_new_tokens > self.ecfg.max_seq_len:
-            raise ValueError("request exceeds max_seq_len")
-        self.pending.append(req)
+        self.core.submit(req)
 
-    # ------------------------------------------------------------ admit
-    def _pages_needed(self, n_tokens: int) -> int:
-        ps = self.ecfg.page_size
-        return (n_tokens + ps - 1) // ps
-
-    def _try_admit_one(self) -> bool:
-        if not self.pending or len(self.running) >= self.ecfg.max_batch:
-            return False
-        req = self.pending[0]
-        prompt = tuple(req.prompt_tokens)
-        cached_len, cached_pages = self.radix.match(prompt)
-        # never let the cache cover the WHOLE prompt — the last token must be
-        # (re)prefixed so prefill produces next-token logits
-        if cached_len >= len(prompt):
-            drop = (cached_len - len(prompt)) // self.ecfg.page_size + 1
-            cached_pages = cached_pages[:-drop]
-            cached_len = len(cached_pages) * self.ecfg.page_size
-        total = len(prompt) + req.sampling.max_new_tokens
-        need = self._pages_needed(total) - len(cached_pages)
-        short = need - self.alloc.free_pages
-        if short > 0 and self.radix.evict(short) < short:
-            return False                          # full: request stays pending
-        self.pending.popleft()
-        self.radix.take_refs(cached_pages)        # running seq's refs
-        new_pages = self.alloc.alloc(need)
-        seq = _Seq(req=req, tokens=list(prompt),
-                   pages=list(cached_pages) + new_pages,
-                   cached_pages=len(cached_pages))
-        req.cached_tokens = cached_len
-        self.cached_tokens += cached_len
-        self.prefill_tokens += len(prompt)
-        self._prefill(seq, cached_len, cached_pages, new_pages)
-        self.running.append(seq)
-        self.peak_running = max(self.peak_running, len(self.running))
-        return True
-
-    def _prefill(self, seq: _Seq, cached_len: int, cached_pages: list,
-                 new_pages: list) -> None:
-        suffix = seq.tokens[cached_len:]
-        pad = self.ecfg.prefill_pad
-        S = ((len(suffix) + pad - 1) // pad) * pad
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :len(suffix)] = suffix
-        # page list covering all S (padded) rows: real pages first, then the
-        # scratch page repeated (padding rows write garbage there; rows past
-        # len(suffix) inside real pages are masked until overwritten by decode)
-        np_total = (S + self.ecfg.page_size - 1) // self.ecfg.page_size
-        np_new = np.asarray(
-            (new_pages + [self._scratch[0]] * np_total)[:max(np_total, 1)],
-            np.int32)
-        np_past = np.asarray(cached_pages if cached_pages else self._scratch,
-                             np.int32)
-        logits, self.k_pages, self.v_pages = mr.prefill_step(
-            self.params, jnp.asarray(toks), jnp.asarray(np_new),
-            self.k_pages, self.v_pages, jnp.asarray(np_past),
-            jnp.int32(cached_len), jnp.int32(len(suffix)),
-            cfg=self.cfg, page_size=self.ecfg.page_size)
-        tok = self._sample(logits, seq.req.sampling)
-        if seq.req.first_token_s is None:
-            seq.req.first_token_s = time.monotonic()
-        self._append_token(seq, int(tok[0]))
-
-    # ------------------------------------------------------------ decode
-    def _sample(self, logits: jax.Array, sp) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return mr.sample(logits, sub, temperature=sp.temperature,
-                         top_k=sp.top_k)
-
-    def _append_token(self, seq: _Seq, tok: int) -> None:
-        seq.out.append(tok)
-        seq.tokens.append(tok)
-
+    # ------------------------------------------------------------ drive
     def step(self) -> int:
-        """One continuous-batching iteration: admit while possible, then one
-        decode for the whole batch. Returns #sequences finished."""
-        while self._try_admit_one():
-            pass
-        self._reap()                      # prefill may already hit stop/len
-        if not self.running:
-            self.steps += 1
-            return 0
-        B = len(self.running)
-        npg_max = max(len(s.pages) for s in self.running)
-        bt = np.full((B, npg_max), self._scratch[0], np.int32)
-        lens = np.zeros((B,), np.int32)
-        toks = np.zeros((B, 1), np.int32)
-        for i, s in enumerate(self.running):
-            bt[i, :len(s.pages)] = s.pages
-            lens[i] = s.pos - 1            # last token not yet in cache
-            toks[i, 0] = s.tokens[-1]
-        logits, self.k_pages, self.v_pages = mr.decode_step(
-            self.params, jnp.asarray(toks), self.k_pages, self.v_pages,
-            jnp.asarray(bt), jnp.asarray(lens),
-            cfg=self.cfg, page_size=self.ecfg.page_size)
-        sp0 = self.running[0].req.sampling
-        new = np.asarray(self._sample(logits, sp0))
-        for i, s in enumerate(self.running):
-            self._append_token(s, int(new[i]))
-        self.steps += 1
-        return self._reap()
+        """One continuous-batching iteration: admit while possible (prefill
+        each admission), then one decode for the batch. Returns #sequences
+        terminally resolved this step (finished + rejected) — every one has
+        a GenResult in `results`."""
+        plan = self.core.begin_step()
+        for seq in plan.rejected:
+            self._finish(seq, FinishReason.ABORT)
+        finished = self.core.finish_step()
+        for seq in finished:
+            why = (FinishReason.LENGTH if len(seq.out) >= seq.max_new
+                   else FinishReason.STOP)
+            self._finish(seq, why)
+        return len(finished) + len(plan.rejected)
 
-    def _reap(self) -> int:
-        done = []
-        for s in self.running:
-            sp = s.req.sampling
-            if len(s.out) >= sp.max_new_tokens:
-                done.append((s, FinishReason.LENGTH))
-            elif sp.stop_token is not None and s.out and s.out[-1] == sp.stop_token:
-                done.append((s, FinishReason.STOP))
-        for s, why in done:
-            self.running.remove(s)
-            self._finish(s, why)
-        return len(done)
-
-    def _finish(self, seq: _Seq, why: FinishReason) -> None:
+    def _finish(self, seq, why: FinishReason) -> None:
         req = seq.req
         req.finished_s = time.monotonic()
-        # claim the sequence's FULL pages into the radix cache so the next
-        # turn of this conversation reuses them, then drop the seq's refs
-        full = (seq.pos - 1) // self.ecfg.page_size   # last token not in cache
-        self.radix.insert(tuple(seq.tokens[:full * self.ecfg.page_size]),
-                          seq.pages[:full])
-        self.alloc.free_all(seq.pages)
-        self.completions += 1
         self.results[req.rid] = GenResult(
             rid=req.rid, output_tokens=tuple(seq.out), finish_reason=why,
             cached_tokens=req.cached_tokens, prompt_len=len(req.prompt_tokens),
             ttft_s=(req.first_token_s - req.arrival_s
                     if req.first_token_s else None),
-            e2e_s=req.finished_s - req.arrival_s)
+            e2e_s=req.finished_s - req.arrival_s,
+            error=seq.error)
 
-    # ------------------------------------------------------------ drive
     def run_until_idle(self, max_steps: int = 100_000) -> dict[int, GenResult]:
         for _ in range(max_steps):
             self.step()
-            if not self.running and not self.pending:
+            if not self.core.running and not self.core.pending:
                 break
         return self.results
 
@@ -252,4 +157,4 @@ class Engine:
         return [self.results[r.rid] for r in reqs]
 
     def hit_rate(self) -> float:
-        return self.cached_tokens / max(1, self.prefill_tokens)
+        return self.core.hit_rate()

@@ -1,0 +1,102 @@
+"""JAX paged-KV backend for ReplicaCore: real prefill / decode / sampling
+over the shared page pool via `model_runner`, while every scheduling
+decision (admission, eviction, preemption, chunking) stays in
+`repro.replica.core.ReplicaCore`.
+
+Chunked prefill: the core hands the uncached suffix over in page-aligned
+chunks (`ReplicaCoreConfig.prefill_chunk`), so each `mr.prefill_step` call
+is bounded — previously only the simulator's timing model could express
+that; only the final chunk's logits are sampled.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving import model_runner as mr
+
+
+class JaxPagedBackend:
+    """ReplicaBackend over a real paged KV pool. Must be `bind()`-ed to its
+    ReplicaCore after construction: the core's reserved pages provide the
+    scratch page ids used to pad block tables (never read back thanks to
+    seq_len masking, but they must stay allocated)."""
+
+    def __init__(self, model_cfg: ModelConfig, params: Any, *,
+                 n_pages: int, page_size: int, prefill_pad: int = 64,
+                 seed: int = 0):
+        self.cfg = model_cfg
+        self.params = params
+        self.page_size = page_size
+        self.prefill_pad = prefill_pad
+        kv_dtype = jax.tree.leaves(params)[0].dtype
+        self.k_pages, self.v_pages = mr.init_kv_pool(
+            model_cfg, n_pages, page_size, kv_dtype)
+        self._key = jax.random.PRNGKey(seed)
+        self._scratch: Optional[int] = None
+
+    def bind(self, core) -> None:
+        if not core.reserved:
+            raise ValueError("JaxPagedBackend needs ReplicaCoreConfig."
+                             "reserved_pages >= 1 for block-table padding")
+        self._scratch = core.reserved[0]
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, seq, start: int, end: int, sample: bool) -> Optional[int]:
+        ps = self.page_size
+        suffix = seq.tokens[start:end]
+        pad = self.prefill_pad
+        S = -(-len(suffix) // pad) * pad
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :len(suffix)] = suffix
+        # page list covering all S (padded) rows: this chunk's pages first,
+        # then the scratch page repeated (padding rows write garbage there;
+        # rows past len(suffix) inside real pages are masked until decode
+        # overwrites them)
+        np_total = -(-S // ps)
+        chunk_pages = seq.pages[start // ps: -(-end // ps)]
+        np_new = np.asarray(
+            (chunk_pages + [self._scratch] * np_total)[:max(np_total, 1)],
+            np.int32)
+        past = seq.pages[:start // ps]
+        np_past = np.asarray(past if past else [self._scratch], np.int32)
+        logits, self.k_pages, self.v_pages = mr.prefill_step(
+            self.params, jnp.asarray(toks), jnp.asarray(np_new),
+            self.k_pages, self.v_pages, jnp.asarray(np_past),
+            jnp.int32(start), jnp.int32(len(suffix)),
+            cfg=self.cfg, page_size=ps)
+        if not sample:
+            return None
+        tok = self._sample(logits, seq.req.sampling)
+        if seq.req.first_token_s is None:
+            seq.req.first_token_s = time.monotonic()
+        return int(tok[0])
+
+    # ------------------------------------------------------------ decode
+    def decode(self, seqs) -> list[int]:
+        B = len(seqs)
+        npg_max = max(len(s.pages) for s in seqs)
+        bt = np.full((B, npg_max), self._scratch, np.int32)
+        lens = np.zeros((B,), np.int32)
+        toks = np.zeros((B, 1), np.int32)
+        for i, s in enumerate(seqs):
+            bt[i, :len(s.pages)] = s.pages
+            lens[i] = s.pos - 1            # last token not yet in cache
+            toks[i, 0] = s.tokens[-1]
+        logits, self.k_pages, self.v_pages = mr.decode_step(
+            self.params, jnp.asarray(toks), self.k_pages, self.v_pages,
+            jnp.asarray(bt), jnp.asarray(lens),
+            cfg=self.cfg, page_size=self.page_size)
+        new = np.asarray(self._sample(logits, seqs[0].req.sampling))
+        return [int(t) for t in new]
+
+    # ------------------------------------------------------------ sample
+    def _sample(self, logits: jax.Array, sp) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return mr.sample(logits, sub, temperature=sp.temperature,
+                         top_k=sp.top_k)

@@ -1,127 +1,12 @@
-"""Radix prefix cache over KV pages (SGLang-RadixAttention-style, page
-granularity): maps token-block prefixes to resident page ids so prefill can
-skip recomputation — the mechanism whose locality SkyLB's routing protects.
-
-Each node = one FULL page (page_size tokens), keyed by that page's token
-tuple. Nodes hold the page id and a last-access stamp; pages referenced by
-the tree carry one allocator ref, plus one per sequence currently using
-them. Eviction walks refcount-1 leaves (tree-only refs) in LRU order.
-"""
+"""DEPRECATED shim: the page-granular radix prefix cache moved to
+`repro.replica.radix.PagedRadix` — one implementation now serves both the
+JAX paged engine (page_size = KV page) and the simulator (page_size = 1
+recovers the old token-level `SimRadix` semantics). The LRU stamp clock is
+per-instance there (the module-global clock this file used to hold made
+eviction stamps depend on unrelated engines created earlier in the same
+process). This alias remains for existing imports."""
 from __future__ import annotations
 
-import itertools
-from typing import Optional
+from repro.replica.radix import PagedRadix as PagedRadixCache
 
-from repro.serving.blocks import BlockAllocator
-
-_clock = itertools.count()
-
-
-class _Node:
-    __slots__ = ("children", "page", "stamp", "parent", "key")
-
-    def __init__(self, parent: Optional["_Node"], key, page: int = -1):
-        self.children: dict[tuple, _Node] = {}
-        self.page = page
-        self.stamp = next(_clock)
-        self.parent = parent
-        self.key = key
-
-
-class PagedRadixCache:
-    def __init__(self, allocator: BlockAllocator, page_size: int):
-        self.alloc = allocator
-        self.page_size = page_size
-        self.root = _Node(None, None)
-        self.cached_pages = 0
-
-    # ---------------------------------------------------------- lookup
-    def match(self, tokens: tuple) -> tuple[int, list[int]]:
-        """Longest full-page cached prefix. Returns (n_cached_tokens,
-        page_ids). Does NOT take refs — call `take_refs` on admit."""
-        node = self.root
-        pages: list[int] = []
-        ps = self.page_size
-        for i in range(0, len(tokens) - ps + 1, ps):
-            key = tuple(tokens[i:i + ps])
-            child = node.children.get(key)
-            if child is None:
-                break
-            child.stamp = next(_clock)
-            pages.append(child.page)
-            node = child
-        return len(pages) * ps, pages
-
-    def take_refs(self, pages: list[int]) -> None:
-        for p in pages:
-            self.alloc.incref(p)
-
-    # ---------------------------------------------------------- insert
-    def insert(self, tokens: tuple, pages: list[int]) -> int:
-        """Claim a finished sequence's FULL pages into the tree. Page ids in
-        `pages` must line up with token blocks. For pages already present the
-        caller's page is NOT claimed (dedup keeps the older copy). Returns
-        number of pages newly claimed (each gains one tree ref)."""
-        node = self.root
-        ps = self.page_size
-        claimed = 0
-        for bi, i in enumerate(range(0, len(tokens) - ps + 1, ps)):
-            if bi >= len(pages):
-                break
-            key = tuple(tokens[i:i + ps])
-            child = node.children.get(key)
-            if child is None:
-                child = _Node(node, key, pages[bi])
-                node.children[key] = child
-                self.alloc.incref(pages[bi])        # tree's own ref
-                claimed += 1
-                self.cached_pages += 1
-            child.stamp = next(_clock)
-            node = child
-        return claimed
-
-    # ---------------------------------------------------------- evict
-    def evict(self, n_pages: int) -> int:
-        """Drop up to n_pages LRU leaf pages whose only ref is the tree's.
-        Returns pages actually freed."""
-        freed = 0
-        while freed < n_pages:
-            victim = self._lru_evictable_leaf()
-            if victim is None:
-                break
-            del victim.parent.children[victim.key]
-            self.alloc.decref(victim.page)
-            self.cached_pages -= 1
-            freed += 1
-        return freed
-
-    def _lru_evictable_leaf(self) -> Optional[_Node]:
-        best: Optional[_Node] = None
-        stack = list(self.root.children.values())
-        while stack:
-            nd = stack.pop()
-            if nd.children:
-                stack.extend(nd.children.values())
-            elif self.alloc.refcount(nd.page) == 1:     # tree-only ref
-                if best is None or nd.stamp < best.stamp:
-                    best = nd
-        return best
-
-    def evictable_pages(self) -> int:
-        n = 0
-        stack = list(self.root.children.values())
-        while stack:
-            nd = stack.pop()
-            stack.extend(nd.children.values())
-            if not nd.children and self.alloc.refcount(nd.page) == 1:
-                n += 1
-        return n
-
-    def clear(self) -> None:
-        stack = list(self.root.children.values())
-        while stack:
-            nd = stack.pop()
-            stack.extend(nd.children.values())
-            self.alloc.decref(nd.page)
-        self.root = _Node(None, None)
-        self.cached_pages = 0
+__all__ = ["PagedRadixCache"]

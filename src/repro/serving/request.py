@@ -33,6 +33,7 @@ class GenRequest:
     rid: int = dataclasses.field(default_factory=lambda: next(_rid))
     user_id: str = ""
     session_key: str = ""
+    priority: int = 0                 # higher may preempt lower (replica core)
     arrival_s: float = dataclasses.field(default_factory=time.monotonic)
     # filled by the engine:
     cached_tokens: int = 0
@@ -49,3 +50,4 @@ class GenResult:
     prompt_len: int
     ttft_s: Optional[float] = None
     e2e_s: Optional[float] = None
+    error: Optional[str] = None       # set on ABORT (oversized rejection)

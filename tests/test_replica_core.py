@@ -1,0 +1,305 @@
+"""Backend-agnostic replica scheduler core: admission edge cases shared by
+both backends — fully-cached prompt (last-token re-prefill rule),
+oversized-request rejection (head-of-line fix), eviction-under-pressure,
+priority preemption + resume, chunked prefill, per-instance LRU clock."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import ReplicaConfig, ReplicaSim, Request, Sim
+from repro.replica import (BlockAllocator, CostModelBackend, PagedRadix,
+                           ReplicaBackend, ReplicaCore, ReplicaCoreConfig)
+from repro.serving import Engine, EngineConfig, GenRequest, SamplingParams
+
+
+def _gen(rid, prompt, max_new, priority=0):
+    return GenRequest(prompt_tokens=tuple(prompt), rid=rid, priority=priority,
+                      sampling=SamplingParams(max_new_tokens=max_new))
+
+
+def _drain(core, max_steps=500):
+    for _ in range(max_steps):
+        plan = core.begin_step()
+        core.finish_step()
+        if not core.running and not core.pending:
+            return plan
+    raise AssertionError("core did not drain")
+
+
+def test_backend_protocol():
+    assert isinstance(CostModelBackend(), ReplicaBackend)
+
+
+# --------------------------------------------------- oversized rejection
+
+def test_oversized_rejected_not_hol_deadlock_core():
+    """A request whose KV need exceeds the replica budget must be rejected
+    with an error, not sit at the head of pending starving everyone."""
+    core = ReplicaCore(ReplicaCoreConfig(page_size=1, n_pages=32,
+                                         record_decisions=True),
+                       CostModelBackend())
+    core.submit(_gen(0, range(30), 10))        # needs 40 > 32
+    core.submit(_gen(1, range(100, 110), 4))   # must still be served
+    plan = core.begin_step()
+    assert [s.req.rid for s in plan.rejected] == [0]
+    assert plan.rejected[0].error and "budget" in plan.rejected[0].error
+    assert [s.req.rid for s in plan.admitted] == [1]
+    _drain(core)
+    assert core.completions == 1 and core.rejections == 1
+    assert ("reject", 0) in core.decisions
+
+
+def test_oversized_rejected_sim_host():
+    sim = Sim()
+    r = ReplicaSim(sim, "r0", "us", ReplicaConfig(kv_budget=32))
+    done = []
+    big = Request(rid=0, user_id="u", session_key="u", region="us",
+                  prompt_tokens=tuple(range(30)), output_len=10,
+                  output_tokens=tuple(range(10)), done_cb=done.append)
+    ok = Request(rid=1, user_id="u", session_key="u", region="us",
+                 prompt_tokens=tuple(range(100, 110)), output_len=4,
+                 output_tokens=tuple(range(4)), done_cb=done.append)
+    r.enqueue(big)
+    r.enqueue(ok)
+    sim.run(until=60)
+    assert len(done) == 2
+    by_rid = {q.rid: q for q in done}
+    assert by_rid[0].error is not None and by_rid[0].finished is not None
+    assert by_rid[1].error is None and by_rid[1].finished is not None
+    assert r.completions == 1
+
+
+def test_reject_callback_can_resubmit_sim_host():
+    """A done_cb that synchronously re-enqueues on rejection must not wedge
+    the replica (the _step early-return re-checks pending)."""
+    sim = Sim()
+    r = ReplicaSim(sim, "r0", "us", ReplicaConfig(kv_budget=32))
+    done = []
+
+    def retry_smaller(q):
+        if q.error is not None and not done:
+            r.enqueue(Request(rid=q.rid + 1, user_id="u", session_key="u",
+                              region="us", prompt_tokens=q.prompt_tokens[:10],
+                              output_len=4, output_tokens=tuple(range(4)),
+                              done_cb=done.append))
+
+    r.enqueue(Request(rid=0, user_id="u", session_key="u", region="us",
+                      prompt_tokens=tuple(range(30)), output_len=10,
+                      output_tokens=tuple(range(10)), done_cb=retry_smaller))
+    sim.run(until=60)
+    assert len(done) == 1 and done[0].finished is not None
+    assert r.completions == 1
+
+
+def test_oversized_rejected_engine(qwen_reduced, qwen_model_params):
+    _, params = qwen_model_params
+    eng = Engine(qwen_reduced, params,
+                 EngineConfig(page_size=8, n_pages=8, max_batch=4,
+                              max_seq_len=512, prefill_pad=16))
+    rng = np.random.default_rng(0)
+    big = _gen(1000, rng.integers(1, qwen_reduced.vocab, size=40).tolist(), 32)
+    ok = _gen(1001, rng.integers(1, qwen_reduced.vocab, size=12).tolist(), 4)
+    res = eng.generate([big, ok])
+    assert res[0].finish_reason.value == "abort" and res[0].error
+    assert res[1].finish_reason.value == "length" and res[1].error is None
+    assert eng.completions == 1
+
+
+# --------------------------------------------- fully-cached prompt rule
+
+def test_fully_cached_prompt_reprefills_last_page(qwen_reduced,
+                                                  qwen_model_params):
+    """When the radix covers the WHOLE prompt, the final page is dropped so
+    prefill still produces next-token logits."""
+    _, params = qwen_model_params
+    eng = Engine(qwen_reduced, params,
+                 EngineConfig(page_size=8, n_pages=64, max_batch=4,
+                              max_seq_len=256, prefill_pad=16))
+    rng = np.random.default_rng(1)
+    p = tuple(rng.integers(1, qwen_reduced.vocab, size=16).tolist())
+    r1 = eng.generate([_gen(2000, p, 8)])[0]
+    # turn 1 claimed exactly floor((16+8-1)/8)=2 pages == the prompt
+    assert eng.radix.cached_pages == 2
+    r2 = eng.generate([_gen(2001, p, 8)])[0]
+    assert r2.cached_tokens == 8            # 16 matched, last page re-prefilled
+    assert r2.output_tokens == r1.output_tokens   # greedy => same continuation
+
+
+# --------------------------------------------- eviction under pressure
+
+def test_eviction_under_pressure_core():
+    core = ReplicaCore(ReplicaCoreConfig(page_size=1, n_pages=60,
+                                         record_decisions=True),
+                       CostModelBackend())
+    core.submit(_gen(0, range(100, 130), 10))
+    _drain(core)
+    assert core.radix.cached_pages == 39          # 30 + 10 - last token
+    core.submit(_gen(1, range(200, 230), 10))     # disjoint: needs 40 of 21 free
+    _drain(core)
+    evicted = [e for e in core.decisions if e[0] == "evict"]
+    assert len(evicted) >= 19
+    assert core.completions == 2
+    # allocator hygiene: everything free or held once by the radix
+    assert core.alloc.free_pages + core.radix.cached_pages == 60
+
+
+def test_blocked_head_not_rematched_every_step():
+    """A capacity-blocked head must not re-run the radix match (restamping
+    its prefix MRU, O(prompt) work) on iterations where nothing changed."""
+    core = ReplicaCore(ReplicaCoreConfig(page_size=1, n_pages=50),
+                       CostModelBackend())
+    calls = {"n": 0}
+    real_match = core.radix.match
+
+    def counting_match(tokens):
+        calls["n"] += 1
+        return real_match(tokens)
+
+    core.radix.match = counting_match
+    core.submit(_gen(0, range(20), 20))           # 40 of 50 pages
+    core.begin_step()
+    core.finish_step()
+    core.submit(_gen(1, range(200, 225), 10))     # 35 pages: blocked
+    calls["n"] = 0
+    for _ in range(5):                            # rid 0 still running
+        core.begin_step()
+        core.finish_step()
+    assert calls["n"] == 1                        # matched once, then memoized
+    _drain(core)                                  # unblocks once rid 0 frees
+    assert core.completions == 2
+
+
+# --------------------------------------------- preemption -> resume
+
+def test_priority_preemption_resume_core():
+    core = ReplicaCore(ReplicaCoreConfig(page_size=1, n_pages=50,
+                                         preemption=True,
+                                         record_decisions=True),
+                       CostModelBackend())
+    low = _gen(10, range(20), 20)                 # 40 pages
+    core.submit(low)
+    core.begin_step()
+    core.finish_step()
+    assert [s.req.rid for s in core.running] == [10]
+    high = _gen(11, range(300, 320), 5, priority=1)   # 25 pages > 10 free
+    core.submit(high)
+    plan = core.begin_step()
+    assert ("preempt", 10) in core.decisions
+    assert [s.req.rid for s in plan.admitted] == [11]
+    core.finish_step()
+    _drain(core)
+    assert core.completions == 2 and core.preemptions == 1
+    seqs = {e[1] for e in core.decisions if e[0] == "admit"}
+    assert seqs == {10, 11}                       # low re-admitted after high
+    # resume recompute is not a new prompt: stats count each prompt once
+    assert core.total_prefill_tokens == 20 + 20
+    assert low.cached_tokens == 0                 # first-admission value kept
+
+
+def test_preemption_never_targets_finished_seq():
+    """A sequence that completed at prefill (still in `running` until
+    finish_step) must not be preempted — re-admission would sample a token
+    beyond its max_new budget."""
+    core = ReplicaCore(ReplicaCoreConfig(page_size=1, n_pages=30,
+                                         preemption=True,
+                                         record_decisions=True),
+                       CostModelBackend())
+    core.submit(_gen(0, range(20), 1))                # done at prefill
+    core.submit(_gen(1, range(300, 315), 5, priority=1))
+    core.begin_step()
+    finished = core.finish_step()
+    assert [s.req.rid for s in finished] == [0]
+    assert len(finished[0].out) == 1                  # budget respected
+    _drain(core)
+    assert core.preemptions == 0
+    assert not any(e[0] == "preempt" for e in core.decisions)
+    done0 = [e for e in core.decisions if e[0] == "admit" and e[1] == 0]
+    assert len(done0) == 1                            # admitted exactly once
+    assert core.completions == 2
+
+
+def test_preemption_resume_engine_output_unchanged(qwen_reduced,
+                                                   qwen_model_params):
+    """Preempt-and-recompute must not change a greedy request's output."""
+    _, params = qwen_model_params
+    ecfg = EngineConfig(page_size=8, n_pages=8, max_batch=4, max_seq_len=256,
+                        prefill_pad=16, preemption=True)
+    rng = np.random.default_rng(2)
+    p_low = tuple(rng.integers(1, qwen_reduced.vocab, size=16).tolist())
+    p_high = tuple(rng.integers(1, qwen_reduced.vocab, size=16).tolist())
+
+    ref = Engine(qwen_reduced, params, ecfg).generate([_gen(3000, p_low, 16)])[0]
+
+    eng = Engine(qwen_reduced, params, ecfg)
+    eng.submit(_gen(3001, p_low, 16))             # 4 pages of 7
+    eng.step()
+    assert len(eng.running) == 1
+    eng.submit(_gen(3002, p_high, 16, priority=1))  # 4 pages > 3 free
+    eng.run_until_idle()
+    assert eng.core.preemptions == 1
+    res = eng.results[3001]
+    assert res.output_tokens == ref.output_tokens
+    assert eng.results[3002].finish_reason.value == "length"
+
+
+# --------------------------------------------- chunked prefill
+
+def test_chunked_prefill_matches_unchunked(qwen_reduced, qwen_model_params):
+    _, params = qwen_model_params
+    base = dict(page_size=8, n_pages=64, max_batch=4, max_seq_len=256,
+                prefill_pad=16)
+    rng = np.random.default_rng(3)
+    prompts = [tuple(rng.integers(1, qwen_reduced.vocab, size=n).tolist())
+               for n in (26, 9, 17)]
+    out_ref = Engine(qwen_reduced, params, EngineConfig(**base)).generate(
+        [_gen(4000 + i, p, 6) for i, p in enumerate(prompts)])
+    out_chk = Engine(qwen_reduced, params, EngineConfig(
+        **base, prefill_chunk=8)).generate(
+        [_gen(4100 + i, p, 6) for i, p in enumerate(prompts)])
+    for a, b in zip(out_ref, out_chk):
+        assert a.output_tokens == b.output_tokens
+
+
+def test_chunk_boundaries_page_aligned():
+    calls = []
+
+    class SpyBackend(CostModelBackend):
+        def prefill(self, seq, start, end, sample):
+            calls.append((start, end, sample))
+            return super().prefill(seq, start, end, sample)
+
+    core = ReplicaCore(ReplicaCoreConfig(page_size=4, n_pages=32,
+                                         prefill_chunk=8), SpyBackend())
+    core.submit(_gen(0, range(18), 4))
+    core.begin_step()
+    assert calls == [(0, 8, False), (8, 16, False), (16, 18, True)]
+    assert all(s % 4 == 0 for s, _, _ in calls)
+    _drain(core)
+
+
+# --------------------------------------------- per-instance LRU clock
+
+def test_radix_clock_is_per_instance():
+    """Eviction stamps must not depend on unrelated caches created earlier
+    in the same process (the old module-global clock did)."""
+    def build_and_evict():
+        a = BlockAllocator(16)
+        r = PagedRadix(a, page_size=4)
+        p = a.alloc(2)
+        r.insert(tuple(range(4)), [p[0]])
+        r.insert(tuple(range(100, 104)), [p[1]])
+        a.free_all(p)
+        r.match(tuple(range(4)))          # touch the first -> second is LRU
+        freed: list = []
+        r.evict(1, freed)
+        return freed, [n.stamp for n in r._leaves.values()]
+
+    f1, stamps1 = build_and_evict()
+    # churn an unrelated cache in between
+    noisy = PagedRadix(BlockAllocator(8), page_size=1)
+    q = noisy.alloc.alloc(4)
+    noisy.insert(tuple(range(4)), q)
+    f2, stamps2 = build_and_evict()
+    assert f1 == f2
+    assert stamps1 == stamps2             # stamp VALUES reproducible too

@@ -58,7 +58,9 @@ def test_replica_prefix_cache_reuse():
     r.enqueue(a)
     sim.run(until=60)
     assert seen[0].cached_tokens == 0
-    assert seen[1].cached_tokens == 32      # same prompt fully cached
+    # same prompt: everything cached except the last token, which must be
+    # re-prefilled so prefill yields next-token logits (unified core rule)
+    assert seen[1].cached_tokens == 31
 
 
 def test_straggler_slows_iterations():

@@ -86,6 +86,24 @@ def test_straggler_demotion():
     assert other.completions > victim.completions    # SP-P avoids the slow one
 
 
+def test_session_client_stops_on_rejection():
+    """An oversized turn is rejected ONCE and ends the session (history only
+    grows, so retrying every later turn would just re-fail)."""
+    from repro.core.workloads import SessionSpec, Turn, _tokens
+    import random as _random
+    rng = _random.Random(0)
+    sys = ServingSystem("skylb", {"us": 1},
+                        replica_cfg=ReplicaConfig(kv_budget=300))
+    turns = [Turn(prompt_suffix=_tokens(rng, 50),
+                  output_tokens=_tokens(rng, 100)) for _ in range(4)]
+    sys.add_session_client(SessionSpec("u0", "us", _tokens(rng, 100), turns),
+                           think_mean=0.1)
+    s = sys.run(until=60.0)
+    # turn 1: 150+100=250 <= 300 served; turn 2: 300+100=400 rejected; stop
+    assert s["requests"] == 1
+    assert s["rejected"] == 1
+
+
 def test_tot_client_tree_semantics():
     sys = ServingSystem("skylb", {"us": 2}, replica_cfg=RCFG)
     trees = tot({"us": 2}, branching=2, depth=3, trees_per_client=1)
