@@ -40,12 +40,18 @@ def run(replica_counts=(6, 9, 12), horizon: float = 240.0) -> dict:
             "forwards": sky["forwards"],
         }
     counts = sorted(out)
+    if len(counts) < 2:
+        # a single-count run (--smoke) has nothing to compare against:
+        # "cost_cut" would always be 0 while the summary still claimed a
+        # sweep — skip the cost-equivalence analysis instead
+        return out
     # cost-equivalence: smallest skylb count whose thr >= region-local at max
     target = out[counts[-1]]["local_tok_s"]
     match = next((n for n in counts
                   if out[n]["skylb_tok_s"] >= 0.97 * target), counts[-1])
     out["_summary"] = {
         "region_local_at_max": target,
+        "max_count": counts[-1],
         "skylb_match_count": match,
         "cost_cut": round(1 - match / counts[-1], 3),
     }
@@ -59,9 +65,13 @@ def main(smoke: bool = False) -> dict:
         print(f"[fig10] {n:2d} replicas: skylb {r['skylb_tok_s']:7.1f} tok/s "
               f"vs region-local {r['local_tok_s']:7.1f} (x{r['gain']}) "
               f"fwd {r['forwards']}")
-    s = out["_summary"]
-    print(f"[fig10] skylb with {s['skylb_match_count']} replicas matches "
-          f"region-local with 12 -> cost cut {s['cost_cut']:.0%}")
+    s = out.get("_summary")
+    if s is None:
+        print("[fig10] single replica count: cost-equivalence sweep skipped")
+    else:
+        print(f"[fig10] skylb with {s['skylb_match_count']} replicas matches "
+              f"region-local with {s['max_count']} -> "
+              f"cost cut {s['cost_cut']:.0%}")
     return out
 
 

@@ -7,11 +7,9 @@ aggregated; 40.5% reserved-cost reduction; on-demand = 2.2x global-reserved.
 """
 from __future__ import annotations
 
-from repro.core.cost import (autoscale_on_demand_cost, global_peak_cost,
-                             region_local_cost, variance_stats)
-from repro.core.workloads import diurnal_series
-
-REGIONS5 = ("us", "eu", "asia", "sa", "oceania")
+from repro.core.workloads import REGIONS5, diurnal_series
+from repro.provision.cost import (autoscale_on_demand_cost, global_peak_cost,
+                                  region_local_cost, variance_stats)
 
 
 def run(hours: int = 24, step_h: float = 0.5, kappa: float = 40.0) -> dict:

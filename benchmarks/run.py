@@ -27,6 +27,9 @@ SUMMARY_KEYS = frozenset({
     "throughput_tok_s", "skylb_tok_s", "local_tok_s", "gap_pct",
     "within_user", "cross_user_same_region", "cross_region",
     "saving_vs_region_local", "forwards", "rejected",
+    # fig11 elastic-provisioning gate: measured dollars + SLO + drops
+    "cost_usd_per_day", "slo_attainment", "unresolved",
+    "global_vs_per_region_saving",
 })
 
 
@@ -67,7 +70,7 @@ def main() -> int:
 
     from benchmarks import (beyond_steal, fig3_aggregation, fig5_prefix,
                             fig6_hitrate, fig8_macro, fig9_pushing,
-                            fig10_diurnal, kernels_bench)
+                            fig10_diurnal, fig11_provision, kernels_bench)
     suites = {
         "fig3": fig3_aggregation.main,
         "fig5": fig5_prefix.main,
@@ -75,6 +78,7 @@ def main() -> int:
         "fig8": fig8_macro.main,
         "fig9": fig9_pushing.main,
         "fig10": fig10_diurnal.main,
+        "fig11": fig11_provision.main,
         "kernels": kernels_bench.main,
         "steal": beyond_steal.main,
     }

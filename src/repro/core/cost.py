@@ -1,58 +1,15 @@
-"""Provisioning cost model (paper §2.2, Fig. 3b / Fig. 10).
-
-Prices from the paper: 3-year-reserved p5.48xlarge $37.56/h vs on-demand
-$98.32/h (ratio 2.617). Capacity unit = one replica-hour serving kappa
-requests/hour.
+"""DEPRECATED shim — `repro.core.cost` moved to `repro.provision.cost`
+when the elastic provisioning subsystem landed (`repro.provision`: measured
+$-metering, scaler policies, fleet controller). Import from
+`repro.provision` instead.
 """
-from __future__ import annotations
+from repro.provision.cost import (ON_DEMAND_RATE, OD_OVER_RES,  # noqa: F401
+                                  RESERVED_RATE, autoscale_on_demand_cost,
+                                  global_peak_cost, region_local_cost,
+                                  replicas_needed, variance_stats)
 
-import math
-from typing import Mapping, Sequence
-
-RESERVED_RATE = 37.56 / 8      # $/GPU-hour (8x H100 box)
-ON_DEMAND_RATE = 98.32 / 8
-OD_OVER_RES = ON_DEMAND_RATE / RESERVED_RATE
-
-
-def replicas_needed(load: float, kappa: float) -> int:
-    return max(1, math.ceil(load / kappa))
-
-
-def region_local_cost(series: Mapping[str, Sequence[float]], kappa: float,
-                      hours: float = 24.0, rate: float = RESERVED_RATE) -> float:
-    """Provision every region for its own peak (reserved)."""
-    total_replicas = sum(replicas_needed(max(xs), kappa)
-                         for xs in series.values())
-    return total_replicas * rate * hours
-
-
-def global_peak_cost(series: Mapping[str, Sequence[float]], kappa: float,
-                     hours: float = 24.0, rate: float = RESERVED_RATE) -> float:
-    """Provision once for the AGGREGATED global peak (SkyLB's model)."""
-    n = len(next(iter(series.values())))
-    agg = [sum(series[r][i] for r in series) for i in range(n)]
-    return replicas_needed(max(agg), kappa) * rate * hours
-
-
-def autoscale_on_demand_cost(series: Mapping[str, Sequence[float]], kappa: float,
-                             hours: float = 24.0,
-                             rate: float = ON_DEMAND_RATE) -> float:
-    """PERFECT per-interval autoscaling on on-demand instances (lower bound
-    for the on-demand strategy: no provisioning delay, always available)."""
-    n = len(next(iter(series.values())))
-    step = hours / n
-    total = 0.0
-    for xs in series.values():
-        total += sum(replicas_needed(x, kappa) for x in xs) * step * rate
-    return total
-
-
-def variance_stats(series: Mapping[str, Sequence[float]]) -> dict:
-    """Per-region and aggregated peak/trough ratios (Fig. 3a)."""
-    per = {r: (max(xs) / max(1e-9, min(xs))) for r, xs in series.items()}
-    n = len(next(iter(series.values())))
-    agg = [sum(series[r][i] for r in series) for i in range(n)]
-    return {"per_region": per,
-            "per_region_min": min(per.values()),
-            "per_region_max": max(per.values()),
-            "aggregated": max(agg) / max(1e-9, min(agg))}
+__all__ = [
+    "ON_DEMAND_RATE", "OD_OVER_RES", "RESERVED_RATE",
+    "autoscale_on_demand_cost", "global_peak_cost", "region_local_cost",
+    "replicas_needed", "variance_stats",
+]

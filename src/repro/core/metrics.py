@@ -20,8 +20,15 @@ class RunMetrics:
     completed: list = dataclasses.field(default_factory=list)
     rejected: list = dataclasses.field(default_factory=list)
     forwards: list = dataclasses.field(default_factory=list)
+    issued: int = 0
     t_start: float = 0.0
     t_end: float = 0.0
+    # measured provisioning dollars (repro.provision.CostMeter.summary),
+    # set by FleetController.finalize() on elastic-fleet runs
+    cost: Optional[dict] = None
+
+    def on_issued(self, req) -> None:
+        self.issued += 1
 
     def on_done(self, req) -> None:
         self.completed.append(req)
@@ -30,12 +37,26 @@ class RunMetrics:
         """Replica refused the request (oversized for its KV budget)."""
         self.rejected.append(req)
 
+    def _client_ttfts(self) -> list:
+        """Client-observed TTFTs — the ONE definition behind both the
+        reported percentiles and SLO attainment."""
+        return [r.ttft - r.issued for r in self.completed
+                if r.finished is not None and r.ttft is not None]
+
+    def slo_attainment(self, ttft_slo_s: float) -> float:
+        """Fraction of completed requests whose client-observed TTFT met
+        the SLO (the paper's cost claim is 'cheaper at EQUAL SLO')."""
+        ttft = self._client_ttfts()
+        if not ttft:
+            return float("nan")
+        return sum(1 for t in ttft if t <= ttft_slo_s) / len(ttft)
+
     # ---- summary -----------------------------------------------------
     def summary(self, replicas: Optional[list] = None) -> dict:
         reqs = [r for r in self.completed if r.finished is not None]
         dur = max(1e-9, self.t_end - self.t_start)
         out_tokens = sum(r.output_len for r in reqs)
-        ttft = [r.ttft - r.issued for r in reqs if r.ttft is not None]
+        ttft = self._client_ttfts()
         e2e = [r.finished - r.issued for r in reqs]
         prompt_tokens = sum(len(r.prompt_tokens) for r in reqs)
         cached = sum(r.cached_tokens for r in reqs)
@@ -51,7 +72,15 @@ class RunMetrics:
             "hit_rate": cached / max(1, prompt_tokens),
             "forwards": len(self.forwards),
             "rejected": len(self.rejected),
+            "issued": self.issued,
+            # issued but neither completed nor rejected by t_end: in-flight
+            # at the horizon on a healthy run; DROPPED work if a drill
+            # expected the system to settle (outage test asserts 0)
+            "unresolved": max(0, self.issued - len(self.completed)
+                              - len(self.rejected)),
         }
+        if self.cost is not None:
+            s.update(self.cost)
         if replicas:
             peaks = [r.peak_outstanding for r in replicas]
             s["peak_outstanding_max"] = max(peaks)

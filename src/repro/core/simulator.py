@@ -119,6 +119,11 @@ class ReplicaSim:
             preemption=cfg.preemption), self.backend)
         self._stepping = False
         self.alive = True
+        self.draining = False
+        self._drained_cb: Optional[Callable] = None
+        # where rejected-at-the-door requests go while draining (the fleet
+        # system points this back at a live LB so nothing is dropped)
+        self.on_bounce: Optional[Callable] = None
 
     # ---- introspection (what probes see)
     def pending_count(self) -> int:
@@ -161,8 +166,53 @@ class ReplicaSim:
 
     # ---- request entry
     def enqueue(self, req: Request) -> None:
+        if self.draining or not self.alive:
+            # a drained replica finishes what it HAS but admits nothing new;
+            # requests already on the wire when the drain began bounce back
+            # for re-routing instead of being dropped
+            if self.on_bounce is not None:
+                self.on_bounce(req)
+                return
+            req.error = f"replica {self.id} is draining"
+            req.finished = self.sim.now
+            if req.done_cb:
+                req.done_cb(req)
+            return
         self.core.submit(req)
         self._kick()
+
+    # ---- elastic membership (repro.provision)
+    def drain(self, on_drained: Optional[Callable] = None) -> None:
+        """Graceful decommission: stop admitting, let every in-flight
+        request (pending + running) finish, then go dead and fire
+        `on_drained(self)`. Contrast `kill()`, which drops in-flight."""
+        self.draining = True
+        self._drained_cb = on_drained
+        # already idle: complete on a fresh event so same-tick enqueues
+        # that were delivered before the drain still land first
+        self.sim.after(0.0, self._maybe_finish_drain)
+
+    def kill(self) -> None:
+        """Hard stop: in-flight work is lost (crash semantics). A drain
+        already in progress completes vacuously — its callback must still
+        fire, or the caller (fleet controller lease, cost meter) waits
+        forever on a replica that will never go idle."""
+        self.alive = False
+        if self.draining:
+            self.sim.after(0.0, self._maybe_finish_drain)
+
+    def _maybe_finish_drain(self) -> None:
+        if not self.draining:
+            return
+        # a dead replica drains vacuously (its in-flight work is already
+        # lost) — the callback must still fire or callers wait forever
+        if self.alive and (self._stepping or self.core.outstanding() > 0):
+            return
+        self.alive = False
+        self.draining = False
+        cb, self._drained_cb = self._drained_cb, None
+        if cb is not None:
+            cb(self)
 
     def _kick(self) -> None:
         if not self._stepping and self.alive:
@@ -189,6 +239,7 @@ class ReplicaSim:
                 self.sim.after(0.0, self._step)
             else:
                 self._stepping = False
+                self._maybe_finish_drain()
             return
         dt = self.backend.step_cost(len(self.core.running))
         self.sim.after(dt, lambda a=plan.admitted: self._finish_step(a))
@@ -208,6 +259,7 @@ class ReplicaSim:
             self.sim.after(0.0, self._step)
         else:
             self._stepping = False
+            self._maybe_finish_drain()
 
 
 # ------------------------------------------------------------------ network
@@ -266,7 +318,12 @@ class _SimTransport:
         return p is not None and p.alive
 
     def deliver(self, req: Request, target_id: str) -> None:
-        r = self.lb.replicas[target_id]
+        r = self.lb.replicas.get(target_id)
+        if r is None:
+            # target decommissioned between the eligibility check and the
+            # send (elastic membership): requeue instead of crashing
+            self.lb.sim.after(0.0, lambda: self.lb.on_request(req))
+            return
         self.lb.sim.after(self.lb.net.one_way(self.lb.region, r.region),
                           lambda: r.enqueue(req))
 
@@ -347,8 +404,12 @@ class LoadBalancerSim:
         self.core.target_added(self._view_of(r))
 
     def remove_replica(self, rid: str) -> Optional[ReplicaSim]:
+        """Idempotent: routing state (prefix-trie records, hashring vnodes,
+        probe snapshot) is forgotten exactly once, on the removal that
+        actually owned the replica — repeated removals are no-ops."""
         r = self.replicas.pop(rid, None)
-        self.core.target_removed(rid)
+        if r is not None:
+            self.core.target_removed(rid)
         return r
 
     def peer(self, lb: "LoadBalancerSim") -> None:
@@ -382,6 +443,7 @@ class LoadBalancerSim:
             TargetView(
                 id=lid, available=True,
                 n_avail_replicas=lb.n_avail_replicas(),
+                n_replicas=len(lb.replicas),
                 queue_len=len(lb.queue),
                 outstanding=sum(x.outstanding()
                                 for x in lb.replicas.values()))

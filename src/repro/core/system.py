@@ -43,20 +43,22 @@ class ServingSystem:
         self._rid = itertools.count()
         self._req_id = itertools.count()
         self.rng = random.Random(seed)
+        self.replica_cfg = replica_cfg          # template for elastic adds
         self._build(variant, replicas_per_region, replica_cfg)
         self.controller = Controller(self.sim, self.net,
                                      list(self.lbs.values()))
 
     # ------------------------------------------------------------ build
+    def _mk_replica(self, region: str, cfg: ReplicaConfig) -> ReplicaSim:
+        r = ReplicaSim(self.sim, f"{region}-r{next(self._rid)}", region,
+                       dataclasses.replace(cfg))
+        r.on_bounce = lambda req, rep=r: self._bounce(rep, req)
+        self.replicas.append(r)
+        self._region_of[r.id] = region
+        return r
+
     def _mk_replicas(self, region: str, n: int, cfg: ReplicaConfig):
-        out = []
-        for _ in range(n):
-            r = ReplicaSim(self.sim, f"{region}-r{next(self._rid)}", region,
-                           dataclasses.replace(cfg))
-            self.replicas.append(r)
-            self._region_of[r.id] = region
-            out.append(r)
-        return out
+        return [self._mk_replica(region, cfg) for _ in range(n)]
 
     def _build(self, variant, rpr, rcfg):
         spec = build_routing(variant)
@@ -84,6 +86,46 @@ class ServingSystem:
             for b in self.lbs.values():
                 a.peer(b)
 
+    # ------------------------------------------ elastic membership
+    def lb_of(self, region: str) -> LoadBalancerSim:
+        """The LB that OWNS a region's replicas (vs lb_for = nearest live).
+        Single-LB variants own every region from the one central LB."""
+        if len(self.lbs) == 1:
+            return next(iter(self.lbs.values()))
+        return self.lbs[f"lb-{region}"]
+
+    def add_replica(self, region: str,
+                    cfg: Optional[ReplicaConfig] = None) -> ReplicaSim:
+        """A replica joins at runtime: registered with its region's LB
+        (fresh TargetView — routable before the next probe)."""
+        r = self._mk_replica(region, cfg or self.replica_cfg)
+        self.lb_of(region).add_replica(r)
+        return r
+
+    def drain_replica(self, rid: str, on_drained=None) -> ReplicaSim:
+        """Graceful decommission: leave the routing tables NOW (prefix-trie
+        records / hashring vnodes forgotten once, no new admissions), finish
+        in-flight work, then fire on_drained(replica). The replica stays in
+        self.replicas so its stats survive into the run summary."""
+        owner = next((lb for lb in self.lbs.values() if rid in lb.replicas),
+                     None)
+        r = (owner.remove_replica(rid) if owner is not None
+             else next((x for x in self.replicas if x.id == rid), None))
+        if r is None:
+            raise ValueError(f"unknown replica {rid!r}")
+        r.drain(on_drained)
+        return r
+
+    def _bounce(self, replica: ReplicaSim, req: Request) -> None:
+        """A request reached a replica after its drain began (it was on the
+        wire when admission stopped): hand it back to the nearest live LB
+        for a fresh routing decision rather than dropping it."""
+        req.forwarded = False
+        req.replica = None
+        lb = self.lb_for(replica.region)
+        self.sim.after(self.net.one_way(replica.region, lb.region),
+                       lambda: lb.on_request(req))
+
     # ------------------------------------------------------------ routing
     def lb_for(self, region: str) -> LoadBalancerSim:
         """DNS resolution: nearest live LB (paper §4.1)."""
@@ -92,6 +134,7 @@ class ServingSystem:
 
     def submit(self, req: Request, done_cb) -> None:
         req.issued = self.sim.now
+        self.metrics.on_issued(req)
         lb = self.lb_for(req.region)
 
         def wrapped_done(r: Request):
@@ -201,6 +244,35 @@ class ServingSystem:
             issue_layer(0, [()])
 
         self.sim.after(self.rng.uniform(0, 0.5), run_tree)
+
+    def add_open_loop(self, region: str, rate_fn, until: float, *,
+                      prompt_len: int = 96, output_len: int = 48,
+                      template_len: int = 48, seed: int = 0) -> None:
+        """OPEN-loop arrivals for one region: a non-homogeneous Poisson
+        process at `rate_fn(sim_now)` requests/sim-second (piecewise
+        approximation: the rate is sampled when each gap is drawn — fine
+        for diurnal curves that move over hours, not seconds). Prompts
+        share a per-region template prefix; the suffix is unique. This is
+        the demand side of the elastic-provisioning scenarios (fig11),
+        where load must vary with the clock rather than with client
+        think-time."""
+        rng = random.Random(stable_hash(seed, region, "openloop"))
+        template = _tokens(rng, template_len)
+
+        def arrive():
+            if self.sim.now >= until:
+                return
+            rid = next(self._req_id)
+            req = Request(
+                rid=rid, user_id=f"{region}-open", session_key=f"{region}-o{rid}",
+                region=region, prompt_tokens=template + _tokens(rng, prompt_len),
+                output_len=output_len, output_tokens=_tokens(rng, output_len))
+            self.submit(req, lambda r: None)
+            self.sim.after(rng.expovariate(max(1e-9, rate_fn(self.sim.now))),
+                           arrive)
+
+        self.sim.after(rng.expovariate(max(1e-9, rate_fn(self.sim.now))),
+                       arrive)
 
     # ------------------------------------------------------------ run
     def run(self, until: float) -> dict:

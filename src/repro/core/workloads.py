@@ -148,11 +148,23 @@ def tot(clients_per_region: dict[str, int], *, branching: int = 2,
 TZ_OFFSET_H = {"us": 0.0, "eu": -7.0, "asia": -13.0,
                "sa": 2.0, "oceania": -16.0}       # 5 regions for Fig. 3
 
+#: the five-region set of the paper's diurnal/cost figures (Fig. 2/3)
+REGIONS5 = ("us", "eu", "asia", "sa", "oceania")
+
 
 def diurnal_rate(region: str, hour: float, *, base: float = 0.15,
                  amp: float = 1.0, peak_hour: float = 14.0) -> float:
     """Relative request rate for a region at a given UTC hour (0-24)."""
-    local = (hour + TZ_OFFSET_H.get(region, 0.0)) % 24.0
+    try:
+        off = TZ_OFFSET_H[region]
+    except KeyError:
+        # same silent-fallback class as the unknown-RTT bug: an unknown
+        # region used to quietly get UTC's curve, which flattens nothing
+        # and peaks in the wrong place — fail loudly instead
+        raise ValueError(
+            f"no timezone offset configured for region {region!r} "
+            f"(known: {sorted(TZ_OFFSET_H)})") from None
+    local = (hour + off) % 24.0
     x = math.cos((local - peak_hour) / 24.0 * 2 * math.pi)
     return base + amp * max(0.0, x) ** 2
 
@@ -161,17 +173,16 @@ def diurnal_series(regions=REGIONS, hours: int = 24, step_h: float = 1.0,
                    seed: int = 0, noise: float = 0.05,
                    amp_by_region: Optional[dict] = None
                    ) -> dict[str, list[float]]:
+    # integer sample count: the old `while t < hours: t += step_h` loop
+    # accumulated float error for non-integer steps (step_h=0.1 emitted 241
+    # samples instead of 240), so per-region series could go ragged
+    n = max(1, round(hours / step_h))
     rng = random.Random(seed)
     out = {}
     for r in regions:
         amp = (amp_by_region or {}).get(r, 1.0)
-        xs = []
-        t = 0.0
-        while t < hours:
-            v = diurnal_rate(r, t, amp=amp) * (1 + rng.uniform(-noise, noise))
-            xs.append(v)
-            t += step_h
-        out[r] = xs
+        out[r] = [diurnal_rate(r, i * step_h, amp=amp)
+                  * (1 + rng.uniform(-noise, noise)) for i in range(n)]
     return out
 
 

@@ -1,0 +1,194 @@
+"""Elastic fleet controller: drives replica membership through sim time.
+
+`FleetController` sits between a `ScalerPolicy` (how many replicas each
+region should have right now) and a fleet-aware `ServingSystem` (which can
+add a live `ReplicaSim` to a region's LB and gracefully drain one out).
+On every evaluation tick it reconciles desired vs actual per (region,
+billing tier):
+
+  scale UP    reserved capacity appears immediately (it was paid for in
+              advance); on-demand capacity arrives after `provision_delay_h`
+              of simulated time — and is BILLED from the moment it was
+              requested, because spin-up is not free.
+  scale DOWN  the newest on-demand replica is DRAINED, never killed:
+              admission stops at once (it leaves the LB's routing tables,
+              its prefix-trie / hashring entries are forgotten), in-flight
+              requests finish, and only then does billing stop.
+
+A `CostMeter` integrates every replica's actual lifetime into dollars;
+`finalize()` lands the result in `RunMetrics` so benchmark summaries can
+report measured $-per-day next to SLO attainment.
+
+`decommission_region()` is the region-outage drill: drain everything in a
+region mid-run and let cross-region routing re-absorb its traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+from repro.provision.meter import ON_DEMAND, RESERVED, CostMeter
+from repro.provision.scalers import ScalerPolicy
+
+PROVISIONING, LIVE, DRAINING, GONE = ("provisioning", "live",
+                                      "draining", "gone")
+
+
+@dataclasses.dataclass
+class Lease:
+    """One replica's provisioning lifecycle (not the ReplicaSim itself)."""
+    lease_id: int
+    region: str
+    kind: str                      # RESERVED | ON_DEMAND
+    state: str                     # PROVISIONING -> LIVE -> DRAINING -> GONE
+    requested_at: float
+    rid: Optional[str] = None      # set when the replica comes up
+    replica: object = None
+
+
+class FleetController:
+    def __init__(self, system, scaler: ScalerPolicy, *, sim_s_per_h: float,
+                 meter: Optional[CostMeter] = None,
+                 eval_interval_s: float = 1.0,
+                 provision_delay_h: float = 0.25,
+                 horizon_s: Optional[float] = None):
+        self.sys = system
+        self.sim = system.sim
+        self.scaler = scaler
+        self.sim_s_per_h = sim_s_per_h
+        self.meter = meter or CostMeter(sim_s_per_h)
+        self.eval_interval_s = eval_interval_s
+        self.provision_delay_h = provision_delay_h
+        self.horizon_s = horizon_s
+        self.blocked: set[str] = set()      # regions under outage drill
+        self._fleet: dict[str, list[Lease]] = {r: [] for r in scaler.regions}
+        self._lease_ids = itertools.count()
+        self.events: list[tuple[float, str]] = []
+        self._reconcile()                   # initial fleet, up at t=0
+        self.sim.after(eval_interval_s, self._tick)
+
+    # ------------------------------------------------------------ state
+    def fleet_counts(self, region: str) -> dict[str, int]:
+        out = {RESERVED: 0, ON_DEMAND: 0}
+        for lease in self._fleet[region]:
+            if lease.state in (PROVISIONING, LIVE):
+                out[lease.kind] += 1
+        return out
+
+    def live_replicas(self, region: Optional[str] = None) -> list:
+        regions = [region] if region else list(self._fleet)
+        return [lease.replica for r in regions for lease in self._fleet[r]
+                if lease.state == LIVE]
+
+    # ------------------------------------------------------------ loop
+    def _tick(self) -> None:
+        if self.horizon_s is not None and self.sim.now >= self.horizon_s:
+            return
+        self._reconcile()
+        self.sim.after(self.eval_interval_s, self._tick)
+
+    def _reconcile(self) -> None:
+        hour = (self.sim.now / self.sim_s_per_h) % 24.0
+        for region in self.scaler.regions:
+            if region in self.blocked:
+                continue
+            want = self.scaler.desired(region, hour)
+            have = self.fleet_counts(region)
+            for kind in (RESERVED, ON_DEMAND):
+                delta = want.get(kind, 0) - have[kind]
+                if delta > 0:
+                    # reserved capacity was provisioned ahead of time;
+                    # on-demand pays the spin-up lag
+                    delay = (0.0 if kind == RESERVED
+                             else self.provision_delay_h * self.sim_s_per_h)
+                    for _ in range(delta):
+                        self._launch(region, kind, delay)
+                elif delta < 0:
+                    # shed newest first, and prefer CANCELLING spin-ups
+                    # that haven't arrived (free, instant) over draining
+                    # live serving capacity
+                    mine = [lease for lease in self._fleet[region]
+                            if lease.kind == kind]
+                    pending = [x for x in mine if x.state == PROVISIONING]
+                    live = [x for x in mine if x.state == LIVE]
+                    victims = (list(reversed(pending))
+                               + list(reversed(live)))[:-delta]
+                    for lease in victims:
+                        self._retire(lease)
+
+    # ------------------------------------------------------------ up/down
+    @staticmethod
+    def _bill_key(lease: Lease) -> str:
+        """Meter by lease, not replica id: billing starts at the REQUEST,
+        before any ReplicaSim exists — a spin-up still pending when the
+        books close must show up on the bill (it's the dollars the
+        scale-up-lag sweep measures)."""
+        return f"lease-{lease.lease_id}"
+
+    def _launch(self, region: str, kind: str, delay_s: float) -> Lease:
+        lease = Lease(next(self._lease_ids), region, kind, PROVISIONING,
+                      requested_at=self.sim.now)
+        self._fleet[region].append(lease)
+        # billed from the REQUEST, not from readiness: the spin-up window
+        # costs money (and, for SLOs, serves nothing)
+        self.meter.on_start(self._bill_key(lease), kind, region,
+                            lease.requested_at)
+
+        def arrive():
+            if lease.state != PROVISIONING:     # cancelled mid-spin-up
+                return
+            r = self.sys.add_replica(region)
+            lease.rid, lease.replica, lease.state = r.id, r, LIVE
+            self.events.append((self.sim.now, f"up {kind} {r.id}"))
+
+        if delay_s <= 0.0:
+            arrive()
+        else:
+            self.sim.after(delay_s, arrive)
+        return lease
+
+    def _retire(self, lease: Lease) -> None:
+        if lease.state == PROVISIONING:
+            lease.state = GONE                  # never came up: refunded
+            self.meter.cancel(self._bill_key(lease))
+            self._fleet[lease.region].remove(lease)
+            return
+        if lease.state != LIVE:
+            return
+        lease.state = DRAINING
+        self.events.append((self.sim.now, f"drain {lease.kind} {lease.rid}"))
+
+        def drained(_replica):
+            self.meter.on_stop(self._bill_key(lease), self.sim.now)
+            lease.state = GONE
+            self._fleet[lease.region].remove(lease)
+            self.events.append((self.sim.now, f"down {lease.kind} {lease.rid}"))
+
+        self.sys.drain_replica(lease.rid, on_drained=drained)
+
+    # ------------------------------------------------------------ drills
+    def decommission_region(self, region: str) -> int:
+        """Outage drill: drain EVERY replica in a region (reserved included)
+        and stop the scaler from re-provisioning it. Returns the number of
+        replicas sent draining."""
+        self.blocked.add(region)
+        n = 0
+        for lease in list(self._fleet[region]):
+            if lease.state in (PROVISIONING, LIVE):
+                self._retire(lease)
+                n += 1
+        self.events.append((self.sim.now, f"outage {region} ({n} draining)"))
+        return n
+
+    def restore_region(self, region: str) -> None:
+        self.blocked.discard(region)
+
+    # ------------------------------------------------------------ report
+    def finalize(self, until: Optional[float] = None) -> dict:
+        """Close the books at `until` (default: now) and land the measured
+        cost in the system's RunMetrics."""
+        t = self.sim.now if until is None else until
+        cost = self.meter.summary(t)
+        self.sys.metrics.cost = cost
+        return cost

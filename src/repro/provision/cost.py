@@ -1,0 +1,89 @@
+"""Analytic provisioning cost model (paper §2.2, Fig. 3b / Fig. 10).
+
+Prices from the paper: 3-year-reserved p5.48xlarge $37.56/h vs on-demand
+$98.32/h (ratio 2.617). Capacity unit = one replica-hour serving kappa
+requests/hour.
+
+This is the CLOSED-FORM model (peaks of a demand series -> replica counts
+-> dollars). The MEASURED model — metering actual replica-hours of an
+elastic fleet through simulated time — lives next door in
+`repro.provision.meter.CostMeter`; `benchmarks/fig11_provision.py` reports
+the measured numbers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping, Sequence
+
+RESERVED_RATE = 37.56 / 8      # $/GPU-hour (8x H100 box)
+ON_DEMAND_RATE = 98.32 / 8
+OD_OVER_RES = ON_DEMAND_RATE / RESERVED_RATE
+
+
+def replicas_needed(load: float, kappa: float) -> int:
+    return max(1, math.ceil(load / kappa))
+
+
+def _aligned_len(series: Mapping[str, Sequence[float]]) -> int:
+    """Sample count shared by every region's series. Cross-region
+    aggregation indexes series[r][i] for a common i, so ragged inputs
+    (different step_h, trimmed traces) would either IndexError or silently
+    drop the tail of the longer regions — reject them loudly instead."""
+    if not series:
+        raise ValueError("empty demand series")
+    lens = {r: len(xs) for r, xs in series.items()}
+    n = next(iter(lens.values()))
+    if any(v != n for v in lens.values()):
+        raise ValueError(f"ragged demand series (cannot aggregate "
+                         f"across regions): lengths {lens}")
+    if n == 0:
+        raise ValueError("demand series has zero samples")
+    return n
+
+
+def _aggregate(series: Mapping[str, Sequence[float]]) -> list[float]:
+    n = _aligned_len(series)
+    return [sum(series[r][i] for r in series) for i in range(n)]
+
+
+def region_local_cost(series: Mapping[str, Sequence[float]], kappa: float,
+                      hours: float = 24.0, rate: float = RESERVED_RATE) -> float:
+    """Provision every region for its own peak (reserved)."""
+    total_replicas = sum(replicas_needed(max(xs), kappa)
+                         for xs in series.values())
+    return total_replicas * rate * hours
+
+
+def global_peak_cost(series: Mapping[str, Sequence[float]], kappa: float,
+                     hours: float = 24.0, rate: float = RESERVED_RATE) -> float:
+    """Provision once for the AGGREGATED global peak (SkyLB's model)."""
+    agg = _aggregate(series)
+    return replicas_needed(max(agg), kappa) * rate * hours
+
+
+def autoscale_on_demand_cost(series: Mapping[str, Sequence[float]], kappa: float,
+                             hours: float = 24.0,
+                             rate: float = ON_DEMAND_RATE) -> float:
+    """PERFECT per-interval autoscaling on on-demand instances (lower bound
+    for the on-demand strategy: no provisioning delay, always available).
+
+    Each region integrates over its OWN sample count: regions don't need a
+    shared grid here, so ragged series (different step_h per region) are
+    fine — every region's samples just span the same `hours` window."""
+    total = 0.0
+    for r, xs in series.items():
+        if not xs:
+            raise ValueError(f"region {r!r} has an empty demand series")
+        step = hours / len(xs)
+        total += sum(replicas_needed(x, kappa) for x in xs) * step * rate
+    return total
+
+
+def variance_stats(series: Mapping[str, Sequence[float]]) -> dict:
+    """Per-region and aggregated peak/trough ratios (Fig. 3a)."""
+    per = {r: (max(xs) / max(1e-9, min(xs))) for r, xs in series.items()}
+    agg = _aggregate(series)
+    return {"per_region": per,
+            "per_region_min": min(per.values()),
+            "per_region_max": max(per.values()),
+            "aggregated": max(agg) / max(1e-9, min(agg))}

@@ -1,0 +1,97 @@
+"""Dollar metering for an ELASTIC fleet: integrate reserved / on-demand
+replica-hours over actual membership intervals through simulated time.
+
+The analytic model in `repro.provision.cost` prices a demand curve; this
+prices what the fleet actually did — every replica is metered from the
+moment its provisioning starts (on-demand instances bill while they spin
+up, exactly why scale-up lag costs money twice: idle dollars AND missed
+SLOs) until its drain completes, at its tier's hourly rate.
+
+Sim time runs in seconds; `sim_s_per_h` maps it to billed hours so a
+24 h diurnal day can be compressed into a few hundred sim-seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.provision.cost import ON_DEMAND_RATE, RESERVED_RATE
+
+RESERVED, ON_DEMAND = "reserved", "on_demand"
+
+
+@dataclasses.dataclass
+class _Interval:
+    rid: str
+    kind: str                     # RESERVED | ON_DEMAND
+    region: str
+    start: float                  # sim seconds (provisioning start)
+    end: Optional[float] = None   # sim seconds (drain complete); None = live
+
+
+class CostMeter:
+    """Meters replica-hours -> dollars, by billing tier and region."""
+
+    def __init__(self, sim_s_per_h: float, *,
+                 reserved_rate: float = RESERVED_RATE,
+                 on_demand_rate: float = ON_DEMAND_RATE):
+        if sim_s_per_h <= 0:
+            raise ValueError("sim_s_per_h must be positive")
+        self.sim_s_per_h = sim_s_per_h
+        self.rates = {RESERVED: reserved_rate, ON_DEMAND: on_demand_rate}
+        self._live: dict[str, _Interval] = {}
+        self._closed: list[_Interval] = []
+
+    # ------------------------------------------------------------ record
+    def on_start(self, rid: str, kind: str, region: str, t: float) -> None:
+        if kind not in self.rates:
+            raise ValueError(f"unknown billing tier {kind!r}")
+        if rid in self._live:
+            raise ValueError(f"replica {rid} already metered")
+        self._live[rid] = _Interval(rid, kind, region, t)
+
+    def on_stop(self, rid: str, t: float) -> None:
+        iv = self._live.pop(rid, None)
+        if iv is None:
+            return                       # never metered (or already closed)
+        iv.end = t
+        self._closed.append(iv)
+
+    def cancel(self, rid: str) -> None:
+        """Drop a live interval WITHOUT billing it — a spin-up cancelled
+        before the instance ever came up is refunded."""
+        self._live.pop(rid, None)
+
+    # ------------------------------------------------------------ report
+    def _intervals(self, until: float) -> list[_Interval]:
+        live = [dataclasses.replace(iv, end=until)
+                for iv in self._live.values() if iv.start < until]
+        return self._closed + live
+
+    def replica_hours(self, until: float) -> dict[str, float]:
+        out = {RESERVED: 0.0, ON_DEMAND: 0.0}
+        for iv in self._intervals(until):
+            out[iv.kind] += max(0.0, min(iv.end, until) - iv.start) \
+                / self.sim_s_per_h
+        return out
+
+    def dollars(self, until: float) -> dict[str, float]:
+        hours = self.replica_hours(until)
+        cost = {k: h * self.rates[k] for k, h in hours.items()}
+        cost["total"] = sum(cost.values())
+        return cost
+
+    def summary(self, until: float) -> dict:
+        """Merged into RunMetrics.summary() by the fleet-aware system."""
+        hours = self.replica_hours(until)
+        cost = self.dollars(until)
+        sim_h = until / self.sim_s_per_h
+        return {
+            "replica_hours_reserved": round(hours[RESERVED], 3),
+            "replica_hours_on_demand": round(hours[ON_DEMAND], 3),
+            "cost_usd": round(cost["total"], 2),
+            "cost_usd_reserved": round(cost[RESERVED], 2),
+            "cost_usd_on_demand": round(cost[ON_DEMAND], 2),
+            "cost_usd_per_day": round(
+                cost["total"] * (24.0 / max(1e-9, sim_h)), 2),
+        }

@@ -1,0 +1,142 @@
+"""Pluggable fleet-sizing policies for the elastic provisioner.
+
+A `ScalerPolicy` answers one question, re-evaluated on the fleet
+controller's clock: "how many replicas of each billing tier should region
+R have at hour H?". All policies size against a demand *forecast*
+`forecast(region, hour) -> rate` (same units as `kappa`, requests per
+sim-second here) — the noise-free diurnal curve in the benchmarks, i.e. a
+perfect forecaster; forecast error can be injected by wrapping it.
+
+Three policies, matching the paper's cost story (Fig. 3b / Fig. 10):
+
+  PerRegionPeakReserved   every region statically reserves for its OWN
+                          24 h peak — the status-quo baseline the paper
+                          prices against.
+  GlobalPeakReserved      reserve once for the AGGREGATED global peak and
+                          spread it across regions (SkyLB: cross-region
+                          routing moves demand to capacity, so offset
+                          diurnal peaks share one fleet).
+  ForecastBurst           reserved floor at each region's trough +
+                          on-demand replicas tracking the forecast
+                          (SageServe/GORGO-style autoscaling; pays the
+                          on-demand premium and the provisioning lag in
+                          exchange for elasticity).
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Protocol, Sequence, runtime_checkable
+
+from repro.provision.cost import replicas_needed
+from repro.provision.meter import ON_DEMAND, RESERVED
+
+Forecast = Callable[[str, float], float]    # (region, hour) -> rate
+
+
+@runtime_checkable
+class ScalerPolicy(Protocol):
+    """Desired fleet size for a region at an hour, by billing tier."""
+
+    name: str
+    regions: Sequence[str]
+
+    def desired(self, region: str, hour: float) -> Mapping[str, int]:
+        """{RESERVED: n, ON_DEMAND: m} wanted at `hour` (0-24 repeating)."""
+        ...
+
+
+def _grid(hours: float = 24.0, step_h: float = 0.25) -> list[float]:
+    n = max(1, round(hours / step_h))
+    return [i * step_h for i in range(n)]
+
+
+def region_peaks(forecast: Forecast, regions: Sequence[str],
+                 step_h: float = 0.25) -> dict[str, float]:
+    return {r: max(forecast(r, h) for h in _grid(step_h=step_h))
+            for r in regions}
+
+
+def global_peak(forecast: Forecast, regions: Sequence[str],
+                step_h: float = 0.25) -> float:
+    """Peak of the cross-region AGGREGATE (not the sum of peaks)."""
+    return max(sum(forecast(r, h) for r in regions)
+               for h in _grid(step_h=step_h))
+
+
+def _apportion(total: int, weights: dict[str, float]) -> dict[str, int]:
+    """Largest-remainder apportionment of `total` replicas across regions,
+    at least one per region (every region needs a local landing spot)."""
+    regions = list(weights)
+    total = max(total, len(regions))
+    wsum = max(1e-12, sum(weights.values()))
+    exact = {r: total * weights[r] / wsum for r in regions}
+    out = {r: max(1, int(exact[r])) for r in regions}
+    while sum(out.values()) > total:        # the max(1,..) floor overshot
+        r = max((x for x in regions if out[x] > 1),
+                key=lambda x: out[x] - exact[x])
+        out[r] -= 1
+    rem = total - sum(out.values())
+    for r in sorted(regions, key=lambda x: exact[x] - int(exact[x]),
+                    reverse=True)[:rem]:
+        out[r] += 1
+    return out
+
+
+class PerRegionPeakReserved:
+    """Static: each region reserves for its own diurnal peak."""
+
+    name = "per-region-peak"
+
+    def __init__(self, forecast: Forecast, kappa: float,
+                 regions: Sequence[str]):
+        self.regions = tuple(regions)
+        self._n = {r: replicas_needed(peak, kappa)
+                   for r, peak in region_peaks(forecast, regions).items()}
+
+    def desired(self, region: str, hour: float) -> dict[str, int]:
+        return {RESERVED: self._n[region], ON_DEMAND: 0}
+
+
+class GlobalPeakReserved:
+    """Static: reserve for the aggregated global peak, apportioned across
+    regions by their individual peaks (à la SkyLB)."""
+
+    name = "global-peak"
+
+    def __init__(self, forecast: Forecast, kappa: float,
+                 regions: Sequence[str]):
+        self.regions = tuple(regions)
+        peaks = region_peaks(forecast, regions)
+        total = replicas_needed(global_peak(forecast, regions), kappa)
+        self._n = _apportion(total, peaks)
+
+    def desired(self, region: str, hour: float) -> dict[str, int]:
+        return {RESERVED: self._n[region], ON_DEMAND: 0}
+
+
+class ForecastBurst:
+    """Reserved floor at each region's trough; on-demand replicas track
+    `headroom * forecast(region, hour + lead_h)`. `lead_h` is how far
+    ahead the scaler looks — set it at or above the provisioning delay or
+    capacity lands after the ramp it was bought for."""
+
+    name = "forecast-burst"
+
+    def __init__(self, forecast: Forecast, kappa: float,
+                 regions: Sequence[str], *, lead_h: float = 0.5,
+                 headroom: float = 1.1):
+        self.regions = tuple(regions)
+        self.forecast = forecast
+        self.kappa = kappa
+        self.lead_h = lead_h
+        self.headroom = headroom
+        self._floor = {
+            r: replicas_needed(min(forecast(r, h) for h in _grid()), kappa)
+            for r in regions}
+
+    def desired(self, region: str, hour: float) -> dict[str, int]:
+        need = replicas_needed(
+            self.headroom * self.forecast(region,
+                                          (hour + self.lead_h) % 24.0),
+            self.kappa)
+        floor = self._floor[region]
+        return {RESERVED: floor, ON_DEMAND: max(0, need - floor)}

@@ -166,23 +166,43 @@ class RoutingCore:
         cfg = self.cfg
         while self.queue:
             req = self.queue[0]
-            locals_ok = eligible(self._local_views(), cfg.pushing,
+            local_views = self._local_views()
+            locals_ok = eligible(local_views, cfg.pushing,
                                  cfg.spo_limit, cfg.tau)
             if locals_ok:
                 tid = self.policy.select(req, locals_ok)
-                if tid is None:
+                if tid is None or not any(v.id == tid for v in locals_ok):
+                    # a policy may answer from its own state (trie records,
+                    # hashring) that still names a target removed between
+                    # probes — never dispatch outside the eligible set
                     tid = locals_ok[0].id
                 self.queue.popleft()
                 self._send_local(req, tid)
                 continue
-            if (cfg.cross_region and not getattr(req, "forwarded", False)
-                    and self._lb_snap and self.remote_policy is not None):
+            # one WAN hop normally — but an LB that owns ZERO live targets
+            # (elastic scale-to-zero, region outage) can never serve the
+            # head itself, so already-forwarded work may hop again rather
+            # than head-of-line-block the queue forever
+            reforward = bool(getattr(req, "forwarded", False))
+            if (cfg.cross_region and self._lb_snap
+                    and self.remote_policy is not None
+                    and (not reforward or not local_views)):
                 remotes_ok = eligible(list(self._lb_snap.values()),
                                       cfg.pushing, cfg.spo_limit, cfg.tau)
                 remotes_ok = [v for v in remotes_ok
                               if self.transport.peer_alive(v.id)]
+                if reforward:
+                    # a re-forward must land where replicas EXIST (busy is
+                    # fine — n_replicas, not the idle n_avail_replicas
+                    # count), or two emptied regions could ping-pong it
+                    # indefinitely under BP/SP-O eligibility
+                    remotes_ok = [v for v in remotes_ok
+                                  if v.n_replicas > 0]
                 if remotes_ok:
                     lbid = self.remote_policy.select(req, remotes_ok)
+                    if (lbid is not None
+                            and not any(v.id == lbid for v in remotes_ok)):
+                        lbid = remotes_ok[0].id     # same stale-state guard
                     if lbid is not None:
                         self.queue.popleft()
                         self._forward(req, lbid)

@@ -25,6 +25,8 @@ class TargetView:
     available: bool = True      # SP-P availability (pending == 0 at probe)
     queue_len: int = 0          # remote LB queue length
     n_avail_replicas: int = 1   # remote LB: replicas with empty pending
+    n_replicas: int = 1         # remote LB: replicas that EXIST at all
+                                # (busy counts; 0 = emptied/scaled-to-zero)
 
     #: sentinel load advertised for a dead/unreachable target
     DEAD_LOAD = 10 ** 9
@@ -35,7 +37,8 @@ class TargetView:
         convention, so eligibility and steal-victim filtering see the same
         sentinel on every host."""
         return cls(id=target_id, available=False, n_avail_replicas=0,
-                   queue_len=cls.DEAD_LOAD, outstanding=cls.DEAD_LOAD)
+                   n_replicas=0, queue_len=cls.DEAD_LOAD,
+                   outstanding=cls.DEAD_LOAD)
 
 
 # ------------------------------------------------------------------ pushing

@@ -107,6 +107,7 @@ class _RegionLB:
             return TargetView.unavailable(self.region)
         return TargetView(
             id=self.region, n_avail_replicas=self.n_avail(),
+            n_replicas=len(self.engines),
             queue_len=len(self.queue),
             outstanding=sum(e.outstanding() for e in self.engines.values()))
 

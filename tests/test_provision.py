@@ -1,0 +1,374 @@
+"""Elastic provisioning subsystem: analytic cost model (ragged-series
+regression), measured CostMeter, scaler policies, FleetController
+lifecycle, drain-vs-kill semantics, and the region-outage drill."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.simulator import ReplicaConfig
+from repro.core.system import ServingSystem
+from repro.core.workloads import diurnal_series
+from repro.provision import (ON_DEMAND, RESERVED, CostMeter, FleetController,
+                             ForecastBurst, GlobalPeakReserved,
+                             PerRegionPeakReserved, autoscale_on_demand_cost,
+                             global_peak, global_peak_cost, region_local_cost,
+                             replicas_needed, variance_stats)
+from repro.provision.cost import ON_DEMAND_RATE, RESERVED_RATE
+
+RCFG = ReplicaConfig(kv_budget=8192)
+
+
+def _req(sys, rid, region="us", prompt_len=32, out_len=8, user="u"):
+    from repro.core.simulator import Request
+    return Request(rid=rid, user_id=user, session_key=f"{user}{rid}",
+                   region=region, prompt_tokens=tuple(range(prompt_len)),
+                   output_len=out_len, output_tokens=tuple(range(out_len)))
+
+
+# --------------------------------------------------- analytic cost model
+
+def test_cost_ragged_series_rejected():
+    """Regression: series[r][i] indexing assumed equal lengths — ragged
+    input used to IndexError (short first region) or silently drop samples
+    (short later region). Now it fails loudly."""
+    ragged = {"us": [1.0, 2.0, 3.0], "eu": [1.0, 2.0]}
+    with pytest.raises(ValueError, match="ragged"):
+        global_peak_cost(ragged, kappa=1.0)
+    with pytest.raises(ValueError, match="ragged"):
+        variance_stats(ragged)
+    with pytest.raises(ValueError):
+        global_peak_cost({}, kappa=1.0)
+    with pytest.raises(ValueError):
+        global_peak_cost({"us": []}, kappa=1.0)
+
+
+def test_cost_ragged_series_ok_where_no_aggregation():
+    """Per-region integrals don't need a shared grid: each region's step is
+    hours/len(xs), so a coarser region still integrates the same window."""
+    fine = {"us": [2.0] * 24, "eu": [1.0] * 24}
+    coarse = {"us": [2.0] * 24, "eu": [1.0] * 12}     # eu at 2 h steps
+    a = autoscale_on_demand_cost(fine, kappa=1.0, hours=24.0)
+    b = autoscale_on_demand_cost(coarse, kappa=1.0, hours=24.0)
+    assert a == pytest.approx(b)
+    # region-local peaks never cross-index either
+    assert region_local_cost(coarse, kappa=1.0) == \
+        pytest.approx(region_local_cost(fine, kappa=1.0))
+
+
+def test_core_cost_shim_reexports():
+    import repro.core.cost as shim
+    assert shim.global_peak_cost is global_peak_cost
+    assert shim.RESERVED_RATE == RESERVED_RATE
+
+
+# --------------------------------------------------------- cost meter
+
+def test_cost_meter_integrates_replica_hours():
+    m = CostMeter(sim_s_per_h=2.0)
+    m.on_start("r0", RESERVED, "us", t=0.0)
+    m.on_start("r1", ON_DEMAND, "us", t=1.0)
+    m.on_stop("r1", t=5.0)                    # 4 sim-s = 2 h on-demand
+    hours = m.replica_hours(until=8.0)        # r0 still live: 8 sim-s = 4 h
+    assert hours[RESERVED] == pytest.approx(4.0)
+    assert hours[ON_DEMAND] == pytest.approx(2.0)
+    d = m.dollars(until=8.0)
+    assert d["total"] == pytest.approx(
+        4.0 * RESERVED_RATE + 2.0 * ON_DEMAND_RATE)
+    # $/day normalizes by simulated hours (4 h window here)
+    s = m.summary(until=8.0)
+    assert s["cost_usd_per_day"] == pytest.approx(d["total"] * 6.0, rel=1e-6)
+    with pytest.raises(ValueError):
+        m.on_start("r0", RESERVED, "us", t=9.0)    # double meter
+    with pytest.raises(ValueError):
+        m.on_start("rX", "spot", "us", t=0.0)      # unknown tier
+
+
+# ----------------------------------------------------------- scalers
+
+def _forecast(region, hour):
+    from repro.core.workloads import diurnal_rate
+    amps = {"us": 1.0, "eu": 0.8, "asia": 0.9}
+    return 10.0 * diurnal_rate(region, hour % 24.0, amp=amps[region])
+
+
+REGIONS3 = ("us", "eu", "asia")
+
+
+def test_static_scalers_match_analytic_model():
+    per = PerRegionPeakReserved(_forecast, 2.0, REGIONS3)
+    glob = GlobalPeakReserved(_forecast, 2.0, REGIONS3)
+    n_per = sum(per.desired(r, 0.0)[RESERVED] for r in REGIONS3)
+    n_glob = sum(glob.desired(r, 0.0)[RESERVED] for r in REGIONS3)
+    assert n_glob == max(
+        replicas_needed(global_peak(_forecast, REGIONS3), 2.0), len(REGIONS3))
+    assert n_glob < n_per                   # offset peaks aggregate flatter
+    assert all(glob.desired(r, 0.0)[RESERVED] >= 1 for r in REGIONS3)
+    # static: same answer at any hour
+    assert per.desired("us", 3.0) == per.desired("us", 17.0)
+
+
+def test_forecast_burst_tracks_demand_with_lead():
+    fb = ForecastBurst(_forecast, 2.0, REGIONS3, lead_h=0.5, headroom=1.0)
+    floor = fb.desired("us", 0.0)[RESERVED]
+    assert floor == replicas_needed(
+        min(_forecast("us", h / 4) for h in range(96)), 2.0)
+    # us peaks at local 14:00: burst capacity wanted on the ramp, none at
+    # the trough
+    assert fb.desired("us", 13.0)[ON_DEMAND] > 0
+    assert fb.desired("us", 2.0)[ON_DEMAND] == 0
+    # lead: desired at H answers for the forecast at H + lead
+    want_led = replicas_needed(_forecast("us", 12.5), 2.0)
+    got = fb.desired("us", 12.0)
+    assert got[RESERVED] + got[ON_DEMAND] == max(want_led, floor)
+
+
+# ------------------------------------------------- fleet controller
+
+class _StepScaler:
+    """1 reserved always; 2 on-demand during hours [1, 2)."""
+    name = "step"
+    regions = ("us",)
+
+    def desired(self, region, hour):
+        return {RESERVED: 1, ON_DEMAND: 2 if 1.0 <= hour < 2.0 else 0}
+
+
+def test_fleet_controller_scales_up_and_drains_down():
+    sys = ServingSystem("skylb", {"us": 0}, replica_cfg=RCFG)
+    fleet = FleetController(sys, _StepScaler(), sim_s_per_h=1.0,
+                            eval_interval_s=0.25, provision_delay_h=0.2)
+    lb = sys.lbs["lb-us"]
+    sizes = []
+    probe = lambda: (sizes.append((sys.sim.now, len(lb.replicas))),
+                     sys.sim.after(0.1, probe))
+    sys.sim.after(0.0, probe)
+    sys.run(until=4.0)
+    by_t = dict(sizes)
+    assert by_t[0.0] == 1                       # reserved up at t=0, no delay
+    # on-demand wanted at hour 1, arrives ~0.2 h later, drains after hour 2
+    assert max(n for t, n in sizes if 1.5 <= t < 2.0) == 3
+    assert by_t[max(by_t)] == 1                 # drained back to the floor
+    cost = fleet.finalize()
+    assert cost["cost_usd_reserved"] > 0
+    assert cost["cost_usd_on_demand"] > 0
+    # on-demand billed from REQUEST to drain-complete: >= the 1 h window
+    assert cost["replica_hours_on_demand"] >= 2 * 1.0
+    assert sys.metrics.cost is cost
+
+
+def test_fleet_scale_down_drains_inflight_to_completion():
+    """Scale-down during load must not lose the drained replica's work."""
+    sys = ServingSystem("skylb", {"us": 0}, replica_cfg=RCFG)
+    fleet = FleetController(sys, _StepScaler(), sim_s_per_h=1.0,
+                            eval_interval_s=0.25, provision_delay_h=0.0)
+    done = []
+    # steady trickle across the scale-up/down boundary
+    def issue(i=0):
+        if i >= 40:
+            return
+        sys.submit(_req(sys, i, out_len=16), done.append)
+        sys.sim.after(0.1, lambda: issue(i + 1))
+    sys.sim.after(0.0, issue)
+    sys.run(until=30.0)
+    assert len(done) == 40
+    assert all(r.error is None for r in done)
+    assert sys.metrics.issued == 40
+    assert fleet.finalize()["cost_usd_on_demand"] > 0
+
+
+# ------------------------------------------- drain vs kill semantics
+
+def _counting_policy(lb):
+    removed = []
+    orig = lb.core.policy.on_target_removed
+    lb.core.policy.on_target_removed = lambda tid: (removed.append(tid),
+                                                    orig(tid))[1]
+    return removed
+
+
+def test_drain_finishes_inflight_rejects_new_forgets_once():
+    sys = ServingSystem("skylb", {"us": 2}, replica_cfg=RCFG)
+    lb = sys.lbs["lb-us"]
+    removed = _counting_policy(lb)
+    victim = sys.replicas[0]
+    done, drained = [], []
+    # load BOTH replicas so the victim holds in-flight work when drained
+    for i in range(8):
+        sys.submit(_req(sys, i, out_len=24), done.append)
+    sys.sim.after(0.5, lambda: sys.drain_replica(victim.id,
+                                                 on_drained=drained.append))
+    sys.run(until=60.0)
+    assert drained == [victim]                  # drain completed, once
+    assert not victim.alive and not victim.draining
+    assert victim.completions > 0               # it did finish its work
+    assert len(done) == 8
+    assert all(r.error is None for r in done)   # nothing dropped or errored
+    # routing state forgotten exactly ONCE despite later no-op removals
+    assert removed == [victim.id]
+    lb.remove_replica(victim.id)                # idempotent repeat
+    assert removed == [victim.id]
+    # trie holds no stale record of the drained target
+    tree = lb.core.policy.tree
+    assert all(victim.id not in n.targets
+               for n in tree.root.children.values())
+    # new work after the drain never lands on the drained replica
+    late = []
+    for i in range(20, 24):
+        sys.submit(_req(sys, i), late.append)
+    sys.run(until=120.0)
+    assert len(late) == 4
+    assert all(r.replica == sys.replicas[1].id for r in late)
+
+
+def test_drain_vs_kill_inflight_contrast():
+    def run_one(stop):
+        sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+        done = []
+        sys.submit(_req(sys, 0, out_len=40), done.append)
+        sys.sim.after(0.3, lambda: stop(sys))
+        sys.run(until=60.0)
+        return done
+    # drain: the in-flight decode finishes
+    finished = run_one(lambda s: s.drain_replica(s.replicas[0].id))
+    assert len(finished) == 1 and finished[0].error is None
+    # kill: the in-flight decode is lost (crash semantics)
+    lost = run_one(lambda s: s.replicas[0].kill())
+    assert lost == []
+
+
+def test_kill_during_drain_still_fires_drain_callback():
+    """A crash hitting a replica mid-drain must complete the drain
+    vacuously — otherwise the fleet lease (and its bill) stays open."""
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    r = sys.replicas[0]
+    drained = []
+    sys.submit(_req(sys, 0, out_len=40), lambda x: None)   # in-flight work
+    sys.sim.after(0.3, lambda: sys.drain_replica(r.id,
+                                                 on_drained=drained.append))
+    sys.sim.after(0.4, r.kill)                  # crash before drain finishes
+    sys.run(until=30.0)
+    assert drained == [r]
+    assert not r.alive and not r.draining
+
+
+def test_scale_down_cancels_pending_spinup_before_draining_live():
+    """A spin-up that becomes unwanted while still provisioning is
+    cancelled (free) rather than letting it land, billing from request,
+    and draining a LIVE replica in its place."""
+    class Blip:
+        name = "blip"
+        regions = ("us",)
+
+        def desired(self, region, hour):
+            # on-demand wanted only for a 0.3 h window, shorter than the
+            # 1.0 h provisioning delay
+            return {RESERVED: 1, ON_DEMAND: 2 if 1.0 <= hour < 1.3 else 0}
+
+    sys = ServingSystem("skylb", {"us": 0}, replica_cfg=RCFG)
+    fleet = FleetController(sys, Blip(), sim_s_per_h=1.0,
+                            eval_interval_s=0.1, provision_delay_h=1.0)
+    sys.run(until=5.0)
+    assert len(sys.lbs["lb-us"].replicas) == 1      # blip never materialized
+    assert len(sys.replicas) == 1                   # no on-demand ever built
+    cost = fleet.finalize()
+    assert cost["cost_usd_on_demand"] == 0          # cancelled == unbilled
+    assert fleet.fleet_counts("us") == {RESERVED: 1, ON_DEMAND: 0}
+
+
+def test_drain_of_dead_replica_completes_vacuously():
+    """Drain after a crash must still fire its callback (the fleet
+    controller would otherwise hold the lease — and the bill — open)."""
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    r = sys.replicas[0]
+    r.kill()
+    drained = []
+    sys.drain_replica(r.id, on_drained=drained.append)
+    sys.run(until=5.0)
+    assert drained == [r]
+    assert not r.alive and not r.draining
+
+
+def test_enqueue_on_draining_replica_bounces_back():
+    """A request on the wire when the drain begins is re-routed, not
+    dropped: the fleet system points the replica's bounce hook at a live
+    LB."""
+    sys = ServingSystem("skylb", {"us": 2}, replica_cfg=RCFG)
+    a, b = sys.replicas
+    done = []
+    req = _req(sys, 0)
+    # hand the request DIRECTLY to a draining replica, as if it had been
+    # dispatched just before the drain started
+    req.done_cb = done.append
+    sys.drain_replica(a.id)
+    a.enqueue(req)
+    sys.run(until=60.0)
+    assert len(done) == 1 and done[0].error is None
+    assert done[0].replica == b.id
+
+
+def test_hashring_variant_forgets_drained_target_once():
+    sys = ServingSystem("skylb-ch", {"us": 2}, replica_cfg=RCFG)
+    lb = sys.lbs["lb-us"]
+    removed = _counting_policy(lb)
+    victim = sys.replicas[0]
+    for i in range(4):
+        sys.submit(_req(sys, i), lambda r: None)
+    sys.sim.after(0.2, lambda: sys.drain_replica(victim.id))
+    sys.run(until=60.0)
+    assert removed == [victim.id]
+    assert victim.id not in lb.core.policy.ring.targets
+    lb.remove_replica(victim.id)
+    assert removed == [victim.id]
+
+
+# --------------------------------------------------- region outage drill
+
+def test_region_outage_reabsorbs_forwarded_inflight():
+    """Drain EVERY eu replica while eu holds forwarded-in work: the one-hop
+    rule is relaxed for an LB with zero live targets, so nothing is
+    dropped (head-of-line work re-forwards instead of waiting forever)."""
+    # tiny KV budget: ~4 concurrent sequences per replica, so us SATURATES
+    # (pending > 0 at probes) and SP-P pushes the overflow to eu
+    sys = ServingSystem("skylb", {"us": 1, "eu": 1},
+                        replica_cfg=ReplicaConfig(kv_budget=256))
+    done = []
+
+    # arrivals faster than us capacity but slower than probes, so probes
+    # SEE the backlog (all-at-once would ride the between-probe optimism
+    # budget straight into the us replica's pending queue)
+    def issue(i=0):
+        if i >= 24:
+            return
+        sys.submit(_req(sys, i, out_len=24), done.append)
+        sys.sim.after(0.1, lambda: issue(i + 1))
+
+    sys.sim.after(0.0, issue)
+    # then take eu out mid-run, while it still holds forwarded work
+    sys.sim.after(1.0, lambda: [sys.drain_replica(r.id)
+                                for r in sys.replicas if r.region == "eu"])
+    s = sys.run(until=300.0)
+    assert len(done) == 24
+    assert all(r.error is None for r in done)
+    assert s["unresolved"] == 0
+    assert s["forwards"] > 0                     # eu did absorb, then return
+
+
+def test_dynamic_add_replica_is_routable():
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    done = []
+    sys.sim.after(1.0, lambda: sys.add_replica("us"))
+    def flood(i=0):
+        if i >= 30:
+            return
+        # distinct prompts: no trie affinity, so least-load exploration is
+        # free to pick the newcomer
+        req = _req(sys, i, out_len=16)
+        req.prompt_tokens = tuple(range(i * 100, i * 100 + 32))
+        sys.submit(req, done.append)
+        sys.sim.after(0.05, lambda: flood(i + 1))
+    sys.sim.after(0.0, flood)
+    sys.run(until=120.0)
+    assert len(done) == 30
+    newcomer = sys.replicas[1]
+    assert any(r.replica == newcomer.id for r in done)
+    assert sys._region_of[newcomer.id] == "us"

@@ -3,10 +3,16 @@ from __future__ import annotations
 
 import pytest
 
-pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
-from hypothesis import given, settings, strategies as st
+# only the property test needs hypothesis; the rest of the module (incl.
+# the diurnal regression tests) must run even where it's absent
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
-from repro.core.workloads import (diurnal_series, multiturn,
+from repro.core.workloads import (REGIONS5, TZ_OFFSET_H, diurnal_rate,
+                                  diurnal_series, multiturn,
                                   prefix_similarity, tot)
 
 
@@ -18,13 +24,18 @@ def test_prefix_similarity_metric():
     assert prefix_similarity((1, 2, 9), (1, 2, 3)) == 2 / 3
 
 
-@given(st.lists(st.integers(0, 5), max_size=12),
-       st.lists(st.integers(0, 5), max_size=12))
-@settings(max_examples=80, deadline=None)
-def test_prop_prefix_similarity_bounds(a, b):
-    s = prefix_similarity(tuple(a), tuple(b))
-    assert 0.0 <= s <= 1.0
-    assert s == prefix_similarity(tuple(b), tuple(a))       # symmetric
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.integers(0, 5), max_size=12),
+           st.lists(st.integers(0, 5), max_size=12))
+    @settings(max_examples=80, deadline=None)
+    def test_prop_prefix_similarity_bounds(a, b):
+        s = prefix_similarity(tuple(a), tuple(b))
+        assert 0.0 <= s <= 1.0
+        assert s == prefix_similarity(tuple(b), tuple(a))   # symmetric
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_prop_prefix_similarity_bounds():
+        pass
 
 
 def test_multiturn_structure():
@@ -62,6 +73,35 @@ def test_tot_output_sigma_varies_lengths():
     assert len(lens) > 5
     t0 = tot({"us": 1}, output_len=100, trees_per_client=1)[0][0]
     assert t0.node_output_len((0,)) == 100                  # sigma=0 fixed
+
+
+def test_diurnal_series_exact_sample_counts():
+    """Regression: the old `while t < hours: t += step_h` loop drifted for
+    non-integer steps — step_h=0.1 emitted 241 samples instead of 240, and
+    could go RAGGED across regions. Counts must be exact and uniform."""
+    for step_h, want in ((1.0, 24), (0.5, 48), (0.1, 240), (0.25, 96)):
+        series = diurnal_series(REGIONS5, hours=24, step_h=step_h)
+        assert {len(xs) for xs in series.values()} == {want}, step_h
+
+
+def test_diurnal_rate_unknown_region_raises():
+    """Regression: unknown regions silently fell back to UTC offset 0.0
+    (same silent-fallback class as the unknown-RTT bug) — now loud."""
+    with pytest.raises(ValueError, match="mars"):
+        diurnal_rate("mars", 12.0)
+    with pytest.raises(ValueError):
+        diurnal_series(("us", "atlantis"))
+
+
+def test_regions5_tz_offsets_consistent():
+    """Every region of the 5-region diurnal figures — sa and oceania
+    included — must have a timezone offset, and distinct offsets are what
+    make aggregation flatten."""
+    for r in REGIONS5:
+        assert r in TZ_OFFSET_H
+        assert diurnal_rate(r, 12.0) > 0
+    assert {"sa", "oceania"} <= set(TZ_OFFSET_H)
+    assert len({TZ_OFFSET_H[r] % 24.0 for r in REGIONS5}) == len(REGIONS5)
 
 
 def test_diurnal_aggregation_flattens():
