@@ -30,6 +30,12 @@ SUMMARY_KEYS = frozenset({
     # fig11 elastic-provisioning gate: measured dollars + SLO + drops
     "cost_usd_per_day", "slo_attainment", "unresolved",
     "global_vs_per_region_saving",
+    # serving hot-path gate: compile-count boundedness + deterministic
+    # step/token counts (scheduling must not drift); wall-clock-derived
+    # values (steps_per_s, tok_s, speedup, meets_1_3x) stay ungated like
+    # the kernel timings
+    "decode_programs", "decode_program_bound", "decode_shapes_exact",
+    "bounded_ok", "steps", "tokens",
 })
 
 
@@ -70,7 +76,8 @@ def main() -> int:
 
     from benchmarks import (beyond_steal, fig3_aggregation, fig5_prefix,
                             fig6_hitrate, fig8_macro, fig9_pushing,
-                            fig10_diurnal, fig11_provision, kernels_bench)
+                            fig10_diurnal, fig11_provision, kernels_bench,
+                            serving_bench)
     suites = {
         "fig3": fig3_aggregation.main,
         "fig5": fig5_prefix.main,
@@ -80,6 +87,7 @@ def main() -> int:
         "fig10": fig10_diurnal.main,
         "fig11": fig11_provision.main,
         "kernels": kernels_bench.main,
+        "serving": serving_bench.main,
         "steal": beyond_steal.main,
     }
     os.makedirs(args.out, exist_ok=True)

@@ -6,9 +6,17 @@ gathers, the grid walks (batch, kv-page) with the page axis innermost and
 sequential; the *scalar-prefetched* block table drives the BlockSpec index
 map, so each step DMAs exactly one (page_size, K, hd) KV tile HBM->VMEM.
 An online softmax over all query heads for that sequence accumulates in
-VMEM scratch. Pages past seq_len are skipped via pl.when (their DMA still
-issues — on real hardware the grid would be ragged-shortened per sequence;
-see kernels/EXAMPLE.md note).
+VMEM scratch.
+
+The grid is RAGGED per sequence: the scalar-prefetched `seq_lens` clamp the
+BlockSpec index map to the sequence's last live page, so grid steps past a
+sequence's real page count re-reference the tile already resident in VMEM
+(Pallas elides the DMA when consecutive block indices coincide) and run no
+compute; the output is written at the sequence's last live page, not at the
+grid edge. Consequence for callers: block-table entries at or beyond a
+sequence's page count `ceil(seq_len / page)` are NEVER dereferenced and may
+hold arbitrary int32 garbage (the jnp oracle `ref.paged_decode_ref`
+implements the same contract). `seq_lens` must be >= 1.
 """
 from __future__ import annotations
 
@@ -20,6 +28,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0e38
+
+# jax < 0.5 spells it TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def _last_page(seq_len, page: int):
+    """Index of the last live page for a sequence (seq_len >= 1)."""
+    return jnp.maximum(seq_len - 1, 0) // page
 
 
 def _kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
@@ -63,7 +79,9 @@ def _kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = acc_ref[...] * alpha + pv.reshape(H, hd)
         m_ref[...] = m_new
 
-    @pl.when(j == npg - 1)
+    # ragged early-out: the result is complete once this sequence's last
+    # live page has been accumulated; later grid steps are no-ops
+    @pl.when(j == _last_page(seq_len, page))
     def _out():
         o_ref[0] = (acc_ref[...] /
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
@@ -72,12 +90,18 @@ def _kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_decode(q, k_pages, v_pages, block_table, seq_lens, *,
                  interpret: bool = False) -> jax.Array:
     """q: (B,H,hd); k_pages/v_pages: (P,page,K,hd); block_table: (B,NPG)
-    int32 (entries beyond seq_len must still be valid page ids);
-    seq_lens: (B,). Returns (B,H,hd)."""
+    int32 — entries beyond each sequence's live page count are never read
+    and may be garbage; seq_lens: (B,), >= 1. Returns (B,H,hd)."""
     B, H, hd = q.shape
     Ptot, page, K, _ = k_pages.shape
     npg = block_table.shape[1]
     assert H % K == 0
+
+    def _kv_index(b, j, bt, ln):
+        # clamp to the last live page: steps past the ragged edge re-issue
+        # the previous index, so no fresh DMA lands and garbage table
+        # entries are never dereferenced
+        return (bt[b, jnp.minimum(j, _last_page(ln[b], page))], 0, 0, 0)
 
     kernel = functools.partial(_kernel, page=page, npg=npg, scale=hd ** -0.5)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -85,10 +109,8 @@ def paged_decode(q, k_pages, v_pages, block_table, seq_lens, *,
         grid=(B, npg),
         in_specs=[
             pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, page, K, hd),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, page, K, hd),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, K, hd), _kv_index),
+            pl.BlockSpec((1, page, K, hd), _kv_index),
         ],
         out_specs=pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
         scratch_shapes=[
@@ -101,7 +123,7 @@ def paged_decode(q, k_pages, v_pages, block_table, seq_lens, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_table, seq_lens, q, k_pages, v_pages)

@@ -26,14 +26,20 @@ def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
 def paged_decode_ref(q, k_pages, v_pages, block_table, seq_lens) -> jax.Array:
     """Decode attention over a paged KV cache.
     q: (B,H,hd); k_pages/v_pages: (P,page,K,hd); block_table: (B,npages)
-    int32 (entries beyond the sequence may be any valid page id);
-    seq_lens: (B,) valid token counts. fp32 softmax."""
+    int32 — entries at or beyond a sequence's live page count
+    ceil(seq_len / page) are NEVER dereferenced and may hold arbitrary
+    garbage (matching the ragged Pallas kernel's clamped index map);
+    seq_lens: (B,) valid token counts, >= 1. fp32 softmax."""
     B, H, hd = q.shape
     Ptot, page, K, _ = k_pages.shape
     npages = block_table.shape[1]
     G = H // K
 
     def one(qb, bt, ln):
+        # entries past the ragged edge may be garbage: squash them onto
+        # page 0 before the gather (their columns are masked anyway)
+        live = jnp.arange(npages, dtype=jnp.int32) * page < ln
+        bt = jnp.where(live, bt, 0)
         k = k_pages[bt]                                   # (npages,page,K,hd)
         v = v_pages[bt]
         T = npages * page

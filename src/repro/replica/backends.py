@@ -44,6 +44,12 @@ class CostModelBackend:
         self._prefill_tokens += end - start
         return self._next_token(seq) if sample else None
 
+    def prefill_batch(self, items) -> list:
+        """One admission round; analytic cost is additive, so the packed
+        plan surface reduces to sequential accounting."""
+        return [self.prefill(seq, start, end, sample)
+                for seq, start, end, sample in items]
+
     def decode(self, seqs) -> list:
         return [self._next_token(s) for s in seqs]
 

@@ -62,6 +62,14 @@ class ReplicaBackend(Protocol):
         """One continuous-batch decode iteration: one new token per seq."""
         ...
 
+    # Optional: `prefill_batch(items)` with items = [(seq, start, end,
+    # sample)] processes one ROUND of independent prefill chunks (one chunk
+    # from each of several sequences) in a single call, returning one
+    # Optional[int] per item. Backends that can pack admissions into one
+    # dispatch (JaxPagedBackend) implement it; the core falls back to
+    # sequential `prefill` calls otherwise. Scheduling decisions are
+    # identical either way — only compute dispatch changes.
+
 
 @dataclasses.dataclass(frozen=True)
 class ReplicaCoreConfig:
@@ -160,6 +168,11 @@ class ReplicaCore:
         # change, re-matching the head would restamp its prefix MRU and
         # burn O(prompt) work every iteration for an identical outcome
         self._blocked: Optional[tuple] = None
+        # admissions whose prefill is planned but not yet dispatched: the
+        # batched-prefill plan surface. Flushed before any preemption
+        # decision and at the end of begin_step, so no decision ever runs
+        # while a queued sequence's tokens are still pending.
+        self._prefill_q: list[tuple[Seq, int]] = []
         self.decisions: Optional[list[tuple]] = (
             [] if cfg.record_decisions else None)
 
@@ -238,8 +251,11 @@ class ReplicaCore:
     # ------------------------------------------------------------ admit
     def begin_step(self) -> StepPlan:
         """Admission phase of one continuous-batching iteration: admit from
-        `pending` while pages and batch slots allow (prefilling each
-        admission through the backend), rejecting oversized requests."""
+        `pending` while pages and batch slots allow, rejecting oversized
+        requests. Prefills are PLANNED per admission and flushed in packed
+        rounds (backend `prefill_batch` when available) — before any
+        preemption decision and at the end of the phase — so decisions are
+        identical to sequential prefill."""
         admitted: list[Seq] = []
         rejected: list[Seq] = []
         while self.pending:
@@ -280,6 +296,11 @@ class ReplicaCore:
                     self._record("evict", p)
                 if got < short:
                     self.radix.release_refs(cached_pages)
+                    # every already-admitted sequence must have its prefill
+                    # tokens before a preemption decision (done() reads
+                    # them; a queued victim's pages must not be freed with
+                    # its prefill still pending)
+                    self._flush_prefills()
                     if self._preempt_for(seq):
                         continue            # retry the head with freed pages
                     self._blocked = (seq, self.radix.content_version,
@@ -299,34 +320,58 @@ class ReplicaCore:
                 seq.req.cached_tokens = cached_len
                 self.total_prefill_tokens += len(seq.tokens)
                 self.total_cached_tokens += cached_len
-            tok = self._prefill(seq, cached_len)
-            if tok is not None:
-                seq.out.append(int(tok))
-                seq.tokens.append(int(tok))
+            self._prefill_q.append((seq, cached_len))
             seq.new_this_step = True
             self.running.append(seq)
             admitted.append(seq)
             self._record("admit", seq.req.rid, cached_len)
+        self._flush_prefills()
         self.steps += 1
         self.peak_running = max(self.peak_running, len(self.running))
         self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
         self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
         return StepPlan(admitted, rejected)
 
-    def _prefill(self, seq: Seq, cached_len: int) -> Optional[int]:
-        """Chunked prefill over the uncached suffix: page-aligned chunks of
-        at most cfg.prefill_chunk tokens; only the final chunk samples."""
+    def _chunks(self, seq: Seq, cached_len: int) -> list[tuple[int, int, bool]]:
+        """Chunked prefill plan over the uncached suffix: page-aligned
+        chunks of at most cfg.prefill_chunk tokens; only the final chunk
+        samples."""
         ps = self.cfg.page_size
         chunk = self.cfg.prefill_chunk
         if chunk:
             chunk = max(ps, (chunk // ps) * ps)
         n = len(seq.tokens)
-        start, tok = cached_len, None
+        start, out = cached_len, []
         while start < n:
             end = n if not chunk else min(n, start + chunk)
-            tok = self.backend.prefill(seq, start, end, sample=(end == n))
+            out.append((start, end, end == n))
             start = end
-        return tok
+        return out
+
+    def _flush_prefills(self) -> None:
+        """Dispatch every queued admission's prefill, packing one chunk
+        from each sequence per round (chunks of one sequence stay
+        sequential across rounds — later chunks attend to earlier ones)."""
+        if not self._prefill_q:
+            return
+        q, self._prefill_q = self._prefill_q, []
+        plans = [(seq, self._chunks(seq, cached_len)) for seq, cached_len in q]
+        batch_fn = getattr(self.backend, "prefill_batch", None)
+        depth = max((len(c) for _, c in plans), default=0)
+        for r in range(depth):
+            items = [(seq, *chunks[r]) for seq, chunks in plans
+                     if r < len(chunks)]
+            if not items:
+                continue
+            if batch_fn is not None:
+                toks = batch_fn(items)
+            else:
+                toks = [self.backend.prefill(seq, s, e, smp)
+                        for seq, s, e, smp in items]
+            for (seq, _s, _e, smp), tok in zip(items, toks):
+                if smp and tok is not None:
+                    seq.out.append(int(tok))
+                    seq.tokens.append(int(tok))
 
     # ------------------------------------------------------------ decode
     def finish_step(self) -> list[Seq]:

@@ -35,6 +35,10 @@ class EngineConfig:
     scratch_pages: int = 1        # reserved ids for padding block tables
     prefill_chunk: int = 0        # max tokens per prefill call; 0 = whole suffix
     preemption: bool = False      # priority preemption (recompute on resume)
+    bucket_shapes: bool = True    # pow2 shape buckets (bounded jit cache);
+                                  # False = exact shapes (compile churn)
+    packed_prefill: bool = True   # admissions packed into one dispatch;
+                                  # False = one prefill_step per request
 
 
 class Engine:
@@ -50,7 +54,9 @@ class Engine:
         self.params = params
         self.backend = JaxPagedBackend(
             model_cfg, params, n_pages=ecfg.n_pages, page_size=ecfg.page_size,
-            prefill_pad=ecfg.prefill_pad, seed=seed)
+            prefill_pad=ecfg.prefill_pad, seed=seed,
+            bucket_shapes=ecfg.bucket_shapes,
+            packed_prefill=ecfg.packed_prefill)
         self.core = ReplicaCore(ReplicaCoreConfig(
             page_size=ecfg.page_size, n_pages=ecfg.n_pages,
             max_batch=ecfg.max_batch, max_seq_len=ecfg.max_seq_len,
@@ -72,6 +78,13 @@ class Engine:
 
     def kv_utilization(self) -> float:
         return self.core.kv_utilization()
+
+    @staticmethod
+    def compile_counts() -> dict:
+        """jit cache entries of the hot-path programs (process-global —
+        engines sharing a model config share programs)."""
+        from repro.serving import model_runner as mr
+        return mr.compile_counts()
 
     # ---- core state pass-throughs (probe surface + tests)
     @property

@@ -3,10 +3,33 @@ over the shared page pool via `model_runner`, while every scheduling
 decision (admission, eviction, preemption, chunking) stays in
 `repro.replica.core.ReplicaCore`.
 
-Chunked prefill: the core hands the uncached suffix over in page-aligned
-chunks (`ReplicaCoreConfig.prefill_chunk`), so each `mr.prefill_step` call
-is bounded — previously only the simulator's timing model could express
-that; only the final chunk's logits are sampled.
+The hot path is shape-stable and single-dispatch-per-step:
+
+  decode   The batch lives in a PERSISTENT DEVICE-RESIDENT state (block
+           tables, seq lens, last sampled tokens, per-row sampling params)
+           at full capacity shape; `mr.decode_step` slices the active
+           power-of-two bucket `(nb, npgb)` inside the jit, so steady-state
+           steps upload NOTHING and compile from a bounded bucket set. The
+           fused step advances lens/tokens on device — sampled tokens feed
+           the next step's embedding straight from the device buffer; the
+           host only downloads them once per step for scheduler
+           bookkeeping. Host mirrors are updated incrementally and the
+           device state is re-uploaded only when batch MEMBERSHIP changes
+           (admission / completion / preemption), detected by sequence and
+           block-table identity.
+
+  prefill  Admissions are packed: `prefill_batch` ragged-packs every
+           admitted suffix into ONE `mr.prefill_pack_step` dispatch
+           (per-token segment ids / positions / page destinations), with
+           each segment attending to its own radix-cached prefix and its
+           boundary token sampled on device. The one-request
+           `mr.prefill_step` path remains as the `packed_prefill=False`
+           fallback.
+
+Sampling is per-sequence (each row's temperature/top-k ride in device
+arrays) and batch-shape-invariant and run-stable (PRNG keyed on the request's
+sampling seed + token position),
+so bucketing can never change sampled tokens.
 """
 from __future__ import annotations
 
@@ -19,25 +42,30 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving import model_runner as mr
+from repro.serving.bucketing import bucket, bucket_tokens
 
 
 class JaxPagedBackend:
     """ReplicaBackend over a real paged KV pool. Must be `bind()`-ed to its
     ReplicaCore after construction: the core's reserved pages provide the
     scratch page ids used to pad block tables (never read back thanks to
-    seq_len masking, but they must stay allocated)."""
+    seq_len masking, but they must stay allocated), and the core's config
+    sizes the persistent device batch state."""
 
     def __init__(self, model_cfg: ModelConfig, params: Any, *,
                  n_pages: int, page_size: int, prefill_pad: int = 64,
-                 seed: int = 0):
+                 seed: int = 0, bucket_shapes: bool = True,
+                 packed_prefill: bool = True):
         self.cfg = model_cfg
         self.params = params
         self.page_size = page_size
         self.prefill_pad = prefill_pad
+        self.bucket_shapes = bucket_shapes
+        self.packed_prefill = packed_prefill
         kv_dtype = jax.tree.leaves(params)[0].dtype
         self.k_pages, self.v_pages = mr.init_kv_pool(
             model_cfg, n_pages, page_size, kv_dtype)
-        self._key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
         self._scratch: Optional[int] = None
 
     def bind(self, core) -> None:
@@ -45,13 +73,47 @@ class JaxPagedBackend:
             raise ValueError("JaxPagedBackend needs ReplicaCoreConfig."
                              "reserved_pages >= 1 for block-table padding")
         self._scratch = core.reserved[0]
+        ccfg = core.cfg
+        pool = ccfg.n_pages - ccfg.reserved_pages
+        self._bcap = ccfg.max_batch or max(1, pool)
+        max_len = ccfg.max_seq_len or pool * self.page_size
+        self._npg_cap = max(1, -(-max_len // self.page_size))
+        # host mirrors of the device batch state (updated incrementally;
+        # uploaded only when membership changes)
+        self._m_bt = np.full((self._bcap, self._npg_cap), self._scratch,
+                             np.int32)
+        self._m_lens = np.zeros(self._bcap, np.int32)
+        self._m_toks = np.zeros(self._bcap, np.int32)
+        self._m_temps = np.zeros(self._bcap, np.float32)
+        self._m_topks = np.zeros(self._bcap, np.int32)
+        self._m_seeds = np.zeros(self._bcap, np.int32)
+        # (seq, its pages-list identity) per device row; a preempted+resumed
+        # sequence gets a fresh pages list, so identity detects stale rows
+        # even when it lands back on the same row
+        self._slots: list = []
+        self._dstate: Optional[dict] = None
+        self._nb = 0
+        self._npgb = 0
 
     # ------------------------------------------------------------ prefill
+    def _sample_pref(self, logits, seq, pos: int):
+        """Sample one prefill boundary token (same per-row RNG as the
+        packed/decode paths, so every path draws identical tokens)."""
+        sp = seq.req.sampling
+        tok = mr.sample_rows(
+            logits, self._base_key,
+            jnp.asarray([sp.seed], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32))
+        return int(np.asarray(tok)[0])
+
     def prefill(self, seq, start: int, end: int, sample: bool) -> Optional[int]:
+        """One-request fallback (`packed_prefill=False`); the packed path
+        below is the default."""
         ps = self.page_size
         suffix = seq.tokens[start:end]
-        pad = self.prefill_pad
-        S = -(-len(suffix) // pad) * pad
+        S = self._token_pad(len(suffix))
         toks = np.zeros((1, S), np.int32)
         toks[0, :len(suffix)] = suffix
         # page list covering all S (padded) rows: this chunk's pages first,
@@ -72,31 +134,150 @@ class JaxPagedBackend:
             cfg=self.cfg, page_size=ps)
         if not sample:
             return None
-        tok = self._sample(logits, seq.req.sampling)
+        tok = self._sample_pref(logits, seq, end)
         if seq.req.first_token_s is None:
             seq.req.first_token_s = time.monotonic()
-        return int(tok[0])
+        return tok
+
+    def prefill_batch(self, items) -> list:
+        """Packed batched prefill: one dispatch for a whole admission round.
+        items: [(seq, start, end, sample)] with page-aligned starts."""
+        if not self.packed_prefill:
+            return [self.prefill(seq, s, e, smp) for seq, s, e, smp in items]
+        ps = self.page_size
+        nseg = len(items)
+        seg_lens = [end - start for _, start, end, _ in items]
+        S = self._token_pad(sum(seg_lens))
+        toks = np.zeros(S, np.int32)
+        segs = np.full(S, -1, np.int32)
+        poss = np.zeros(S, np.int32)
+        dpage = np.full(S, self._scratch, np.int32)
+        dslot = np.zeros(S, np.int32)
+        past_lists = []
+        off = 0
+        for j, (seq, start, end, _) in enumerate(items):
+            n = end - start
+            idx = np.arange(start, end)
+            toks[off:off + n] = seq.tokens[start:end]
+            segs[off:off + n] = j
+            poss[off:off + n] = idx
+            dpage[off:off + n] = np.asarray(seq.pages, np.int32)[idx // ps]
+            dslot[off:off + n] = idx % ps
+            past_lists.append(seq.pages[:start // ps])
+            off += n
+        cp_off = np.cumsum([0] + [len(p) for p in past_lists])
+        CP = self._pow2_pad(max(int(cp_off[-1]), 1))
+        past = np.full(CP, self._scratch, np.int32)
+        for j, pages in enumerate(past_lists):
+            past[cp_off[j]:cp_off[j + 1]] = pages
+        NS = self._pow2_pad(nseg)
+        past_start = np.zeros(NS, np.int32)
+        past_len = np.zeros(NS, np.int32)
+        last_idx = np.zeros(NS, np.int32)
+        temps = np.zeros(NS, np.float32)
+        topks = np.zeros(NS, np.int32)
+        seeds = np.zeros(NS, np.int32)
+        spos = np.zeros(NS, np.int32)
+        seg_off = np.cumsum([0] + seg_lens)
+        for j, (seq, start, end, _) in enumerate(items):
+            sp = seq.req.sampling
+            past_start[j] = cp_off[j] * ps
+            past_len[j] = start
+            last_idx[j] = seg_off[j + 1] - 1
+            temps[j] = sp.temperature
+            topks[j] = sp.top_k
+            seeds[j] = sp.seed
+            spos[j] = end
+        toks_dev, self.k_pages, self.v_pages = mr.prefill_pack_step(
+            self.params, jnp.asarray(toks), jnp.asarray(segs),
+            jnp.asarray(poss), jnp.asarray(dpage), jnp.asarray(dslot),
+            self.k_pages, self.v_pages, jnp.asarray(past),
+            jnp.asarray(past_start), jnp.asarray(past_len),
+            jnp.asarray(last_idx), jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(seeds), jnp.asarray(spos), self._base_key,
+            cfg=self.cfg, page_size=ps)
+        tn = np.asarray(toks_dev)                  # one host sync per round
+        now = time.monotonic()
+        out: list = []
+        for j, (seq, _start, _end, smp) in enumerate(items):
+            if not smp:
+                out.append(None)
+                continue
+            if seq.req.first_token_s is None:
+                seq.req.first_token_s = now
+            out.append(int(tn[j]))
+        return out
 
     # ------------------------------------------------------------ decode
     def decode(self, seqs) -> list[int]:
-        B = len(seqs)
-        npg_max = max(len(s.pages) for s in seqs)
-        bt = np.full((B, npg_max), self._scratch, np.int32)
-        lens = np.zeros((B,), np.int32)
-        toks = np.zeros((B, 1), np.int32)
-        for i, s in enumerate(seqs):
-            bt[i, :len(s.pages)] = s.pages
-            lens[i] = s.pos - 1            # last token not yet in cache
-            toks[i, 0] = s.tokens[-1]
-        logits, self.k_pages, self.v_pages = mr.decode_step(
-            self.params, jnp.asarray(toks), self.k_pages, self.v_pages,
-            jnp.asarray(bt), jnp.asarray(lens),
-            cfg=self.cfg, page_size=self.page_size)
-        new = np.asarray(self._sample(logits, seqs[0].req.sampling))
-        return [int(t) for t in new]
+        n = len(seqs)
+        if not self._slots_current(seqs):
+            self._sync_slots(seqs)
+        toks, self._dstate, self.k_pages, self.v_pages = mr.decode_step(
+            self.params, self._dstate, self.k_pages, self.v_pages,
+            self._base_key, cfg=self.cfg, page_size=self.page_size,
+            nb=self._nb, npgb=self._npgb)
+        out = np.asarray(toks)                 # the single host sync
+        # advance the mirrors exactly like the fused step advanced the
+        # device state (active rows only)
+        active = self._m_lens[:self._nb] > 0
+        self._m_lens[:self._nb] += active
+        self._m_toks[:self._nb] = np.where(active, out[:self._nb],
+                                           self._m_toks[:self._nb])
+        return [int(t) for t in out[:n]]
 
-    # ------------------------------------------------------------ sample
-    def _sample(self, logits: jax.Array, sp) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return mr.sample(logits, sub, temperature=sp.temperature,
-                         top_k=sp.top_k)
+    def _slots_current(self, seqs) -> bool:
+        if len(self._slots) != len(seqs):
+            return False
+        return all(sl_seq is s and sl_pages is s.pages
+                   for (sl_seq, sl_pages), s in zip(self._slots, seqs))
+
+    def _sync_slots(self, seqs) -> None:
+        """Batch membership changed: rewrite the rows that differ, zero the
+        rows that emptied, pick the shape bucket, upload the state."""
+        n = len(seqs)
+        old = self._slots
+        for i, s in enumerate(seqs):
+            if i < len(old) and old[i][0] is s and old[i][1] is s.pages:
+                continue
+            self._m_bt[i, :] = self._scratch
+            self._m_bt[i, :len(s.pages)] = s.pages
+            self._m_lens[i] = s.pos - 1        # last token not yet in cache
+            self._m_toks[i] = s.tokens[-1]
+            sp = s.req.sampling
+            self._m_temps[i] = sp.temperature
+            self._m_topks[i] = sp.top_k
+            self._m_seeds[i] = sp.seed
+        for i in range(n, len(old)):           # rows that shrank away
+            self._m_bt[i, :] = self._scratch
+            self._m_lens[i] = 0
+            self._m_toks[i] = 0
+            self._m_temps[i] = 0.0
+            self._m_topks[i] = 0
+            self._m_seeds[i] = 0
+        self._slots = [(s, s.pages) for s in seqs]
+        npg_need = max(len(s.pages) for s in seqs)
+        if self.bucket_shapes:
+            self._nb = bucket(n, self._bcap)
+            self._npgb = bucket(npg_need, self._npg_cap)
+        else:
+            self._nb, self._npgb = n, npg_need
+        self._dstate = {
+            "bt": jnp.asarray(self._m_bt),
+            "lens": jnp.asarray(self._m_lens),
+            "toks": jnp.asarray(self._m_toks),
+            "temps": jnp.asarray(self._m_temps),
+            "top_ks": jnp.asarray(self._m_topks),
+            "seeds": jnp.asarray(self._m_seeds),
+        }
+
+    # ------------------------------------------------------------ shapes
+    def _token_pad(self, n: int) -> int:
+        if self.bucket_shapes:
+            return bucket_tokens(n, self.prefill_pad)
+        return -(-n // self.prefill_pad) * self.prefill_pad
+
+    def _pow2_pad(self, n: int) -> int:
+        if self.bucket_shapes:
+            return bucket_tokens(n, 1)        # plain pow2 ladder
+        return n

@@ -9,14 +9,39 @@ is a PAGED pool shared by all sequences —
 with per-sequence block tables (vLLM layout: one page id list per sequence,
 shared across layers; the L axis of the pool is carried by the layer scan).
 
-Prefill runs one request at a time (SGLang-style) over the uncached suffix,
-attending to the radix-cached prefix gathered from its pages; decode runs
-the whole continuous batch, writing each new token's K/V into its page slot
-and attending over block-table-gathered pages — the jnp gather here is the
-oracle path; on TPU `repro.kernels.ops.paged_decode` swaps in the Pallas
-kernel (same signature).
+The hot path is SHAPE-STABLE and single-dispatch-per-step:
 
-All functions are pure and jitted with donated pools; the engine holds the
+  `decode_step`  consumes the backend's persistent device-resident batch
+      state (block table, seq lens, last tokens, per-row sampling params)
+      at its FULL capacity shape and slices the active `(nb, npgb)` bucket
+      inside the jit, so the traced input shapes never change — the only
+      compile keys are the static bucket dims, a small fixed set. It
+      writes the new K/V, runs paged attention (Pallas on TPU, jnp oracle
+      elsewhere), samples ON DEVICE with per-row temperature/top-k arrays,
+      and folds the `lens += 1` / `toks = sampled` state advance into the
+      same dispatch: one jitted call per engine iteration, with the
+      sampled tokens staying resident for the next step's embedding
+      lookup (the host only ever downloads them for bookkeeping).
+
+  `prefill_pack_step`  admits SEVERAL sequences in one dispatch: their
+      uncached suffixes are ragged-packed back-to-back along one token
+      axis (SGLang-style) with per-token segment ids / positions / page
+      destinations, each segment attending to its own radix-cached prefix
+      gathered from a packed past-page list. New K/V rows scatter DIRECTLY
+      into the pool (no gather->reshape->scatter round trip) and the
+      boundary next token of every segment is sampled in the same
+      dispatch.
+
+  `prefill_step`  the one-request-at-a-time fallback (kept for parity
+      tests and `packed_prefill=False`), with the same direct-scatter
+      page write.
+
+Sampling is batch-shape-invariant: each row draws from a PRNG key derived
+from (the request's sampling seed, token position), never from the row's
+position in the batch or the padded batch size — so bucketing cannot
+change sampled tokens and reruns reproduce.
+
+All functions are pure and jitted with donated pools; the backend holds the
 pools and threads them through.
 """
 from __future__ import annotations
@@ -54,6 +79,78 @@ def _ffn(lp, h, cfg: ModelConfig):
     return apply_mlp(lp["mlp"], h, cfg)
 
 
+# ---------------------------------------------------------------- sampling
+
+def _sample_rows(logits, base_key, seeds, pos, temps, top_ks):
+    """Per-row sampling, batch-shape-invariant and run-stable.
+
+    logits: (B, V); seeds/pos: (B,) int32 identity of each draw (the
+    request's sampling seed and the sampled token's position); temps: (B,)
+    float32 (<= 0 => greedy); top_ks: (B,) int32 (0 => disabled).
+    Row i's randomness depends only on (base_key, seeds[i], pos[i]) — NOT
+    on i, B, or any process-global counter — so padded/bucketed batches
+    sample identical tokens and reruns reproduce.
+    """
+    lg = logits.astype(jnp.float32)
+    V = lg.shape[-1]
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def topk_mask():
+        srt = jnp.sort(lg, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(
+            srt, (jnp.clip(top_ks, 1, V) - 1)[:, None], axis=-1)  # (B, 1)
+        return jnp.where((top_ks[:, None] > 0) & (lg < kth), -jnp.inf, lg)
+
+    def stochastic():
+        masked = jax.lax.cond(jnp.any(top_ks > 0), topk_mask, lambda: lg)
+        scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+
+        def draw(seed, p, row):
+            k = jax.random.fold_in(jax.random.fold_in(base_key, seed), p)
+            return jax.random.categorical(k, row)
+
+        sampled = jax.vmap(draw)(seeds, pos, scaled).astype(jnp.int32)
+        return jnp.where(temps <= 0.0, greedy, sampled)
+
+    # all-greedy batches (the common case) skip the sort + categorical
+    return jax.lax.cond(jnp.any(temps > 0.0), stochastic, lambda: greedy)
+
+
+@jax.jit
+def sample_rows(logits, base_key, seeds, pos, temps, top_ks):
+    """Standalone jitted `_sample_rows` (the sequential-prefill path)."""
+    return _sample_rows(logits, base_key, seeds, pos, temps, top_ks)
+
+
+@jax.jit
+def sample(logits: jax.Array, key: jax.Array, *, temperature=0.0,
+           top_k=0) -> jax.Array:
+    """Fallback batch sampler, logits: (B, V) -> (B,) int32.
+
+    `temperature` / `top_k` are TRACED scalars (one compiled program for
+    every sampling config), not static_argnames — a distinct config no
+    longer compiles a fresh program.
+    """
+    lg = logits.astype(jnp.float32)
+    V = lg.shape[-1]
+    t = jnp.asarray(temperature, jnp.float32)
+    k = jnp.asarray(top_k, jnp.int32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def topk_mask():
+        srt = jnp.sort(lg, axis=-1)[:, ::-1]
+        kth = jax.lax.dynamic_slice_in_dim(srt, jnp.clip(k, 1, V) - 1, 1,
+                                           axis=-1)
+        return jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+
+    def stochastic():
+        masked = jax.lax.cond(k > 0, topk_mask, lambda: lg)
+        scaled = masked / jnp.maximum(t, 1e-6)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+    return jax.lax.cond(t > 0.0, stochastic, lambda: greedy)
+
+
 # ----------------------------------------------------------------- prefill
 
 @functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
@@ -62,7 +159,7 @@ def prefill_step(params: Any, tokens: jax.Array, new_pages: jax.Array,
                  k_pages: jax.Array, v_pages: jax.Array,
                  past_pages: jax.Array, past_len: jax.Array,
                  new_len: jax.Array, *, cfg: ModelConfig, page_size: int):
-    """One-request prefill over the uncached suffix.
+    """One-request prefill over the uncached suffix (sequential fallback).
 
     tokens:     (1, S_pad)   uncached suffix, right-padded
     new_pages:  (NP,) int32  page ids to write the suffix K/V into (padded
@@ -77,16 +174,11 @@ def prefill_step(params: Any, tokens: jax.Array, new_pages: jax.Array,
     S = tokens.shape[1]
     h = embed_tokens(params, tokens, cfg)          # compute in param dtype
     positions = past_len + jnp.arange(S, dtype=jnp.int32)[None, :]   # (1,S)
-
-    def write_pages(pool_l, new_kv):
-        # new_kv: (1, S, K, hd) -> rows i go to page new_pages[i // ps], slot i % ps
-        ps = page_size
-        n_np = new_pages.shape[0]
-        dst = pool_l[new_pages]                          # (NP, ps, K, hd)
-        dst = dst.reshape(n_np * ps, *pool_l.shape[2:])
-        dst = jax.lax.dynamic_update_slice_in_dim(dst, new_kv[0], 0, axis=0)
-        dst = dst.reshape(n_np, ps, *pool_l.shape[2:])
-        return pool_l.at[new_pages].set(dst)
+    # row i of the suffix scatters straight into page new_pages[i // ps],
+    # slot i % ps (no gather->reshape->scatter round trip on the pool)
+    rows = jnp.arange(S, dtype=jnp.int32)
+    dest_page = new_pages[rows // page_size]
+    dest_slot = rows % page_size
 
     def blk(carry, xs):
         h, kp, vp = carry
@@ -113,8 +205,8 @@ def prefill_step(params: Any, tokens: jax.Array, new_pages: jax.Array,
         y = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
         h = h + y
         h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
-        kp = kp.at[li].set(write_pages(kp[li], k_new))
-        vp = vp.at[li].set(write_pages(vp[li], v_new))
+        kp = kp.at[li, dest_page, dest_slot].set(k_new[0])
+        vp = vp.at[li, dest_page, dest_slot].set(v_new[0])
         return (h, kp, vp), None
 
     L = cfg.n_layers
@@ -127,26 +219,126 @@ def prefill_step(params: Any, tokens: jax.Array, new_pages: jax.Array,
     return logits, k_pages, v_pages
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnums=(6, 7))
+def prefill_pack_step(params: Any, tokens: jax.Array, seg_ids: jax.Array,
+                      positions: jax.Array, dest_page: jax.Array,
+                      dest_slot: jax.Array, k_pages: jax.Array,
+                      v_pages: jax.Array, past_pages: jax.Array,
+                      past_start: jax.Array, past_len: jax.Array,
+                      last_idx: jax.Array, temps: jax.Array,
+                      top_ks: jax.Array, seeds: jax.Array,
+                      sample_pos: jax.Array, base_key: jax.Array, *,
+                      cfg: ModelConfig, page_size: int):
+    """Packed ragged prefill: several sequences' uncached suffixes in ONE
+    dispatch, each attending to its own cached prefix; the boundary next
+    token of every segment is sampled on device in the same dispatch.
+
+    Packed token axis (S = bucketed total, padding tokens have seg -1):
+      tokens:     (S,) int32  suffix tokens, segments back-to-back
+      seg_ids:    (S,) int32  segment index per token (-1 = padding)
+      positions:  (S,) int32  absolute position (past_len[seg] + offset)
+      dest_page:  (S,) int32  pool page the token's K/V scatters into
+      dest_slot:  (S,) int32  slot within that page (padding -> scratch)
+    Packed past-page axis (CP = bucketed total, padded with scratch):
+      past_pages: (CP,) int32  all segments' cached-prefix pages, packed
+    Per segment (NSEG = bucketed count):
+      past_start: (NSEG,) int32  first past COLUMN (page offset * ps)
+      past_len:   (NSEG,) int32  cached token count
+      last_idx:   (NSEG,) int32  packed index of the segment's last token
+      temps/top_ks/seeds/sample_pos: per-segment sampling rows
+    Returns (tokens (NSEG,) int32, k_pages, v_pages).
+    """
+    S = tokens.shape[0]
+    nseg = past_start.shape[0]
+    h = embed_tokens(params, tokens[None, :], cfg)                 # (1,S,d)
+    pos2 = positions[None, :]
+    tseg = jnp.clip(seg_ids, 0, nseg - 1)
+    tstart = past_start[tseg]                                      # (S,)
+    tplen = past_len[tseg]
+
+    tok_idx = jnp.arange(S, dtype=jnp.int32)
+    # past col c valid for token t iff it falls in t's segment's window
+    # (computed once; identical for every layer)
+    CP = past_pages.shape[0]
+    past_cols = jnp.arange(CP * page_size, dtype=jnp.int32)
+    m_past = ((past_cols[None, :] >= tstart[:, None]) &
+              (past_cols[None, :] < (tstart + tplen)[:, None]))    # (S,Tp)
+    # new col u valid for token t iff same segment and causal; note this
+    # includes every token's own diagonal (padding rows share seg -1), so
+    # no row's softmax is ever all-masked
+    m_new = ((seg_ids[None, :] == seg_ids[:, None]) &
+             (tok_idx[None, :] <= tok_idx[:, None]))
+    mask = jnp.concatenate([m_past, m_new], axis=1)[None, None]    # (1,1,S,T)
+
+    def blk(carry, xs):
+        h, kp, vp = carry
+        lp, li = xs
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = attn._project_q(lp["attn"], x, cfg, pos2, rope=True)
+        k_new, v_new = attn._project_kv(lp["attn"], x, cfg, pos2, rope=True)
+        k_new = k_new.astype(kp.dtype)
+        v_new = v_new.astype(vp.dtype)
+        k_past = kp[li][past_pages].reshape(1, -1, cfg.n_kv_heads, cfg.hd)
+        v_past = vp[li][past_pages].reshape(1, -1, cfg.n_kv_heads, cfg.hd)
+        k_all = jnp.concatenate([k_past, k_new], axis=1)
+        v_all = jnp.concatenate([v_past, v_new], axis=1)
+        o = attn._sdpa(q, k_all, v_all, mask, cfg)
+        y = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        h = h + y
+        h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        kp = kp.at[li, dest_page, dest_slot].set(k_new[0])
+        vp = vp.at[li, dest_page, dest_slot].set(v_new[0])
+        return (h, kp, vp), None
+
+    L = cfg.n_layers
+    (h, k_pages, v_pages), _ = jax.lax.scan(
+        blk, (h, k_pages, v_pages),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h[:, last_idx], cfg)[0]             # (NSEG,V)
+    toks = _sample_rows(logits, base_key, seeds, sample_pos, temps, top_ks)
+    return toks, k_pages, v_pages
+
+
 # ------------------------------------------------------------------ decode
 
-@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
-                   donate_argnums=(2, 3))
-def decode_step(params: Any, tokens: jax.Array, k_pages: jax.Array,
-                v_pages: jax.Array, block_tables: jax.Array,
-                seq_lens: jax.Array, *, cfg: ModelConfig, page_size: int):
-    """Continuous-batch decode: one new token per sequence.
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "page_size", "nb", "npgb"),
+                   donate_argnums=(1, 2, 3))
+def decode_step(params: Any, state: dict, k_pages: jax.Array,
+                v_pages: jax.Array, base_key: jax.Array, *,
+                cfg: ModelConfig, page_size: int, nb: int, npgb: int):
+    """Fused continuous-batch decode: embed + forward + KV write + paged
+    attention + per-row sampling + state advance, ONE dispatch.
 
-    tokens:       (B, 1) int32   last sampled token per sequence
-    block_tables: (B, NPG) int32 page ids (padded with page 0)
-    seq_lens:     (B,) int32     tokens already in cache (new token lands at
-                                 this position); 0 rows are inactive padding
-    Returns (logits (B, vocab), k_pages, v_pages).
+    `state` is the backend's persistent device-resident batch state at
+    full capacity shape (Bcap, NPGcap); the active bucket `(nb, npgb)` is
+    sliced INSIDE the jit so the traced input shapes never vary — the only
+    compile keys are the static bucket dims:
+
+      bt:    (Bcap, NPGcap) int32  block tables (scratch-padded)
+      lens:  (Bcap,) int32   tokens already in cache per row (0 = inactive
+                             padding row; real rows always have lens >= 1)
+      toks:  (Bcap,) int32   last sampled token per row (device-resident —
+                             the host never uploads tokens on this path)
+      temps/top_ks/seeds: (Bcap,) per-row sampling params / RNG ids
+
+    Rows [nb:] are untouched; inactive rows inside the bucket keep lens=0,
+    write only to their scratch page, and sample garbage that is ignored.
+    Returns (tokens (nb,) int32, state, k_pages, v_pages).
     """
-    B = tokens.shape[0]
-    h = embed_tokens(params, tokens, cfg)          # compute in param dtype
-    positions = seq_lens                                       # (B,)
-    page_ids = block_tables[jnp.arange(B), seq_lens // page_size]
-    offsets = seq_lens % page_size
+    bt = jax.lax.slice(state["bt"], (0, 0), (nb, npgb))
+    lens = jax.lax.slice(state["lens"], (0,), (nb,))
+    toks = jax.lax.slice(state["toks"], (0,), (nb,))
+    temps = jax.lax.slice(state["temps"], (0,), (nb,))
+    top_ks = jax.lax.slice(state["top_ks"], (0,), (nb,))
+    seeds = jax.lax.slice(state["seeds"], (0,), (nb,))
+
+    h = embed_tokens(params, toks[:, None], cfg)   # compute in param dtype
+    positions = lens                                           # (nb,)
+    page_ids = bt[jnp.arange(nb), lens // page_size]
+    offsets = lens % page_size
 
     def blk(carry, xs):
         h, kp, vp = carry
@@ -157,8 +349,7 @@ def decode_step(params: Any, tokens: jax.Array, k_pages: jax.Array,
                                         positions[:, None], rope=True)
         kp = kp.at[li, page_ids, offsets].set(k_new[:, 0].astype(kp.dtype))
         vp = vp.at[li, page_ids, offsets].set(v_new[:, 0].astype(vp.dtype))
-        o = kops.paged_decode(q[:, 0], kp[li], vp[li], block_tables,
-                              seq_lens + 1)
+        o = kops.paged_decode(q[:, 0], kp[li], vp[li], bt, lens + 1)
         y = jnp.einsum("bhk,hkd->bd", o, lp["attn"]["wo"])[:, None]
         h = h + y
         h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
@@ -169,20 +360,30 @@ def decode_step(params: Any, tokens: jax.Array, k_pages: jax.Array,
         blk, (h, k_pages, v_pages),
         (params["layers"], jnp.arange(L, dtype=jnp.int32)))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    logits = lm_logits(params, h, cfg)[:, 0]
-    return logits, k_pages, v_pages
+    logits = lm_logits(params, h, cfg)[:, 0]                   # (nb, V)
+
+    new_toks = _sample_rows(logits, base_key, seeds, lens + 1, temps, top_ks)
+    active = lens > 0
+    state = dict(state,
+                 lens=state["lens"].at[:nb].set(
+                     jnp.where(active, lens + 1, lens)),
+                 toks=state["toks"].at[:nb].set(
+                     jnp.where(active, new_toks, toks)))
+    return new_toks, state, k_pages, v_pages
 
 
-# ---------------------------------------------------------------- sampling
+# ---------------------------------------------------------- instrumentation
 
-@functools.partial(jax.jit, static_argnames=("temperature", "top_k"))
-def sample(logits: jax.Array, key: jax.Array, *, temperature: float,
-           top_k: int) -> jax.Array:
-    """logits: (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lg = logits.astype(jnp.float32) / temperature
-    if top_k > 0:
-        kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
-        lg = jnp.where(lg < kth, -jnp.inf, lg)
-    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+def compile_counts() -> dict:
+    """Live jit-cache entry counts for the hot-path programs (the
+    recompile-churn metric serving_bench gates; process-global)."""
+    def n(f):
+        try:
+            return int(f._cache_size())
+        except Exception:                                    # noqa: BLE001
+            return -1
+    return {"decode_step": n(decode_step),
+            "prefill_pack_step": n(prefill_pack_step),
+            "prefill_step": n(prefill_step),
+            "sample": n(sample),
+            "sample_rows": n(sample_rows)}

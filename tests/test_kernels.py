@@ -90,17 +90,42 @@ def test_paged_decode_length_edges():
 
 
 def test_paged_decode_ignores_garbage_pages():
-    """Entries past seq_len may point anywhere — results must not change."""
+    """Entries past the ragged edge are never dereferenced: the clamped
+    index map means they may hold ARBITRARY int32 (even out-of-range page
+    ids) — results must not change, and nothing may crash."""
     B, H, K, hd, page, Ptot, npg = 1, 4, 2, 32, 8, 16, 4
     q = _rand((B, H, hd), jnp.float32)
     kp = _rand((Ptot, page, K, hd), jnp.float32)
     vp = _rand((Ptot, page, K, hd), jnp.float32)
     bt1 = jnp.asarray([[3, 5, 0, 0]], jnp.int32)
-    bt2 = jnp.asarray([[3, 5, 9, 12]], jnp.int32)   # garbage beyond len
-    lens = jnp.asarray([12], jnp.int32)             # only pages 0-1 valid
+    bt2 = jnp.asarray([[3, 5, 999, -7]], jnp.int32)  # garbage beyond len
+    lens = jnp.asarray([12], jnp.int32)              # only pages 0-1 valid
     o1 = paged_decode(q, kp, vp, bt1, lens, interpret=True)
     o2 = paged_decode(q, kp, vp, bt2, lens, interpret=True)
+    want = ref.paged_decode_ref(q, kp, vp, bt2, lens)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(want), atol=2e-5)
+
+
+def test_paged_decode_ragged_sweep():
+    """Very ragged batch — per-sequence lengths spanning 1 token to the
+    full table, with out-of-range garbage seeded past every ragged edge —
+    must match the oracle exactly (the interpret-mode acceptance sweep for
+    the ragged grid)."""
+    B, H, K, hd, page, Ptot, npg = 6, 8, 2, 32, 8, 24, 6
+    q = _rand((B, H, hd), jnp.float32)
+    kp = _rand((Ptot, page, K, hd), jnp.float32)
+    vp = _rand((Ptot, page, K, hd), jnp.float32)
+    bt = RNG.integers(0, Ptot, size=(B, npg)).astype(np.int32)
+    lens = np.asarray([1, page, page + 1, 2 * page + 3, npg * page - 1,
+                       npg * page], np.int32)
+    for i in range(B):                     # poison everything past the edge
+        bt[i, (int(lens[i]) + page - 1) // page:] = RNG.integers(
+            -(2 ** 31), 2 ** 31 - 1)
+    bt, lens = jnp.asarray(bt), jnp.asarray(lens)
+    out = paged_decode(q, kp, vp, bt, lens, interpret=True)
+    want = ref.paged_decode_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
 
 
 # ---------------------------------------------------------------- ssd
