@@ -16,7 +16,7 @@ import random
 from collections import defaultdict
 
 from repro.routing import HashRing
-from repro.core.simradix import SimRadix
+from repro.replica.simradix import SimRadix
 from repro.core.workloads import _tokens
 
 

@@ -4,8 +4,9 @@ saving comes from — then validate with the event simulator.
 
 Run:  PYTHONPATH=src python examples/diurnal_cost_study.py
 """
-from repro.core.cost import (autoscale_on_demand_cost, global_peak_cost,
-                             region_local_cost, variance_stats)
+from repro.provision.cost import (autoscale_on_demand_cost,
+                                  global_peak_cost, region_local_cost,
+                                  variance_stats)
 from repro.core.simulator import ReplicaConfig
 from repro.core.system import ServingSystem
 from repro.core.workloads import diurnal_series, multiturn

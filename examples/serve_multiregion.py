@@ -1,7 +1,10 @@
 """End-to-end multi-region serving driver: the full SkyLB two-layer system
 (prefix-trie routing + SP-P) over SIX real JAX engines in three regions,
-with a skewed workload that forces cross-region offloading — real tokens
-through real paged KV caches, LB decisions by the paper's algorithm.
+driven through the UNIFIED front API (`repro.frontend.Client`): every
+request is a handle with an incremental token-event stream, the skewed
+multi-turn workload forces cross-region offloading, and the lifecycle
+extras — `handle.cancel()` mid-stream and an expired `deadline_s` — are
+exercised against real paged KV caches.
 
 Run:  PYTHONPATH=src python examples/serve_multiregion.py [--requests 36]
 """
@@ -13,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.frontend import Client, RequestState, RouterHost
 from repro.models import build_model
 from repro.routing import build_routing
 from repro.serving import (Engine, EngineConfig, GenRequest, InProcessRouter,
@@ -46,6 +50,7 @@ def main():
                 cfg, params, EngineConfig(page_size=8, n_pages=n_pages,
                                           max_batch=3, max_seq_len=512,
                                           prefill_pad=32)))
+    client = Client(RouterHost(router))
 
     # skewed multi-turn workload: 2/3 of USERS live in the US (requests
     # enter at their home region; histories accumulate wherever served)
@@ -56,24 +61,52 @@ def main():
             for u in range(8)}
     t0 = time.time()
     turns = max(1, args.requests // 8)
-    submitted = 0
+    handles = []
     for t in range(turns):          # closed loop: turn t+1 extends turn t
         for u in range(8):
             prompt = sessions[u] + tuple(
                 rng.integers(1, cfg.vocab,
                              size=int(rng.integers(6, 16))).tolist())
-            router.submit(home[u], GenRequest(
+            handles.append(client.submit(GenRequest(
                 prompt_tokens=prompt, user_id=f"u{u}", session_key=f"u{u}",
-                sampling=SamplingParams(max_new_tokens=args.max_new)))
+                sampling=SamplingParams(max_new_tokens=args.max_new)),
+                region=home[u]))
             sessions[u] = prompt    # history grows
-            submitted += 1
-        router.run_until_idle()     # finish the turn before the next one
+        client.drain()              # finish the turn before the next one
+
+    # --- lifecycle extras on the SAME live fleet ------------------------
+    # 1. stream one request token-by-token (the front API's raison d'etre)
+    streamed = client.submit(GenRequest(
+        prompt_tokens=sessions[0], user_id="u0", session_key="u0",
+        sampling=SamplingParams(max_new_tokens=args.max_new)), region="us")
+    ticks = [ev.index for ev in streamed.stream()]
+    assert ticks == list(range(len(ticks))) and streamed.done
+
+    # 2. cancel mid-stream: pages free, a terminal CANCELLED result lands
+    doomed = client.submit(GenRequest(
+        prompt_tokens=sessions[1], user_id="u1", session_key="u1",
+        sampling=SamplingParams(max_new_tokens=64)), region="us")
+    for ev in doomed.stream():
+        if ev.index >= 2:
+            doomed.cancel()
+            break
+    client.drain()
+    assert doomed.state is RequestState.CANCELLED
+    assert 2 < len(doomed.events) < 64
+
+    # 3. an already-expired deadline aborts before any dispatch
+    late = client.submit(GenRequest(
+        prompt_tokens=sessions[2], deadline_s=0.0,
+        sampling=SamplingParams(max_new_tokens=8)), region="eu")
+    assert late.state is RequestState.DEADLINE and late.events == []
     wall = time.time() - t0
 
-    res = router.results()
-    toks = sum(len(r.output_tokens) for r in res.values())
-    print(f"\ncompleted {len(res)} requests, {toks} tokens "
-          f"in {wall:.1f}s ({toks / wall:.1f} tok/s on CPU)")
+    done = [h for h in handles if h.state is RequestState.FINISHED]
+    toks = sum(len(h.result.output_tokens) for h in done)
+    print(f"\ncompleted {len(done)} requests, {toks} tokens "
+          f"in {wall:.1f}s ({toks / wall:.1f} tok/s on CPU); "
+          f"streamed={len(ticks)} cancelled@{len(doomed.events)} "
+          f"deadline={late.state.value}")
     hit_any = 0.0
     for region, lb in router.lbs.items():
         hits = {e: f"{eng.hit_rate():.2f}" for e, eng in lb.engines.items()}
@@ -81,10 +114,13 @@ def main():
                                  for eng in lb.engines.values()))
         print(f"  {region}: forwarded_out={lb.forwarded_out} "
               f"kv_hit_rates={hits}")
-    assert len(res) == submitted
+    assert len(done) == len(handles)
+    assert all(h.result.output_tokens == h.tokens for h in done)
     assert router.lbs["us"].forwarded_out > 0, "expected cross-region offload"
-    assert hit_any > 0.2, "expected radix prefix reuse across turns"
-    print("serve_multiregion OK — cross-region offload + prefix reuse work")
+    if turns >= 2:      # prefix reuse needs a second turn over the history
+        assert hit_any > 0.2, "expected radix prefix reuse across turns"
+    print("serve_multiregion OK — streaming front API + cancel/deadline + "
+          "cross-region offload work")
 
 
 if __name__ == "__main__":

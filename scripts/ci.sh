@@ -24,6 +24,15 @@ python -m pytest -x -q \
     --ignore=tests/test_moe_ep.py \
     --ignore=tests/test_compress.py
 
+echo "=== examples smoke (front API) ==="
+# the examples ARE the front-API contract users copy from: run them (fast
+# paths) so a breakage in submit -> stream -> result / cancel / deadline
+# fails CI, not users. quickstart covers routing + engine + SP-P;
+# serve_multiregion covers the Client/handle lifecycle over the two-layer
+# router (6 requests keep it to one closed-loop turn).
+python examples/quickstart.py
+python examples/serve_multiregion.py --requests 6
+
 echo "=== smoke benchmarks ==="
 # fresh per-figure outputs land in a scratch dir (the committed
 # artifacts/bench-smoke/ stays the baseline); benchmarks.run also writes the

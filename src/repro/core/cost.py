@@ -3,10 +3,15 @@ when the elastic provisioning subsystem landed (`repro.provision`: measured
 $-metering, scaler policies, fleet controller). Import from
 `repro.provision` instead.
 """
+import warnings
+
 from repro.provision.cost import (ON_DEMAND_RATE, OD_OVER_RES,  # noqa: F401
                                   RESERVED_RATE, autoscale_on_demand_cost,
                                   global_peak_cost, region_local_cost,
                                   replicas_needed, variance_stats)
+
+warnings.warn("repro.core.cost is deprecated; import from "
+              "repro.provision instead", DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "ON_DEMAND_RATE", "OD_OVER_RES", "RESERVED_RATE",

@@ -1,6 +1,11 @@
 """DEPRECATED shim — `repro.core.hashring` moved to `repro.routing.hashring`.
 Import from `repro.routing` instead.
 """
+import warnings
+
 from repro.routing.hashring import HashRing  # noqa: F401
+
+warnings.warn("repro.core.hashring is deprecated; import from "
+              "repro.routing instead", DeprecationWarning, stacklevel=2)
 
 __all__ = ["HashRing"]

@@ -19,6 +19,8 @@ def pct(xs: list[float], p: float) -> float:
 class RunMetrics:
     completed: list = dataclasses.field(default_factory=list)
     rejected: list = dataclasses.field(default_factory=list)
+    cancelled: list = dataclasses.field(default_factory=list)
+    deadline_aborted: list = dataclasses.field(default_factory=list)
     forwards: list = dataclasses.field(default_factory=list)
     issued: int = 0
     t_start: float = 0.0
@@ -36,6 +38,14 @@ class RunMetrics:
     def on_rejected(self, req) -> None:
         """Replica refused the request (oversized for its KV budget)."""
         self.rejected.append(req)
+
+    def on_cancelled(self, req) -> None:
+        """Client abandoned the request (handle.cancel())."""
+        self.cancelled.append(req)
+
+    def on_deadline(self, req) -> None:
+        """deadline_s expired before completion: aborted, not served."""
+        self.deadline_aborted.append(req)
 
     def _client_ttfts(self) -> list:
         """Client-observed TTFTs — the ONE definition behind both the
@@ -60,11 +70,18 @@ class RunMetrics:
         e2e = [r.finished - r.issued for r in reqs]
         prompt_tokens = sum(len(r.prompt_tokens) for r in reqs)
         cached = sum(r.cached_tokens for r in reqs)
+        # goodput: output delivered by requests that met their deadline
+        # (requests past deadline are aborted mid-flight, so their partial
+        # tokens are NOT goodput; requests without a deadline always count)
+        good = [r for r in reqs
+                if r.deadline_s is None
+                or (r.finished - r.issued) <= r.deadline_s]
         s = {
             "requests": len(reqs),
             "duration_s": dur,
             "throughput_tok_s": out_tokens / dur,
             "throughput_req_s": len(reqs) / dur,
+            "goodput_tok_s": sum(r.output_len for r in good) / dur,
             "ttft_p50": pct(ttft, 50), "ttft_p90": pct(ttft, 90),
             "ttft_mean": statistics.fmean(ttft) if ttft else float("nan"),
             "e2e_p50": pct(e2e, 50), "e2e_p90": pct(e2e, 90),
@@ -72,12 +89,15 @@ class RunMetrics:
             "hit_rate": cached / max(1, prompt_tokens),
             "forwards": len(self.forwards),
             "rejected": len(self.rejected),
+            "cancelled": len(self.cancelled),
+            "deadline_aborted": len(self.deadline_aborted),
             "issued": self.issued,
-            # issued but neither completed nor rejected by t_end: in-flight
-            # at the horizon on a healthy run; DROPPED work if a drill
-            # expected the system to settle (outage test asserts 0)
+            # issued but not terminally resolved by t_end: in-flight at the
+            # horizon on a healthy run; DROPPED work if a drill expected
+            # the system to settle (outage test asserts 0)
             "unresolved": max(0, self.issued - len(self.completed)
-                              - len(self.rejected)),
+                              - len(self.rejected) - len(self.cancelled)
+                              - len(self.deadline_aborted)),
         }
         if self.cost is not None:
             s.update(self.cost)

@@ -2,11 +2,16 @@
 when the routing brain was unified behind the transport-agnostic
 `repro.routing.RoutingCore`. Import from `repro.routing` instead.
 """
+import warnings
+
 from repro.routing.policies import (BP, SP_O, SP_P, BlendedScorePolicy,  # noqa: F401
                                     ConsistentHash, LeastLoad, Policy,
                                     PrefixTreePolicy, RoundRobin,
                                     SGLangRouterLike, TargetView, eligible,
                                     make_policy)
+
+warnings.warn("repro.core.policies is deprecated; import from "
+              "repro.routing instead", DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "BP", "SP_O", "SP_P", "BlendedScorePolicy", "ConsistentHash",

@@ -1,6 +1,11 @@
 """DEPRECATED shim — `repro.core.prefixtree` moved to
 `repro.routing.prefixtree`. Import from `repro.routing` instead.
 """
+import warnings
+
 from repro.routing.prefixtree import PrefixTree  # noqa: F401
+
+warnings.warn("repro.core.prefixtree is deprecated; import from "
+              "repro.routing instead", DeprecationWarning, stacklevel=2)
 
 __all__ = ["PrefixTree"]

@@ -80,6 +80,30 @@ class Request:
     forwarded: bool = False
     origin_lb: Optional[str] = None
     error: Optional[str] = None     # set when the replica rejects (oversized)
+    # ---- lifecycle (unified front API; see repro.frontend) ----
+    deadline_s: Optional[float] = None   # relative to `issued`
+    slo_class: str = "standard"
+    # a cancel that raced the request onto the WAN travels as this flag
+    # ("cancelled" | "deadline"); the next host to see it resolves it once
+    cancelled: Optional[str] = None
+    # terminal disposition when not a plain completion
+    finish_reason: Optional[str] = None
+    # host -> frontend notifications (set by ServingSystem.submit)
+    admit_cb: Optional[Callable] = None  # (req, t)
+    token_cb: Optional[Callable] = None  # (req, token, index, t)
+
+
+def resolve_cancelled(req: Request, now: float,
+                      reason: Optional[str] = None) -> None:
+    """Terminal resolution of a cancelled/deadline-aborted request — the
+    ONE implementation every sim-side site uses (LB queue pull, replica
+    reap, WAN-arrival of a travelling cancel flag), so 'resolves exactly
+    once' bookkeeping can never diverge per location. Callers guard on
+    `req.finished is None`."""
+    req.finish_reason = reason or req.cancelled or "cancelled"
+    req.finished = now
+    if req.done_cb:
+        req.done_cb(req)
 
 
 # ------------------------------------------------------------------ replica
@@ -124,6 +148,11 @@ class ReplicaSim:
         # where rejected-at-the-door requests go while draining (the fleet
         # system points this back at a live LB so nothing is dropped)
         self.on_bounce: Optional[Callable] = None
+        # tokens appended by the core this iteration, synthesized into
+        # per-token events on the event clock when the iteration completes
+        self._tokbuf: list = []
+        self.core.token_sink = (
+            lambda seq, tok, idx: self._tokbuf.append((seq, tok, idx)))
 
     # ---- introspection (what probes see)
     def pending_count(self) -> int:
@@ -166,6 +195,12 @@ class ReplicaSim:
 
     # ---- request entry
     def enqueue(self, req: Request) -> None:
+        if req.cancelled is not None:
+            # the cancel raced this request onto the wire: resolve it here,
+            # exactly once (it is in nobody's queue anymore)
+            if req.finished is None:
+                resolve_cancelled(req, self.sim.now)
+            return
         if self.draining or not self.alive:
             # a drained replica finishes what it HAS but admits nothing new;
             # requests already on the wire when the drain began bounce back
@@ -180,6 +215,17 @@ class ReplicaSim:
             return
         self.core.submit(req)
         self._kick()
+
+    # ---- cancellation (unified front API)
+    def cancel(self, rid: int):
+        """Abandon a request queued or running here: the core frees its
+        pages/radix pins, and the request resolves with the finish_reason
+        carried in `req.cancelled` ("cancelled" | "deadline"). Returns the
+        reaped Seq, or None if `rid` is not on this replica."""
+        seq = self.core.cancel(rid)
+        if seq is not None and seq.req.finished is None:
+            resolve_cancelled(seq.req, self.sim.now)
+        return seq
 
     # ---- elastic membership (repro.provision)
     def drain(self, on_drained: Optional[Callable] = None) -> None:
@@ -228,6 +274,8 @@ class ReplicaSim:
         now = self.sim.now
         for seq in plan.admitted:
             seq.req.replica = self.id
+            if seq.req.admit_cb is not None:
+                seq.req.admit_cb(seq.req, now)
         for seq in plan.rejected:       # oversized: error result, not HOL wedge
             req: Request = seq.req
             req.error = seq.error
@@ -247,6 +295,14 @@ class ReplicaSim:
     def _finish_step(self, admitted: list) -> None:
         finished = self.core.finish_step()
         now = self.sim.now
+        # synthesize this iteration's token events on the event clock (one
+        # drain per step, mirroring the engine's one-host-sync-per-step)
+        if self._tokbuf:
+            buf, self._tokbuf = self._tokbuf, []
+            for seq, tok, idx in buf:
+                req = seq.req
+                if req.token_cb is not None and req.finished is None:
+                    req.token_cb(req, tok, idx, now)
         for seq in admitted:
             if seq.req.ttft is None:
                 seq.req.ttft = now
@@ -465,6 +521,12 @@ class LoadBalancerSim:
 
     # ---- request path (Alg.1 HandleRequest)
     def on_request(self, req: Request) -> None:
+        if req.cancelled is not None:
+            # cancel raced the request onto the WAN (forward / steal /
+            # failover handoff): resolve at arrival, exactly once
+            if req.finished is None:
+                resolve_cancelled(req, self.sim.now)
+            return
         if req.arrival == 0.0:
             req.arrival = self.sim.now
         if req.origin_lb is None:

@@ -22,9 +22,14 @@ from typing import Optional
 
 from repro.core.metrics import RunMetrics
 from repro.core.simulator import (Controller, LoadBalancerSim, Network,
-                                  ReplicaConfig, ReplicaSim, Request, Sim)
+                                  ReplicaConfig, ReplicaSim, Request, Sim,
+                                  resolve_cancelled)
 from repro.core.workloads import SessionSpec, TreeSpec, _tokens, stable_hash
+from repro.frontend.api import RequestHandle, RequestState
+from repro.frontend.client import state_of
 from repro.routing import build_routing
+from repro.serving.request import (FinishReason, GenResult,
+                                   cancel_finish_reason, next_rid)
 
 REGIONS = ("us", "eu", "asia")
 
@@ -41,7 +46,11 @@ class ServingSystem:
         self._region_of: dict[str, str] = {}    # rid -> region (O(1) lookups)
         self.lbs: dict[str, LoadBalancerSim] = {}
         self._rid = itertools.count()
-        self._req_id = itertools.count()
+        # request ids come from the ONE process-wide counter shared with
+        # GenRequest, so frontend-submitted and internal-client requests
+        # can never collide in the rid-keyed cancel/deadline registries
+        self._req_id = iter(next_rid, None)
+        self._inflight: dict[int, Request] = {}   # rid -> unresolved request
         self.rng = random.Random(seed)
         self.replica_cfg = replica_cfg          # template for elastic adds
         self._build(variant, replicas_per_region, replica_cfg)
@@ -132,28 +141,128 @@ class ServingSystem:
         live = [lb for lb in self.lbs.values() if lb.alive]
         return min(live, key=lambda lb: self.net.one_way(region, lb.region))
 
-    def submit(self, req: Request, done_cb) -> None:
+    def _back_delay(self, r: Request) -> float:
+        """Replica -> client one-way (client-observed event times)."""
+        return self.net.one_way(
+            self._region_of.get(r.replica, r.region), r.region)
+
+    def _result_state(self, r: Request,
+                      handle: RequestHandle) -> tuple[GenResult, RequestState]:
+        if r.error is not None:
+            reason = FinishReason.ABORT
+        elif r.finish_reason is not None:
+            reason = cancel_finish_reason(r.finish_reason)
+        else:
+            reason = FinishReason.LENGTH
+        state = state_of(reason)
+        res = GenResult(
+            rid=r.rid, output_tokens=handle.tokens, finish_reason=reason,
+            cached_tokens=r.cached_tokens, prompt_len=len(r.prompt_tokens),
+            ttft_s=(r.ttft - r.issued) if r.ttft is not None else None,
+            e2e_s=((r.finished - r.issued) if r.finished is not None
+                   else None),
+            error=r.error)
+        return res, state
+
+    def submit(self, req: Request, done_cb=None, *,
+               handle: RequestHandle = None) -> RequestHandle:
+        """The front door: submit returns a `RequestHandle` exposing the
+        token-event stream (client-observed times: replica->client WAN
+        delay included), `cancel()`, and the terminal `GenResult`.
+
+        `done_cb` is the LEGACY callback surface, kept as a thin shim over
+        the handle: it still receives the raw sim `Request` at the same
+        event the handle resolves. `handle` lets `repro.frontend.SimHost`
+        pass the client-owned handle in so there is exactly one per
+        request."""
+        if handle is None:
+            handle = RequestHandle(
+                req, canceller=lambda h: self.cancel(h.rid, "cancelled"),
+                pump=lambda: self.sim.run(max_events=1) > 0)
+        if done_cb is not None:
+            handle.on_done(lambda _res, r=req, cb=done_cb: cb(r))
         req.issued = self.sim.now
         self.metrics.on_issued(req)
-        lb = self.lb_for(req.region)
+        self._inflight[req.rid] = req
+
+        def finish(r: Request):
+            res, state = self._result_state(r, handle)
+            # one zero-delay event, exactly where the legacy done_cb fired
+            self.sim.after(0.0, lambda: handle._finish(res, state))
+
+        def wrapped_admit(r: Request, t: float):
+            handle._admit(t + self._back_delay(r))
+
+        def wrapped_token(r: Request, tok: int, idx: int, t: float):
+            handle._token(tok, idx, t + self._back_delay(r))
 
         def wrapped_done(r: Request):
+            self._inflight.pop(r.rid, None)
             if r.error is not None:     # replica rejected (oversized)
                 self.metrics.on_rejected(r)
-                self.sim.after(0.0, lambda: done_cb(r))
-                return
-            back = self.net.one_way(
-                self._region_of.get(r.replica, r.region), r.region)
-            if r.ttft is not None:
-                r.ttft += back          # client-observed first token
-            r.finished += back
-            self.metrics.on_done(r)
-            self.sim.after(0.0, lambda: done_cb(r))
+            elif r.finish_reason == "cancelled":
+                self.metrics.on_cancelled(r)
+            elif r.finish_reason == "deadline":
+                self.metrics.on_deadline(r)
+            else:
+                back = self._back_delay(r)
+                if r.ttft is not None:
+                    r.ttft += back      # client-observed first token
+                r.finished += back
+                self.metrics.on_done(r)
+            finish(r)
+            # break the retention chain req -> callbacks -> handle ->
+            # events: metrics keep the request for the whole run, and an
+            # internal client's handle (with one TokenEvent per generated
+            # token) must not be pinned along with it
+            r.admit_cb = r.token_cb = r.done_cb = None
+
+        req.admit_cb = wrapped_admit
+        req.token_cb = wrapped_token
         req.done_cb = wrapped_done
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            # expired before admission: terminal DEADLINE, nothing
+            # dispatched — no LB ever sees the request
+            req.finish_reason = "deadline"
+            req.finished = self.sim.now
+            self._inflight.pop(req.rid, None)
+            self.metrics.on_deadline(req)
+            finish(req)
+            return handle
+        lb = self.lb_for(req.region)
         self.sim.after(self.net.one_way(req.region, lb.region),
                        lambda: lb.on_request(req))
+        if req.deadline_s is not None:
+            self.sim.at(req.issued + req.deadline_s,
+                        lambda: self.cancel(req.rid, "deadline"))
+        return handle
+
+    # ------------------------------------------------------------ cancel
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Propagate a cancel to wherever the request is right now: an LB
+        queue, a replica (pending or mid-decode — pages and radix pins are
+        freed), or the WAN (forward / steal / failover handoff in flight —
+        the flag travels on the request object and the next host to see it
+        resolves it, so a cancel racing a steal resolves exactly once).
+        Returns False when the request is already terminal (cancel after
+        finish is a no-op) or was already cancelled."""
+        req = self._inflight.get(rid)
+        if req is None or req.finished is not None or req.cancelled is not None:
+            return False
+        req.cancelled = reason
+        for lb in self.lbs.values():
+            got = lb.core.cancel(rid)
+            if got is not None:         # still queued at this LB
+                resolve_cancelled(got, self.sim.now, reason)
+                return True
+        for r in self.replicas:
+            if r.cancel(rid) is not None:
+                return True
+        return True     # on the WAN: resolved once, at the next arrival
 
     # ------------------------------------------------------------ clients
+    # The closed-loop clients drive the NEW front API: submit returns a
+    # RequestHandle and the next turn is chained on its terminal GenResult.
     def add_session_client(self, spec: SessionSpec,
                            think_mean: float = 1.0) -> None:
         state = {"i": 0, "history": tuple(spec.system_prompt)}
@@ -169,17 +278,15 @@ class ServingSystem:
                 session_key=spec.user_id, region=spec.region,
                 prompt_tokens=prompt, output_len=len(turn.output_tokens),
                 output_tokens=tuple(turn.output_tokens))
-            self.submit(req, done)
+            self.submit(req).on_done(lambda res: done(res, prompt, turn))
 
-        def done(r: Request):
-            if r.error is not None:
+        def done(res: GenResult, prompt: tuple, turn):
+            if res.error is not None:
                 # replica rejected the turn (oversized): the history only
                 # grows, so every later turn would fail too — end the session
                 return
-            i = state["i"]
-            turn = spec.turns[i]
-            state["history"] = tuple(r.prompt_tokens) + tuple(turn.output_tokens)
-            state["i"] = i + 1
+            state["history"] = prompt + tuple(turn.output_tokens)
+            state["i"] += 1
             think = self.rng.expovariate(1.0 / max(1e-6, think_mean))
             self.sim.after(think, issue)
 
@@ -212,17 +319,17 @@ class ServingSystem:
                 children: list[tuple] = []
 
                 def one_done(path):
-                    def cb(r: Request):
+                    def cb(res: GenResult):
                         if aborted["v"]:
                             return
-                        if r.error is not None:
+                        if res.error is not None:
                             # a rejected node breaks the tree's prefix chain:
                             # abandon this tree, move on to the next one
                             aborted["v"] = True
                             state["ti"] += 1
                             self.sim.after(0.5, run_tree)
                             return
-                        thoughts[path] = tuple(r.output_tokens)
+                        thoughts[path] = tuple(res.output_tokens)
                         for b in range(tree.branching):
                             children.append(path + (b,))
                         left["n"] -= 1
@@ -239,7 +346,7 @@ class ServingSystem:
                         session_key=f"{tree.user_id}:{tree.seed}",
                         region=tree.region, prompt_tokens=node_prompt(path),
                         output_len=olen, output_tokens=out)
-                    self.submit(req, one_done(path))
+                    self.submit(req).on_done(one_done(path))
 
             issue_layer(0, [()])
 
@@ -267,7 +374,7 @@ class ServingSystem:
                 rid=rid, user_id=f"{region}-open", session_key=f"{region}-o{rid}",
                 region=region, prompt_tokens=template + _tokens(rng, prompt_len),
                 output_len=output_len, output_tokens=_tokens(rng, output_len))
-            self.submit(req, lambda r: None)
+            self.submit(req)
             self.sim.after(rng.expovariate(max(1e-9, rate_fn(self.sim.now))),
                            arrive)
 

@@ -1,0 +1,23 @@
+"""`repro.frontend` — the one front door for every serving substrate.
+
+    from repro.frontend import Client, SimHost          # virtual time
+    from repro.frontend import RouterHost, EngineHost   # wall clock
+
+    client = Client(SimHost(system))        # or RouterHost(router), ...
+    handle = client.submit(GenRequest(...), region="us")
+    for ev in handle.stream():              # TokenEvent{rid, token, index, t}
+        ...
+    result = handle.result                  # terminal GenResult
+    handle.cancel()                         # from any non-terminal state
+
+Lifecycle: QUEUED -> PREFILL -> DECODE -> {FINISHED, CANCELLED, DEADLINE,
+ABORT}; per-request `GenRequest.deadline_s` / `slo_class` ride along.
+"""
+from repro.frontend.api import RequestHandle, RequestState, TokenEvent
+from repro.frontend.client import (Client, EngineHost, RouterHost, SimHost,
+                                   state_of, wire_gen_request)
+
+__all__ = [
+    "Client", "EngineHost", "RequestHandle", "RequestState", "RouterHost",
+    "SimHost", "TokenEvent", "state_of", "wire_gen_request",
+]

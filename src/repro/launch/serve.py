@@ -1,6 +1,9 @@
 """Serving launcher: run the paged continuous-batching engine on a reduced
 model with batched requests — single replica, or the full two-layer SkyLB
-router over several in-process replicas across simulated regions.
+router over several in-process replicas across simulated regions. Both
+modes drive the UNIFIED front API (`repro.frontend.Client`): submit returns
+a streaming `RequestHandle`, and the reported TTFT comes from each
+request's FIRST TokenEvent, not from the terminal result.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b-reduced \
@@ -18,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.frontend import Client, EngineHost, RequestState, RouterHost
 from repro.models import build_model
 from repro.routing import build_routing
 from repro.serving import (Engine, EngineConfig, GenRequest, InProcessRouter,
@@ -45,6 +49,21 @@ def make_requests(vocab: int, n: int, *, sessions: int = 6,
     return reqs
 
 
+def _drain_and_stats(client: Client, handles: list) -> dict:
+    t0 = time.time()
+    client.drain()
+    dt = time.time() - t0
+    done = [h for h in handles if h.state is RequestState.FINISHED]
+    out_toks = sum(len(h.result.output_tokens) for h in done)
+    # client-observed TTFT: submission -> first streamed TokenEvent
+    ttfts = [h.events[0].t - h.request.arrival_s for h in done
+             if h.events and h.request.arrival_s is not None]
+    return {"requests": len(done), "wall_s": round(dt, 2),
+            "tok_per_s": round(out_toks / dt, 1),
+            "ttft_p50_s": round(statistics.median(ttfts), 3) if ttfts
+            else None}
+
+
 def serve_single(arch: str, n_requests: int, max_new: int) -> dict:
     cfg = get_config(arch)
     model = build_model(cfg, jnp.float32)
@@ -52,17 +71,13 @@ def serve_single(arch: str, n_requests: int, max_new: int) -> dict:
     eng = Engine(cfg, params, EngineConfig(page_size=8, n_pages=256,
                                            max_batch=8, max_seq_len=1024,
                                            prefill_pad=32))
-    reqs = make_requests(cfg.vocab, n_requests, max_new=max_new)
-    t0 = time.time()
-    res = eng.generate(reqs)
-    dt = time.time() - t0
-    out_toks = sum(len(r.output_tokens) for r in res)
-    ttfts = [r.ttft_s for r in res if r.ttft_s is not None]
-    return {"requests": len(res), "wall_s": round(dt, 2),
-            "tok_per_s": round(out_toks / dt, 1),
-            "hit_rate": round(eng.hit_rate(), 3),
-            "ttft_p50_s": round(statistics.median(ttfts), 3),
-            "engine_steps": eng.steps}
+    client = Client(EngineHost(eng))
+    handles = [client.submit(r)
+               for r in make_requests(cfg.vocab, n_requests, max_new=max_new)]
+    out = _drain_and_stats(client, handles)
+    out.update({"hit_rate": round(eng.hit_rate(), 3),
+                "engine_steps": eng.steps})
+    return out
 
 
 def serve_multiregion(arch: str, n_requests: int, max_new: int,
@@ -79,22 +94,18 @@ def serve_multiregion(arch: str, n_requests: int, max_new: int,
                 cfg, params, EngineConfig(page_size=8, n_pages=128,
                                           max_batch=4, max_seq_len=1024,
                                           prefill_pad=32)))
+    client = Client(RouterHost(router))
     reqs = make_requests(cfg.vocab, n_requests, max_new=max_new)
     # skew arrivals: most load lands on 'us' (the diurnal-peak region)
-    t0 = time.time()
-    for i, req in enumerate(reqs):
-        region = "us" if i % 4 < 2 else REGIONS[i % 3]
-        router.submit(region, req)
-    router.run_until_idle()
-    dt = time.time() - t0
-    res = list(router.results().values())
-    out_toks = sum(len(r.output_tokens) for r in res)
-    fwd = {r: lb.forwarded_out for r, lb in router.lbs.items()}
-    hit = {r: {e: round(lb.engines[e].hit_rate(), 3) for e in lb.engines}
-           for r, lb in router.lbs.items()}
-    return {"requests": len(res), "wall_s": round(dt, 2),
-            "tok_per_s": round(out_toks / dt, 1),
-            "forwarded": fwd, "hit_rates": hit}
+    handles = [client.submit(req,
+                             region="us" if i % 4 < 2 else REGIONS[i % 3])
+               for i, req in enumerate(reqs)]
+    out = _drain_and_stats(client, handles)
+    out["forwarded"] = {r: lb.forwarded_out for r, lb in router.lbs.items()}
+    out["hit_rates"] = {
+        r: {e: round(lb.engines[e].hit_rate(), 3) for e in lb.engines}
+        for r, lb in router.lbs.items()}
+    return out
 
 
 def main():

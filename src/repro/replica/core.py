@@ -152,6 +152,11 @@ class ReplicaCore:
         self.radix = PagedRadix(self.alloc, cfg.page_size)
         self.pending: deque[Seq] = deque()
         self.running: list[Seq] = []
+        # host hook: called (seq, token, index) whenever a token is appended
+        # (prefill boundary or decode) — tokens are already host-resident at
+        # that point, so the hook adds ZERO device work; hosts buffer these
+        # and drain them once per step as TokenEvents
+        self.token_sink: Optional[callable] = None
         # stats
         self.steps = 0
         self.total_prefill_tokens = 0
@@ -159,6 +164,7 @@ class ReplicaCore:
         self.completions = 0
         self.rejections = 0
         self.preemptions = 0
+        self.cancellations = 0
         self.peak_running = 0
         self.peak_outstanding = 0
         self.peak_pages = 0
@@ -200,6 +206,38 @@ class ReplicaCore:
         prompt, max_new, priority = _describe(req)
         self.pending.append(Seq(req, prompt, max_new, priority))
         self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
+
+    # ------------------------------------------------------------ cancel
+    def cancel(self, rid) -> Optional[Seq]:
+        """Abandon an in-flight request: drop it from `pending` (queued, or
+        chunk-planned but not yet flushed) or reap it out of `running`
+        mid-decode, freeing its pages — the radix keeps its own refs on any
+        matched prefix, so allocator balance is exactly restored. Returns
+        the removed Seq (the host turns it into a CANCELLED/DEADLINE
+        result), or None if `rid` is not here. Recorded in the decision
+        stream: backends must agree on cancels like on admissions."""
+        for i, s in enumerate(self.pending):
+            if s.req.rid == rid:
+                del self.pending[i]
+                # the blocked-head memo may reference this seq (or the head
+                # behind it changed) — force a fresh admission attempt
+                self._blocked = None
+                self.cancellations += 1
+                self._record("cancel", rid)
+                return s
+        for s in self.running:
+            if s.req.rid == rid:
+                self.running.remove(s)
+                if self._prefill_q:
+                    self._prefill_q = [(q, c) for q, c in self._prefill_q
+                                       if q is not s]
+                self.alloc.free_all(s.pages)
+                s.pages = []
+                s.cached_pages = 0
+                self.cancellations += 1
+                self._record("cancel", rid)
+                return s
+        return None
 
     # ------------------------------------------------------------ helpers
     def _pages(self, n_tokens: int) -> int:
@@ -372,6 +410,8 @@ class ReplicaCore:
                 if smp and tok is not None:
                     seq.out.append(int(tok))
                     seq.tokens.append(int(tok))
+                    if self.token_sink is not None:
+                        self.token_sink(seq, int(tok), len(seq.out) - 1)
 
     # ------------------------------------------------------------ decode
     def finish_step(self) -> list[Seq]:
@@ -384,6 +424,8 @@ class ReplicaCore:
             for s, t in zip(batch, toks):
                 s.out.append(int(t))
                 s.tokens.append(int(t))
+                if self.token_sink is not None:
+                    self.token_sink(s, int(t), len(s.out) - 1)
         for s in self.running:
             s.new_this_step = False
         finished = [s for s in self.running if s.done()]

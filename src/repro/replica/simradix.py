@@ -1,0 +1,58 @@
+"""Token-level radix cache facade for analytic studies.
+
+The simulator's replica path does not use this — `ReplicaSim` runs the
+unified page-granular `repro.replica.radix.PagedRadix` (at page_size=1)
+inside the shared `ReplicaCore`. This class is a thin token-level facade
+over that same implementation for offline cache models (e.g. the Fig. 6
+hit-rate study) that want SGLang-RadixAttention semantics with a plain
+token-capacity budget and no external allocator. (Moved here from
+`repro.core.simradix`, which remains as a deprecated shim.)
+"""
+from __future__ import annotations
+
+from repro.replica.blocks import BlockAllocator
+from repro.replica.radix import PagedRadix
+
+
+class SimRadix:
+    def __init__(self, capacity_tokens: int):
+        self.capacity = capacity_tokens
+        self.alloc = BlockAllocator(capacity_tokens)
+        self._radix = PagedRadix(self.alloc, page_size=1)
+
+    @property
+    def size(self) -> int:
+        return self._radix.cached_pages
+
+    def match(self, tokens, now: float = 0.0) -> int:
+        """Length of the longest cached prefix; touches it (LRU). `now` is
+        accepted for backward compatibility — recency comes from the radix's
+        per-instance access clock."""
+        n, _ = self._radix.match(tuple(tokens))
+        return n
+
+    def insert(self, tokens, now: float = 0.0) -> int:
+        """Insert a sequence; returns tokens newly added. Evicts LRU entries
+        when the capacity budget would overflow (truncating the insert if
+        the sequence alone exceeds capacity)."""
+        tokens = tuple(tokens)
+        n_cached, matched = self._radix.match(tokens)
+        new = len(tokens) - n_cached
+        if new <= 0:
+            return 0
+        # pin the matched prefix so making room can't evict the very path
+        # this insert extends
+        self._radix.take_refs(matched)
+        short = new - self.alloc.free_pages
+        if short > 0:
+            self._radix.evict(short)
+        new = min(new, self.alloc.free_pages)      # truncate oversized tails
+        fresh = self.alloc.alloc(new)
+        added = self._radix.insert(tokens[:n_cached + new], matched + fresh)
+        self.alloc.free_all(fresh)                 # tree holds its own refs
+        self._radix.release_refs(matched)
+        return added
+
+    def evict(self, n_tokens: int) -> int:
+        """Evict ~n_tokens in LRU order; returns tokens actually removed."""
+        return self._radix.evict(n_tokens)

@@ -155,6 +155,22 @@ class RoutingCore:
         self.peak_queue = max(self.peak_queue, len(self.queue))
         self.try_dispatch()
 
+    # ---- cancellation
+    def cancel(self, rid):
+        """Pull a still-queued request out of the FCFS queue. Returns the
+        request (the host resolves it as cancelled) or None if it already
+        left this LB — dispatched to a replica, forwarded, released to a
+        thief, or on the WAN. For those, the host sets `req.cancelled` and
+        the next host to see the request resolves it exactly once (there is
+        ONE request object, so a cancel racing a steal can't double-fire)."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                if self.decisions is not None:
+                    self.decisions.append(("cancel", rid, self.id))
+                return req
+        return None
+
     def _local_views(self) -> list[TargetView]:
         return [v for v in self._replica_snap.values()
                 if self.transport.target_alive(v.id)]

@@ -1,23 +1,43 @@
 """Real JAX inference engine: paged KV cache, continuous batching via the
 shared backend-agnostic `repro.replica.ReplicaCore` (admission, radix
-prefix cache, chunked prefill, rejection, preemption) with a JAX paged
-backend, OpenAI-ish request types, and an in-process multi-replica router
-that runs the paper's policies against real engines. The scheduler's
-*pending queue* is exactly what SkyLB's SP-P probes (§3.3).
+prefix cache, chunked prefill, rejection, preemption, cancellation) with a
+JAX paged backend, OpenAI-ish request types, and an in-process
+multi-replica router that runs the paper's policies against real engines.
+The scheduler's *pending queue* is exactly what SkyLB's SP-P probes (§3.3).
 
-`BlockAllocator` / `PagedRadixCache` now live in `repro.replica`
-(re-exported here for compatibility).
+Request/response types import eagerly (they are dependency-light, so the
+simulator and `repro.frontend` can use them without pulling in JAX); the
+engine, backend, and router resolve lazily on first attribute access.
+`BlockAllocator` / `PagedRadixCache` live in `repro.replica` (re-exported
+here for compatibility).
 """
-from repro.serving.blocks import BlockAllocator
-from repro.serving.engine import Engine, EngineConfig
-from repro.serving.jax_backend import JaxPagedBackend
-from repro.serving.radix import PagedRadixCache
 from repro.serving.request import (FinishReason, GenRequest, GenResult,
                                    SamplingParams)
-from repro.serving.router import InProcessRouter
 
 __all__ = [
     "BlockAllocator", "Engine", "EngineConfig", "JaxPagedBackend",
     "PagedRadixCache", "FinishReason", "GenRequest", "GenResult",
     "SamplingParams", "InProcessRouter",
 ]
+
+_LAZY = {
+    "Engine": ("repro.serving.engine", "Engine"),
+    "EngineConfig": ("repro.serving.engine", "EngineConfig"),
+    "JaxPagedBackend": ("repro.serving.jax_backend", "JaxPagedBackend"),
+    "InProcessRouter": ("repro.serving.router", "InProcessRouter"),
+    # compatibility aliases for the pre-repro.replica names
+    "BlockAllocator": ("repro.replica.blocks", "BlockAllocator"),
+    "PagedRadixCache": ("repro.replica.radix", "PagedRadix"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value
+    return value

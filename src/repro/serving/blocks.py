@@ -3,6 +3,12 @@ backend-agnostic replica scheduler core); this path remains for existing
 imports."""
 from __future__ import annotations
 
-from repro.replica.blocks import BlockAllocator
+import warnings
+
+from repro.replica.blocks import BlockAllocator  # noqa: F401
+
+warnings.warn("repro.serving.blocks is deprecated; import BlockAllocator "
+              "from repro.replica.blocks instead", DeprecationWarning,
+              stacklevel=2)
 
 __all__ = ["BlockAllocator"]

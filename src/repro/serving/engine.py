@@ -22,7 +22,8 @@ from typing import Any
 from repro.configs.base import ModelConfig
 from repro.replica import ReplicaCore, ReplicaCoreConfig
 from repro.serving.jax_backend import JaxPagedBackend
-from repro.serving.request import FinishReason, GenRequest, GenResult
+from repro.serving.request import (FinishReason, GenRequest, GenResult,
+                                   cancel_finish_reason)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +65,12 @@ class Engine:
             reserved_pages=ecfg.scratch_pages), self.backend)
         self.backend.bind(self.core)
         self.results: dict[int, GenResult] = {}
+        # tokens the core appended this step; drained ONCE per step into
+        # `req.on_token` events. The tokens are already host-resident from
+        # the step's single device sync, so streaming adds zero dispatches.
+        self._tokbuf: list = []
+        self.core.token_sink = (
+            lambda seq, tok, idx: self._tokbuf.append((seq, tok, idx)))
 
     # ------------------------------------------------------------ probes
     def pending_count(self) -> int:
@@ -125,34 +132,97 @@ class Engine:
 
     # ------------------------------------------------------------ submit
     def submit(self, req: GenRequest) -> None:
+        if req.arrival_s is None:
+            # admission stamp from THIS transport's clock — never the
+            # dataclass-construction time
+            req.arrival_s = time.monotonic()
+        if req.cancelled is not None:
+            # a cancel raced the request here over the router's WAN:
+            # resolve it at arrival, exactly once
+            if req.rid not in self.results:
+                self._resolve(req, (), cancel_finish_reason(req.cancelled))
+            return
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            # expired at submit: immediate DEADLINE abort, nothing reaches
+            # the scheduler — no pages, no prefill, no batch slot
+            self._resolve(req, (), FinishReason.DEADLINE)
+            return
         self.core.submit(req)
+
+    # ------------------------------------------------------------ cancel
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Abandon an in-flight request: queued work is dropped, a running
+        sequence is reaped mid-decode (pages + radix pins freed; the device
+        batch-state slot is reclaimed at the next membership sync). No-op
+        (False) when `rid` already has a terminal result."""
+        if rid in self.results:
+            return False
+        seq = self.core.cancel(rid)
+        if seq is None:
+            return False
+        self._finish(seq, cancel_finish_reason(reason))
+        return True
+
+    def _sweep_deadlines(self, now: float) -> int:
+        expired = [s.req.rid for s in
+                   list(self.core.pending) + list(self.core.running)
+                   if s.req.deadline_s is not None
+                   and s.req.arrival_s is not None
+                   and now - s.req.arrival_s > s.req.deadline_s]
+        for rid in expired:
+            self.cancel(rid, "deadline")
+        return len(expired)
 
     # ------------------------------------------------------------ drive
     def step(self) -> int:
-        """One continuous-batching iteration: admit while possible (prefill
-        each admission), then one decode for the batch. Returns #sequences
-        terminally resolved this step (finished + rejected) — every one has
-        a GenResult in `results`."""
+        """One continuous-batching iteration: reap expired deadlines, admit
+        while possible (prefill each admission), then one decode for the
+        batch. Returns #sequences terminally resolved this step (finished +
+        rejected + deadline-aborted) — every one has a GenResult in
+        `results`. Token events (`req.on_token`) drain once per step."""
+        aborted = self._sweep_deadlines(time.monotonic())
         plan = self.core.begin_step()
+        for seq in plan.admitted:
+            if seq.req.on_admit is not None:
+                seq.req.on_admit(seq.req, time.monotonic())
         for seq in plan.rejected:
             self._finish(seq, FinishReason.ABORT)
         finished = self.core.finish_step()
+        self._drain_tokens()
         for seq in finished:
             why = (FinishReason.LENGTH if len(seq.out) >= seq.max_new
                    else FinishReason.STOP)
             self._finish(seq, why)
-        return len(finished) + len(plan.rejected)
+        return len(finished) + len(plan.rejected) + aborted
+
+    def _drain_tokens(self) -> None:
+        if not self._tokbuf:
+            return
+        buf, self._tokbuf = self._tokbuf, []
+        now = time.monotonic()
+        for seq, tok, idx in buf:
+            cb = seq.req.on_token
+            if cb is not None and seq.req.rid not in self.results:
+                cb(seq.req, tok, idx, now)
 
     def _finish(self, seq, why: FinishReason) -> None:
-        req = seq.req
+        self._resolve(seq.req, tuple(seq.out), why, error=seq.error)
+
+    def _resolve(self, req: GenRequest, out: tuple, why: FinishReason,
+                 error=None) -> None:
         req.finished_s = time.monotonic()
-        self.results[req.rid] = GenResult(
-            rid=req.rid, output_tokens=tuple(seq.out), finish_reason=why,
+        res = GenResult(
+            rid=req.rid, output_tokens=out, finish_reason=why,
             cached_tokens=req.cached_tokens, prompt_len=len(req.prompt_tokens),
             ttft_s=(req.first_token_s - req.arrival_s
-                    if req.first_token_s else None),
-            e2e_s=req.finished_s - req.arrival_s,
-            error=seq.error)
+                    if req.first_token_s is not None
+                    and req.arrival_s is not None else None),
+            e2e_s=(req.finished_s - req.arrival_s
+                   if req.arrival_s is not None else None),
+            error=error)
+        self.results[req.rid] = res
+        if req.on_done is not None:
+            req.on_done(res)
 
     def run_until_idle(self, max_steps: int = 100_000) -> dict[int, GenResult]:
         for _ in range(max_steps):

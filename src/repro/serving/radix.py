@@ -1,12 +1,16 @@
 """DEPRECATED shim: the page-granular radix prefix cache moved to
 `repro.replica.radix.PagedRadix` — one implementation now serves both the
 JAX paged engine (page_size = KV page) and the simulator (page_size = 1
-recovers the old token-level `SimRadix` semantics). The LRU stamp clock is
-per-instance there (the module-global clock this file used to hold made
-eviction stamps depend on unrelated engines created earlier in the same
-process). This alias remains for existing imports."""
+recovers the old token-level `SimRadix` semantics). This alias remains for
+existing imports."""
 from __future__ import annotations
 
-from repro.replica.radix import PagedRadix as PagedRadixCache
+import warnings
+
+from repro.replica.radix import PagedRadix as PagedRadixCache  # noqa: F401
+
+warnings.warn("repro.serving.radix is deprecated; import PagedRadix "
+              "from repro.replica.radix instead", DeprecationWarning,
+              stacklevel=2)
 
 __all__ = ["PagedRadixCache"]

@@ -1,20 +1,58 @@
 """Request/response types for the serving engine (OpenAI-completions-ish,
-token-level: the LB layer and the engine both speak token ids)."""
+token-level: the LB layer and the engine both speak token ids).
+
+These are also the types of the unified front API (`repro.frontend`): a
+`GenRequest` carries the full request lifecycle contract — per-request
+`deadline_s` (seconds after admission; expired requests abort with
+`FinishReason.DEADLINE`), an `slo_class` label, and the internal callback
+slots (`on_admit` / `on_token` / `on_done`) the hosts use to feed a
+`repro.frontend.RequestHandle` its token-event stream and terminal
+`GenResult`.
+"""
 from __future__ import annotations
 
 import dataclasses
 import enum
 import itertools
-import time
-from typing import Optional
+from typing import Callable, Optional
 
 _rid = itertools.count()
+
+
+def next_rid() -> int:
+    """The ONE process-wide request-id source. `GenRequest` draws from it
+    by default; the simulator's internal clients draw from it too, so a
+    frontend request and a sim-workload request can never collide in the
+    rid-keyed cancel/deadline registries."""
+    return next(_rid)
+
+
+# `GenRequest.slo_class` labels -> scheduling priority (higher may preempt
+# lower when the replica runs with preemption enabled). "standard" is 0 —
+# the same priority a request gets on the legacy surfaces — so entering
+# through the frontend Client never changes how default traffic schedules;
+# "batch" yields to it, "interactive" may preempt it. Unknown labels map
+# to the "standard" tier.
+SLO_CLASSES = {"batch": -1, "standard": 0, "interactive": 1}
+
+
+def slo_priority(slo_class: str) -> int:
+    return SLO_CLASSES.get(slo_class, SLO_CLASSES["standard"])
+
+
+def cancel_finish_reason(reason: str) -> "FinishReason":
+    """The FinishReason a travelling cancel flag ("cancelled"|"deadline")
+    resolves to — one mapping for every host."""
+    return (FinishReason.DEADLINE if reason == "deadline"
+            else FinishReason.CANCELLED)
 
 
 class FinishReason(str, enum.Enum):
     LENGTH = "length"
     STOP = "stop"
     ABORT = "abort"
+    CANCELLED = "cancelled"       # client called handle.cancel()
+    DEADLINE = "deadline"         # deadline_s expired before completion
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,15 +68,35 @@ class SamplingParams:
 class GenRequest:
     prompt_tokens: tuple
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
-    rid: int = dataclasses.field(default_factory=lambda: next(_rid))
+    rid: int = dataclasses.field(default_factory=next_rid)
     user_id: str = ""
     session_key: str = ""
     priority: int = 0                 # higher may preempt lower (replica core)
-    arrival_s: float = dataclasses.field(default_factory=time.monotonic)
+    # Lifecycle (the unified front API):
+    deadline_s: Optional[float] = None   # relative to admission; <= 0 at
+                                         # submit aborts before any dispatch
+    slo_class: str = "standard"
+    # stamped at SUBMIT time by the accepting transport's clock (wall for
+    # the engine/router, sim seconds for sim-driven requests) — never at
+    # dataclass construction, which measured the wrong thing on the wrong
+    # clock for sim requests
+    arrival_s: Optional[float] = None
+    # a cancel that raced the request onto the WAN travels as this flag
+    # ("cancelled" | "deadline"); the next host to see the request resolves
+    # it exactly once
+    cancelled: Optional[str] = None
     # filled by the engine:
     cached_tokens: int = 0
     first_token_s: Optional[float] = None
     finished_s: Optional[float] = None
+    # host -> frontend notification slots (set by repro.frontend / callers;
+    # excluded from equality so requests still compare by content)
+    on_admit: Optional[Callable] = dataclasses.field(
+        default=None, repr=False, compare=False)   # (req, t)
+    on_token: Optional[Callable] = dataclasses.field(
+        default=None, repr=False, compare=False)   # (req, token, index, t)
+    on_done: Optional[Callable] = dataclasses.field(
+        default=None, repr=False, compare=False)   # (GenResult)
 
 
 @dataclasses.dataclass

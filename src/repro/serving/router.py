@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 from collections import deque
 from typing import Callable, Optional
 
@@ -23,7 +24,8 @@ from repro.routing import (RoutingConfig, RoutingCore, RoutingSpec, SP_P,
                            LeastLoad, Policy, TargetView, build_routing)
 from repro.routing.failover import FailoverTracker
 from repro.serving.engine import Engine
-from repro.serving.request import GenRequest, GenResult
+from repro.serving.request import (GenRequest, GenResult,
+                                   cancel_finish_reason)
 
 
 class _TickTransport:
@@ -138,6 +140,10 @@ class InProcessRouter:
         self.tracker = FailoverTracker()
         self._spec: Optional[RoutingSpec] = None
         self.events: list[tuple[int, str]] = []
+        self._inflight: dict[int, GenRequest] = {}
+        # terminal results for requests that never reached an engine
+        # (cancelled / deadline-aborted while queued or on the WAN)
+        self._front_results: dict[int, GenResult] = {}
 
     @classmethod
     def from_spec(cls, spec: RoutingSpec | str,
@@ -194,6 +200,11 @@ class InProcessRouter:
 
     def _arrive(self, region: str, req: GenRequest) -> None:
         """A request reaches a region LB (forward, steal, or failover)."""
+        if req.cancelled is not None:
+            # cancel raced the request onto the WAN: resolve at arrival,
+            # exactly once (there is one request object; nobody queues it)
+            self._resolve_front(req, req.cancelled)
+            return
         lb = self.lbs.get(region)
         if lb is None or not lb.alive:
             lb = self._live_fallback() or lb
@@ -263,10 +274,74 @@ class InProcessRouter:
 
     # ------------------------------------------------------------ routing
     def submit(self, region: str, req: GenRequest) -> None:
+        if req.arrival_s is None:       # admission stamp, this clock
+            req.arrival_s = time.monotonic()
+        prev_done = req.on_done
+
+        def _done(res, _prev=prev_done, rid=req.rid):
+            self._inflight.pop(rid, None)
+            if _prev is not None:
+                _prev(res)
+        req.on_done = _done
+        self._inflight[req.rid] = req
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            # expired at submit: immediate DEADLINE abort, nothing reaches
+            # any LB queue or engine
+            self._resolve_front(req, "deadline")
+            return
         lb = self.lbs[region]
         if not lb.alive:
             lb = self._live_fallback() or lb
         lb.core.on_request(req)
+
+    # ------------------------------------------------------------ cancel
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Propagate a cancel to wherever the request is: an LB queue, an
+        engine (pending or mid-decode), or the WAN (forward/steal/failover
+        message in flight — the flag travels on the request and the next
+        host resolves it, so a cancel racing a steal resolves exactly
+        once). False when already terminal (cancel after finish: no-op)."""
+        req = self._inflight.get(rid)
+        if req is None or req.cancelled is not None:
+            return False
+        req.cancelled = reason
+        for lb in self.lbs.values():
+            got = lb.core.cancel(rid)
+            if got is not None:                 # still queued at this LB
+                self._resolve_front(got, reason)
+                return True
+        for lb in self.lbs.values():
+            for e in lb.engines.values():
+                if e.cancel(rid, reason):
+                    return True
+        return True     # on the WAN: resolved once, at the next arrival
+
+    def _resolve_front(self, req: GenRequest, reason: str) -> None:
+        """Terminal result for a request that never reached an engine."""
+        if req.rid in self._front_results:
+            return
+        now = time.monotonic()
+        res = GenResult(
+            rid=req.rid, output_tokens=(),
+            finish_reason=cancel_finish_reason(reason),
+            cached_tokens=0, prompt_len=len(req.prompt_tokens),
+            e2e_s=(now - req.arrival_s
+                   if req.arrival_s is not None else None))
+        self._front_results[req.rid] = res
+        if req.on_done is not None:
+            req.on_done(res)
+
+    def _sweep_deadlines(self) -> None:
+        """Reap LB-queued requests whose deadline expired (engine-side
+        expiry is swept by each Engine.step)."""
+        now = time.monotonic()
+        for lb in self.lbs.values():
+            expired = [r.rid for r in lb.core.queue
+                       if r.deadline_s is not None
+                       and r.arrival_s is not None
+                       and now - r.arrival_s > r.deadline_s]
+            for rid in expired:
+                self.cancel(rid, "deadline")
 
     # ------------------------------------------------------------ driving
     def step(self) -> int:
@@ -274,6 +349,7 @@ class InProcessRouter:
         heartbeats (which dispatch), run failover, then step every engine
         one continuous-batching iteration."""
         self._run_mail()
+        self._sweep_deadlines()
         if self.tick % self.probe_every == 0:
             for lb in self.lbs.values():
                 if lb.alive:
@@ -309,7 +385,7 @@ class InProcessRouter:
                     for lb in self.lbs.values()))
 
     def results(self) -> dict[int, GenResult]:
-        out: dict[int, GenResult] = {}
+        out: dict[int, GenResult] = dict(self._front_results)
         for lb in self.lbs.values():
             for e in lb.engines.values():
                 out.update(e.results)

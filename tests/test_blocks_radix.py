@@ -5,8 +5,8 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
-from repro.serving.blocks import BlockAllocator
-from repro.serving.radix import PagedRadixCache
+from repro.replica.blocks import BlockAllocator
+from repro.replica.radix import PagedRadix as PagedRadixCache
 
 
 def test_alloc_free_roundtrip():

@@ -1,0 +1,218 @@
+"""Cancellation edge cases across the stack: cancel while pending, cancel
+mid-generation after a chunked prefill (pages + radix pins freed, allocator
+balance restored), cancel racing a cross-region steal (resolves exactly
+once), cancel after finish (no-op), and deadline handling (already expired
+at submit -> immediate DEADLINE, nothing dispatched; expiry mid-run ->
+abort on the sim clock)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.simulator import ReplicaConfig, Request
+from repro.core.system import ServingSystem
+from repro.frontend.api import RequestState
+from repro.replica import CostModelBackend, ReplicaCore, ReplicaCoreConfig
+from repro.serving.request import FinishReason, GenRequest, SamplingParams
+
+RCFG = ReplicaConfig(kv_budget=8192)
+
+
+def _req(sys, rid, region="us", prompt_len=32, out_len=8, user="u", **kw):
+    return Request(rid=rid, user_id=user, session_key=f"{user}{rid}",
+                   region=region, prompt_tokens=tuple(range(prompt_len)),
+                   output_len=out_len, output_tokens=tuple(range(out_len)),
+                   **kw)
+
+
+def _gen(rid, prompt, max_new, **kw):
+    return GenRequest(prompt_tokens=tuple(prompt), rid=rid,
+                      sampling=SamplingParams(max_new_tokens=max_new), **kw)
+
+
+# ------------------------------------------------------------ core level
+
+def test_core_cancel_while_pending():
+    core = ReplicaCore(ReplicaCoreConfig(page_size=4, n_pages=32,
+                                         max_batch=1), CostModelBackend())
+    core.submit(_gen(0, range(8), 8))
+    core.submit(_gen(1, range(100, 108), 8))      # waits behind max_batch=1
+    core.begin_step()
+    assert len(core.pending) == 1
+    used_before = core.alloc.used_pages
+    seq = core.cancel(1)
+    assert seq is not None and not core.pending
+    assert core.alloc.used_pages == used_before   # pending held no pages
+    assert core.cancellations == 1
+    # the cancelled rid is gone for good: cancel again is a no-op
+    assert core.cancel(1) is None
+
+
+def test_core_cancel_mid_generation_restores_allocator_balance():
+    """Cancel a running sequence admitted through CHUNKED prefill over a
+    radix-cached prefix: its fresh pages free, its pins on the cached
+    prefix release (pages drop back to tree-only refs, i.e. evictable),
+    and the allocator balance is exactly what it was pre-admission."""
+    core = ReplicaCore(ReplicaCoreConfig(page_size=4, n_pages=64,
+                                         prefill_chunk=8),
+                       CostModelBackend())
+    # seed the radix: run a request to completion so its pages are cached
+    core.submit(_gen(0, range(16), 8))
+    while core.running or core.pending:
+        core.begin_step()
+        core.finish_step()
+    cached_pages = core.radix.cached_pages
+    assert cached_pages > 0
+    used_baseline = core.alloc.used_pages         # tree-only refs
+    # same 16-token prefix + a long disjoint tail -> chunked prefill
+    # (8-token chunks) over a radix hit that gets ref-pinned at admission
+    core.submit(_gen(1, tuple(range(16)) + tuple(range(200, 224)), 16))
+    core.begin_step()                              # admit + chunked prefill
+    seq = core.running[0]
+    assert seq.cached_pages > 0                    # pinned a cached prefix
+    pinned = seq.pages[:seq.cached_pages]
+    assert all(core.alloc.refcount(p) == 2 for p in pinned)  # tree + seq
+    core.finish_step()
+    core.begin_step()                              # a few decode steps
+    core.finish_step()
+    assert core.cancel(1) is not None
+    assert not core.running
+    # pins released: cached pages are tree-only again, fresh pages freed
+    assert all(core.alloc.refcount(p) == 1 for p in pinned)
+    assert core.alloc.used_pages == used_baseline
+    # no pin left anywhere: the whole cached chain can be evicted away
+    n = core.radix.cached_pages
+    assert core.radix.evict(n) == n
+    assert core.alloc.used_pages == 0
+
+
+def test_core_cancel_after_finish_noop():
+    core = ReplicaCore(ReplicaCoreConfig(page_size=4, n_pages=32),
+                       CostModelBackend())
+    core.submit(_gen(0, range(8), 4))
+    while core.running or core.pending:
+        core.begin_step()
+        core.finish_step()
+    assert core.completions == 1
+    assert core.cancel(0) is None
+    assert core.cancellations == 0
+
+
+# ------------------------------------------------------------ sim level
+
+def test_sim_cancel_mid_decode_resolves_and_frees():
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    done = []
+    h = sys.submit(_req(sys, 0, out_len=64), done.append)
+    sys.sim.after(0.5, lambda: sys.cancel(0))     # mid-decode by then
+    sys.run(until=30.0)
+    assert len(done) == 1 and done[0].finish_reason == "cancelled"
+    assert h.state is RequestState.CANCELLED
+    assert h.result.finish_reason is FinishReason.CANCELLED
+    # partial stream was delivered, then stopped
+    assert 0 < len(h.events) < 64
+    core = sys.replicas[0].core
+    assert not core.running and not core.pending
+    # every page the request held was freed (radix may keep cached pages)
+    assert core.alloc.used_pages == core.radix.cached_pages
+    s = sys.metrics.summary(sys.replicas)
+    assert s["cancelled"] == 1 and s["unresolved"] == 0
+    assert s["requests"] == 0                     # not counted as served
+
+
+def test_sim_cancel_while_queued_at_lb():
+    """With zero capacity the request never leaves the LB queue: cancel
+    must pull it out of the routing core directly."""
+    sys = ServingSystem(
+        "skylb", {"us": 1},
+        replica_cfg=ReplicaConfig(kv_budget=8192, max_batch=2))
+    # wedge the replica so the LB keeps the next request queued (SP-P:
+    # pending>0 -> not eligible)
+    for i in range(8):
+        sys.submit(_req(sys, i, out_len=512))
+    sys.run(until=0.2)
+    victim = _req(sys, 99, out_len=8)
+    done = []
+    h = sys.submit(victim, done.append)
+    sys.run(until=0.4)
+    lb = sys.lbs["lb-us"]
+    assert any(r.rid == 99 for r in lb.core.queue)
+    assert sys.cancel(99) is True
+    assert not any(r.rid == 99 for r in lb.core.queue)
+    sys.run(until=0.6)
+    assert len(done) == 1 and done[0].finish_reason == "cancelled"
+    assert h.state is RequestState.CANCELLED and h.events == []
+
+
+def test_sim_cancel_racing_steal_resolves_exactly_once():
+    """A cancel that lands while the request is on the WAN between the
+    steal release and the thief's arrival must resolve exactly once, at
+    arrival."""
+    sys = ServingSystem("steal", {"us": 1, "eu": 1}, replica_cfg=RCFG)
+    victim_lb, thief_lb = sys.lbs["lb-us"], sys.lbs["lb-eu"]
+    done = []
+    req = _req(sys, 0, out_len=8)
+    sys.submit(req, done.append)
+    # park the request in the victim LB's queue (bypass dispatch timing)
+    victim_lb.core.queue.append(req)
+    victim_lb.core.cfg.steal_threshold = 0
+    released = victim_lb.core.release_for_steal(1, thief_lb.id)
+    assert released == [req]                      # on the WAN now
+    sys.sim.after(0.07, lambda: thief_lb.on_request(req))
+    assert sys.cancel(0) is True                  # in nobody's queue: flag
+    assert sys.cancel(0) is False                 # second cancel: no-op
+    sys.run(until=5.0)
+    assert len(done) == 1                         # resolved exactly once
+    assert done[0].finish_reason == "cancelled"
+    assert not thief_lb.core.queue                # never (re)queued
+    assert all(r.completions == 0 for r in sys.replicas)
+
+
+def test_sim_cancel_after_finish_noop():
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    done = []
+    h = sys.submit(_req(sys, 0, out_len=4), done.append)
+    sys.run(until=30.0)
+    assert len(done) == 1 and done[0].finish_reason is None
+    assert h.state is RequestState.FINISHED
+    assert sys.cancel(0) is False                 # terminal: no-op
+    assert h.cancel() is False
+    assert len(done) == 1
+    s = sys.metrics.summary()
+    assert s["cancelled"] == 0 and s["requests"] == 1
+
+
+# ------------------------------------------------------------ deadlines
+
+def test_sim_deadline_expired_at_submit_dispatches_nothing():
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    done = []
+    h = sys.submit(_req(sys, 0, out_len=8, deadline_s=0.0), done.append)
+    sys.run(until=5.0)
+    assert h.state is RequestState.DEADLINE
+    assert h.result.finish_reason is FinishReason.DEADLINE
+    assert h.events == [] and h.result.output_tokens == ()
+    assert len(done) == 1 and done[0].finish_reason == "deadline"
+    # nothing was dispatched: no LB queue traffic, no replica work
+    assert sys.replicas[0].core.total_prefill_tokens == 0
+    assert sys.replicas[0].core.steps == 0
+    s = sys.metrics.summary()
+    assert s["deadline_aborted"] == 1 and s["unresolved"] == 0
+
+
+def test_sim_deadline_expires_mid_run_aborts_on_the_sim_clock():
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    done = []
+    # out_len=64 at ~30 tok/s needs ~2s; the 0.5 s deadline fires first
+    h = sys.submit(_req(sys, 0, out_len=64, deadline_s=0.5), done.append)
+    ok = []
+    sys.submit(_req(sys, 1, out_len=8), ok.append)  # no deadline: completes
+    sys.run(until=30.0)
+    assert h.state is RequestState.DEADLINE
+    assert done[0].finish_reason == "deadline"
+    assert done[0].finished == pytest.approx(0.5, abs=1e-6)
+    assert len(ok) == 1 and ok[0].finish_reason is None
+    s = sys.metrics.summary(sys.replicas)
+    assert s["deadline_aborted"] == 1 and s["requests"] == 1
+    assert s["unresolved"] == 0
+    # goodput counts only the request that met its deadline
+    assert s["goodput_tok_s"] == pytest.approx(8 / s["duration_s"])

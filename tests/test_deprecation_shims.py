@@ -1,0 +1,63 @@
+"""The deprecated shim modules must not import silently: each emits a
+DeprecationWarning naming the new home, while still re-exporting the exact
+same objects (identity, not copies)."""
+from __future__ import annotations
+
+import importlib
+import sys
+import warnings
+
+import pytest
+
+# shim module -> [(attr, canonical module holding the real object)]
+SHIMS = {
+    "repro.core.policies": [("PrefixTreePolicy", "repro.routing.policies"),
+                            ("LeastLoad", "repro.routing.policies"),
+                            ("eligible", "repro.routing.policies")],
+    "repro.core.hashring": [("HashRing", "repro.routing.hashring")],
+    "repro.core.prefixtree": [("PrefixTree", "repro.routing.prefixtree")],
+    "repro.core.cost": [("global_peak_cost", "repro.provision.cost"),
+                        ("replicas_needed", "repro.provision.cost")],
+    "repro.core.simradix": [("SimRadix", "repro.replica.simradix")],
+    "repro.serving.blocks": [("BlockAllocator", "repro.replica.blocks")],
+    "repro.serving.radix": [],          # aliased below (renamed on the move)
+}
+
+
+@pytest.mark.parametrize("shim_name", sorted(SHIMS))
+def test_shim_warns_on_import_and_reexports_identity(shim_name):
+    sys.modules.pop(shim_name, None)        # force a fresh import
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim = importlib.import_module(shim_name)
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, f"{shim_name} must warn exactly once on import"
+    assert "deprecated" in str(deps[0].message)
+    for attr, canonical in SHIMS[shim_name]:
+        real = getattr(importlib.import_module(canonical), attr)
+        assert getattr(shim, attr) is real, (shim_name, attr)
+
+
+def test_radix_shim_alias_identity():
+    sys.modules.pop("repro.serving.radix", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim = importlib.import_module("repro.serving.radix")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    from repro.replica.radix import PagedRadix
+    assert shim.PagedRadixCache is PagedRadix
+
+
+def test_repro_serving_package_is_shim_clean():
+    """`import repro.serving` (and its lazy attributes) must not route
+    through the deprecated shims — users get warnings only for THEIR
+    imports, never for the package's own."""
+    import repro.serving as srv
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert srv.BlockAllocator is not None
+        assert srv.PagedRadixCache is not None
+    from repro.replica.blocks import BlockAllocator
+    from repro.replica.radix import PagedRadix
+    assert srv.BlockAllocator is BlockAllocator
+    assert srv.PagedRadixCache is PagedRadix

@@ -1,0 +1,233 @@
+"""The unified front API (`repro.frontend`): one Client drives the
+simulator's virtual clock and the JAX engine/router wall clock with the
+same submit -> token stream -> result lifecycle, cancel, deadline, and
+slo_class semantics."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.simulator import ReplicaConfig
+from repro.core.system import ServingSystem
+from repro.frontend import (Client, EngineHost, RequestState, RouterHost,
+                            SimHost, TokenEvent)
+from repro.serving.request import (FinishReason, GenRequest, SamplingParams,
+                                   slo_priority)
+
+RCFG = ReplicaConfig(kv_budget=8192)
+
+
+def _sim_client(regions={"us": 1}):
+    return Client(SimHost(ServingSystem("skylb", dict(regions),
+                                        replica_cfg=RCFG)))
+
+
+def _gen(prompt_len=32, max_new=6, base=0, **kw):
+    return GenRequest(prompt_tokens=tuple(range(base, base + prompt_len)),
+                      sampling=SamplingParams(max_new_tokens=max_new), **kw)
+
+
+# ------------------------------------------------------------- sim clock
+
+def test_sim_stream_delivers_ordered_token_events():
+    client = _sim_client()
+    out = tuple(range(100, 106))
+    h = client.submit(_gen(max_new=6), region="us", output_tokens=out)
+    assert h.state is RequestState.QUEUED
+    events = list(h.stream())
+    assert [e.index for e in events] == list(range(6))
+    assert tuple(e.token for e in events) == out
+    assert all(isinstance(e, TokenEvent) and e.rid == h.rid for e in events)
+    # event times ride the sim clock, monotonically
+    assert all(a.t <= b.t for a, b in zip(events, events[1:]))
+    assert h.state is RequestState.FINISHED
+    assert h.result.finish_reason is FinishReason.LENGTH
+    assert h.result.output_tokens == out
+    assert h.result.ttft_s is not None and h.result.e2e_s is not None
+    # TTFT (client-observed) matches the first event's client-observed time
+    assert h.result.ttft_s == pytest.approx(events[0].t)
+
+
+def test_sim_streaming_is_incremental_not_terminal():
+    """Tokens must arrive DURING generation (the whole point of the
+    streaming API), not in one batch at completion."""
+    client = _sim_client()
+    h = client.submit(_gen(max_new=30), region="us")
+    seen_partial = False
+    for _ in range(200_000):
+        if not client.poll():
+            break
+        if 0 < len(h.events) < 30:
+            seen_partial = True
+    assert seen_partial and h.done
+
+
+def test_sim_cancel_via_handle():
+    client = _sim_client()
+    h = client.submit(_gen(max_new=64), region="us")
+    for ev in h.stream():
+        if ev.index >= 4:
+            assert h.cancel() is True
+            break
+    client.drain()
+    assert h.state is RequestState.CANCELLED
+    assert h.result.finish_reason is FinishReason.CANCELLED
+    assert 4 < len(h.events) < 64
+    assert h.cancel() is False                    # terminal: no-op
+
+
+def test_deadline_expired_at_submit_counts_but_never_dispatches():
+    client = _sim_client()
+    sys = client.host.system
+    h = client.submit(_gen(max_new=8, deadline_s=0.0), region="us")
+    h.wait()
+    assert h.done and h.state is RequestState.DEADLINE
+    assert h.result.finish_reason is FinishReason.DEADLINE
+    # counted exactly like the legacy ServingSystem.submit path...
+    assert sys.metrics.issued == 1
+    assert len(sys.metrics.deadline_aborted) == 1
+    # ...but dispatched nowhere: only heartbeats tick
+    sys.run(until=1.0)
+    assert sys.replicas[0].core.steps == 0
+    assert sys.replicas[0].core.total_prefill_tokens == 0
+    assert not sys.lbs["lb-us"].core.queue
+
+
+def test_slo_class_maps_to_priority():
+    client = _sim_client()
+    req = _gen(max_new=4, slo_class="interactive")
+    client.submit(req, region="us")
+    assert req.priority == slo_priority("interactive") == 1
+    # the full ladder applies: batch(-1) < standard(0) < interactive(1),
+    # with "standard" == the legacy surfaces' default priority 0 — the
+    # SAME request schedules identically via Client or Engine.generate
+    req2 = _gen(max_new=4, slo_class="batch", base=500)
+    client.submit(req2, region="us")
+    assert req2.priority == slo_priority("batch") == -1
+    req3 = _gen(max_new=4, base=900)              # default: standard
+    client.submit(req3, region="us")
+    assert req3.priority == slo_priority("standard") == 0
+    # an explicit priority wins over the class mapping
+    req4 = _gen(max_new=4, base=1300, slo_class="batch", priority=5)
+    client.submit(req4, region="us")
+    assert req4.priority == 5
+    client.drain()
+    assert not client.handles                     # all terminal
+
+
+def test_legacy_callback_shim_agrees_with_handle():
+    """ServingSystem.submit(req, done_cb) is a thin shim over the handle:
+    the callback still receives the raw sim Request, at the same sim event
+    the handle resolves."""
+    from repro.core.simulator import Request
+    sys = ServingSystem("skylb", {"us": 1}, replica_cfg=RCFG)
+    req = Request(rid=7, user_id="u", session_key="u7", region="us",
+                  prompt_tokens=tuple(range(24)), output_len=5,
+                  output_tokens=tuple(range(300, 305)))
+    done = []
+    h = sys.submit(req, done.append)
+    sys.run(until=30.0)
+    assert done == [req]                          # the raw sim Request
+    assert h.state is RequestState.FINISHED
+    assert h.result.output_tokens == tuple(range(300, 305))
+    assert h.result.e2e_s == pytest.approx(req.finished - req.issued)
+
+
+# ------------------------------------------------------------ wall clock
+
+def test_engine_host_stream_and_result(qwen_reduced, qwen_model_params):
+    from repro.serving import Engine, EngineConfig
+    _, params = qwen_model_params
+    eng = Engine(qwen_reduced, params,
+                 EngineConfig(page_size=8, n_pages=64, max_batch=4,
+                              max_seq_len=256, prefill_pad=16))
+    client = Client(EngineHost(eng))
+    h = client.submit(_gen(prompt_len=12, max_new=6))
+    events = list(h.stream())
+    assert [e.index for e in events] == list(range(6))
+    assert h.state is RequestState.FINISHED
+    assert h.result.finish_reason is FinishReason.LENGTH
+    assert h.result.output_tokens == h.tokens
+    # same engine, old blocking API: same tokens (stream changes nothing)
+    res = eng.generate([_gen(prompt_len=12, max_new=6)])
+    assert res[0].output_tokens == h.result.output_tokens
+
+
+def test_engine_host_cancel_mid_decode_frees_pages(qwen_reduced,
+                                                   qwen_model_params):
+    from repro.serving import Engine, EngineConfig
+    _, params = qwen_model_params
+    eng = Engine(qwen_reduced, params,
+                 EngineConfig(page_size=8, n_pages=64, max_batch=4,
+                              max_seq_len=256, prefill_pad=16))
+    client = Client(EngineHost(eng))
+    h = client.submit(_gen(prompt_len=12, max_new=30))
+    for _ in range(4):
+        client.poll()
+    assert 0 < len(h.events) < 30
+    assert h.cancel() is True
+    assert h.state is RequestState.CANCELLED      # engine cancels resolve
+    assert h.result.output_tokens == h.tokens     # synchronously
+    core = eng.core
+    assert not core.running and not core.pending
+    # only the reserved scratch page and radix-cached pages stay resident
+    assert core.alloc.used_pages == core.radix.cached_pages + 1
+    assert eng.results[h.rid].finish_reason is FinishReason.CANCELLED
+
+
+def test_engine_deadline_expired_at_submit(qwen_reduced, qwen_model_params):
+    from repro.serving import Engine, EngineConfig
+    _, params = qwen_model_params
+    eng = Engine(qwen_reduced, params,
+                 EngineConfig(page_size=8, n_pages=64, max_batch=4,
+                              max_seq_len=256, prefill_pad=16))
+    steps_before = eng.steps
+    client = Client(EngineHost(eng))
+    h = client.submit(_gen(prompt_len=12, max_new=6, deadline_s=-1.0))
+    assert h.done and h.state is RequestState.DEADLINE
+    assert not eng.pending and not eng.running    # nothing dispatched
+    assert eng.steps == steps_before
+
+
+def test_router_host_multiregion_stream(qwen_reduced, qwen_model_params):
+    from repro.serving import Engine, EngineConfig, InProcessRouter
+    _, params = qwen_model_params
+    router = InProcessRouter()
+    for region in ("us", "eu"):
+        lb = router.add_region(region)
+        lb.add_engine(f"{region}-e0", Engine(
+            qwen_reduced, params,
+            EngineConfig(page_size=8, n_pages=64, max_batch=4,
+                         max_seq_len=256, prefill_pad=16)))
+    client = Client(RouterHost(router))
+    handles = [client.submit(_gen(prompt_len=10 + i, max_new=4, base=31 * i),
+                             region=("us", "eu")[i % 2]) for i in range(4)]
+    client.drain()
+    assert all(h.state is RequestState.FINISHED for h in handles)
+    assert all(len(h.events) == 4 for h in handles)
+    assert all(h.result.output_tokens == h.tokens for h in handles)
+    # cancel after finish: no-op on the router path too
+    assert handles[0].cancel() is False
+    assert router.cancel(handles[0].rid) is False
+
+
+def test_router_host_cancel_queued(qwen_reduced, qwen_model_params):
+    from repro.serving import Engine, EngineConfig, InProcessRouter
+    _, params = qwen_model_params
+    router = InProcessRouter(cross_region=False)
+    lb = router.add_region("us")
+    lb.add_engine("us-e0", Engine(
+        qwen_reduced, params,
+        EngineConfig(page_size=8, n_pages=64, max_batch=2,
+                     max_seq_len=256, prefill_pad=16)))
+    client = Client(RouterHost(router))
+    # saturate the engine (max_batch=2) so the victim waits unadmitted
+    busy = [client.submit(_gen(prompt_len=16, max_new=25, base=17 * i))
+            for i in range(4)]
+    victim = client.submit(_gen(prompt_len=16, max_new=25, base=977))
+    client.poll()
+    assert victim.cancel() is True
+    client.drain()
+    assert victim.state is RequestState.CANCELLED
+    assert victim.events == []                    # cancelled before admission
+    assert all(h.state is RequestState.FINISHED for h in busy)
+    assert router.results()[victim.rid].finish_reason is FinishReason.CANCELLED

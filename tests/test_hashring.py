@@ -8,7 +8,7 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
-from repro.core.hashring import HashRing
+from repro.routing.hashring import HashRing
 
 TARGETS = [f"r{i}" for i in range(8)]
 

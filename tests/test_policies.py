@@ -3,10 +3,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
-                                 ConsistentHash, LeastLoad, PrefixTreePolicy,
-                                 RoundRobin, SGLangRouterLike, TargetView,
-                                 eligible, make_policy)
+from repro.routing.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
+                                    ConsistentHash, LeastLoad,
+                                    PrefixTreePolicy, RoundRobin,
+                                    SGLangRouterLike, TargetView,
+                                    eligible, make_policy)
 
 
 @dataclasses.dataclass

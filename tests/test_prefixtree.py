@@ -6,7 +6,7 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
-from repro.core.prefixtree import PrefixTree
+from repro.routing.prefixtree import PrefixTree
 
 
 def _brute_longest(records, tokens, avail):

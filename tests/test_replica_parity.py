@@ -30,7 +30,7 @@ N_STEPS = 120
 def _trace(vocab: int):
     """(step -> [(rid, prompt, max_new, priority)]): exercises preemption,
     cross-request prefix caching, eviction pressure, a fully-cached replay,
-    and an oversized rejection."""
+    an oversized rejection, and mid-flight cancellation (see CANCELS)."""
     rng = np.random.default_rng(7)
     tok = lambda n: tuple(int(t) for t in rng.integers(1, vocab, size=n))
     base = tok(16)                      # shared prefix for the cache block
@@ -38,13 +38,22 @@ def _trace(vocab: int):
     p0 = base + tok(8)
     p1 = base + tok(12)
     p3 = tok(30)                        # oversized: 130 tokens -> 17 pages
+    p40, p41 = tok(24), tok(24)         # cancellation block (disjoint)
+    p42 = tok(40)                       # needs 10 of 11 pages: waits pending
     return {
         0: [(20, p20, 32, 0)],
         1: [(21, p21, 16, 1)],          # higher priority -> preempts rid 20
         70: [(0, p0, 8, 0), (1, p1, 8, 0)],
         80: [(2, p0, 8, 0)],            # replay: fully-cached prompt rule
         82: [(3, p3, 100, 0)],          # can never fit -> rejected
+        100: [(40, p40, 16, 0), (41, p41, 16, 0)],
+        101: [(42, p42, 40, 0)],        # blocked behind 40/41: stays pending
     }
+
+
+# step -> rids cancelled before that step's begin_step: rid 42 while still
+# PENDING, rid 41 MID-DECODE (pages + radix pins freed on both backends)
+CANCELS = {102: [42], 104: [41]}
 
 
 def _drive(core: ReplicaCore, trace: dict) -> dict:
@@ -54,6 +63,8 @@ def _drive(core: ReplicaCore, trace: dict) -> dict:
             core.submit(GenRequest(
                 prompt_tokens=prompt, rid=rid, priority=prio,
                 sampling=SamplingParams(max_new_tokens=max_new)))
+        for rid in CANCELS.get(step, ()):
+            assert core.cancel(rid) is not None
         plan = core.begin_step()
         for seq in plan.admitted:
             cached[seq.req.rid] = seq.req.cached_tokens
@@ -75,22 +86,27 @@ def test_sim_engine_replica_parity(qwen_reduced, qwen_model_params):
     cached_jax = _drive(core_jax, trace)
 
     # identical decision streams: admission order, cached-token counts,
-    # evicted page ids, rejections, preemptions
+    # evicted page ids, rejections, preemptions, cancellations
     assert core_sim.decisions == core_jax.decisions
     assert cached_sim == cached_jax
 
     # the trace actually exercised every decision kind
     kinds = {e[0] for e in core_sim.decisions}
-    assert kinds == {"admit", "evict", "reject", "preempt"}
+    assert kinds == {"admit", "evict", "reject", "preempt", "cancel"}
     assert ("preempt", 20) in core_sim.decisions
     assert ("reject", 3) in core_sim.decisions
+    # rid 42 cancelled while pending (never admitted), rid 41 mid-decode
+    assert ("cancel", 42) in core_sim.decisions
+    assert ("cancel", 41) in core_sim.decisions
+    assert 42 not in cached_sim and 41 in cached_sim
     # replay request hit the cache but re-prefilled the final page
     assert cached_sim[2] == 16
 
     # both drained completely and agree on totals
     for core in (core_sim, core_jax):
         assert not core.running and not core.pending
-    assert core_sim.completions == core_jax.completions == 5
+    assert core_sim.completions == core_jax.completions == 6
     assert core_sim.rejections == core_jax.rejections == 1
     assert core_sim.preemptions == core_jax.preemptions == 1
+    assert core_sim.cancellations == core_jax.cancellations == 2
     assert core_sim.total_cached_tokens == core_jax.total_cached_tokens

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.policies import PrefixTreePolicy, make_policy
+from repro.routing import PrefixTreePolicy, make_policy
 from repro.serving import (Engine, EngineConfig, GenRequest, InProcessRouter,
                            SamplingParams)
 

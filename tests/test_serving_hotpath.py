@@ -120,7 +120,9 @@ def test_sample_fallback_matches_configs():
 def test_decode_compile_count_bounded(qwen_reduced, qwen_model_params):
     """A varied-length workload through the bucketed engine must keep the
     decode_step jit cache bounded by the bucket-pair count — the
-    recompile-free property the tentpole is about."""
+    recompile-free property the tentpole is about. Runs with per-token
+    STREAMING enabled on every request: emitting TokenEvents must not add
+    compile keys (or device dispatches) to the hot path."""
     _, params = qwen_model_params
     ecfg = EngineConfig(page_size=8, n_pages=64, max_batch=4,
                         max_seq_len=256, prefill_pad=16)
@@ -130,22 +132,32 @@ def test_decode_compile_count_bounded(qwen_reduced, qwen_model_params):
     specs = [(int(n), dict(max_new_tokens=int(m)))
              for n, m in zip(rng.integers(5, 60, size=10),
                              rng.integers(3, 12, size=10))]
-    eng.generate(_reqs(qwen_reduced.vocab, specs, seed=9))
+    reqs = _reqs(qwen_reduced.vocab, specs, seed=9)
+    streamed = []
+    for r in reqs:
+        r.on_token = lambda req, tok, idx, t: streamed.append((req.rid, tok))
+    res = eng.generate(reqs)
     grew = mr.compile_counts()["decode_step"] - before
     bound = n_buckets(ecfg.max_batch) * n_buckets(
         -(-ecfg.max_seq_len // ecfg.page_size))
     assert 0 < grew <= bound
+    # the stream delivered every token exactly once
+    assert len(streamed) == sum(len(r.output_tokens) for r in res)
 
 
 def test_steady_state_uploads_nothing(qwen_reduced, qwen_model_params):
     """While batch membership is stable, decode must reuse the persistent
-    device state: no _sync_slots re-upload between steps."""
+    device state: no _sync_slots re-upload between steps — with per-token
+    streaming enabled (the event drain rides the step's existing single
+    host sync; zero extra uploads or dispatches)."""
     _, params = qwen_model_params
     eng = Engine(qwen_reduced, params,
                  EngineConfig(page_size=8, n_pages=64, max_batch=4,
                               max_seq_len=256, prefill_pad=16))
+    events = []
     for r in _reqs(qwen_reduced.vocab, [(10, dict(max_new_tokens=20)),
                                         (14, dict(max_new_tokens=20))]):
+        r.on_token = lambda req, tok, idx, t: events.append((req.rid, idx))
         eng.submit(r)
     eng.step()                                  # admits both (prefill only)
     eng.step()                                  # first decode -> sync
@@ -162,6 +174,10 @@ def test_steady_state_uploads_nothing(qwen_reduced, qwen_model_params):
     assert syncs["n"] == 0                      # membership never changed
     eng.run_until_idle()
     assert eng.completions == 2
+    # streaming delivered all 40 tokens, in order, while uploading nothing
+    assert len(events) == 40
+    for rid in set(r for r, _ in events):
+        assert [i for r, i in events if r == rid] == list(range(20))
 
 
 # -------------------------------------------------------------- bucketing

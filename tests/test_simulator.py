@@ -2,7 +2,7 @@
 forwarding, controller failover, stragglers."""
 from __future__ import annotations
 
-from repro.core.policies import LeastLoad, PrefixTreePolicy
+from repro.routing import LeastLoad, PrefixTreePolicy
 from repro.core.simulator import (Controller, LBConfig, LoadBalancerSim,
                                   Network, ReplicaConfig, ReplicaSim, Request,
                                   Sim)

@@ -5,8 +5,9 @@ from __future__ import annotations
 
 import pytest
 
-from repro.core.cost import (autoscale_on_demand_cost, global_peak_cost,
-                             region_local_cost, replicas_needed)
+from repro.provision.cost import (autoscale_on_demand_cost,
+                                  global_peak_cost, region_local_cost,
+                                  replicas_needed)
 from repro.core.simulator import ReplicaConfig
 from repro.core.system import ServingSystem
 from repro.core.workloads import diurnal_series, multiturn, tot

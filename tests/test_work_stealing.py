@@ -2,7 +2,7 @@
 null-result regression (stealing must never DEGRADE the push-based system)."""
 from __future__ import annotations
 
-from repro.core.policies import LeastLoad
+from repro.routing import LeastLoad
 from repro.core.simulator import (LBConfig, LoadBalancerSim, Network,
                                   ReplicaConfig, ReplicaSim, Request, Sim)
 from repro.core.simulator import SP_P
