@@ -36,6 +36,11 @@ SUMMARY_KEYS = frozenset({
     # the kernel timings
     "decode_programs", "decode_program_bound", "decode_shapes_exact",
     "bounded_ok", "steps", "tokens",
+    # hierarchical-KV gate (fig6 host_tier sweep + kv_transfer sim):
+    # combined-vs-device hit rates, pages moved across regions, and the
+    # bytes-vs-recompute decision count are pure functions of the
+    # deterministic traces
+    "host_hit_rate", "pulled_pages", "pull_vs_push_decisions",
 })
 
 

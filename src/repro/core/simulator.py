@@ -119,6 +119,9 @@ class ReplicaConfig:
     max_seq_len: int = 0            # prompt+output token cap; 0 = unbounded
     prefill_chunk: int = 0          # tokens per prefill chunk; 0 = unchunked
     preemption: bool = False        # priority preemption (recompute on resume)
+    host_kv_budget: int = 0         # host-memory KV tier tokens; 0 = tier off
+    kv_page_bytes: float = 131072.0  # bytes per KV page (page_size=1: token)
+    host_copy_gbps: float = 20.0    # PCIe-class host<->device bandwidth
 
 
 class ReplicaSim:
@@ -140,7 +143,8 @@ class ReplicaSim:
         self.core = ReplicaCore(ReplicaCoreConfig(
             page_size=1, n_pages=cfg.kv_budget, max_batch=cfg.max_batch,
             max_seq_len=cfg.max_seq_len, prefill_chunk=cfg.prefill_chunk,
-            preemption=cfg.preemption), self.backend)
+            preemption=cfg.preemption,
+            host_pages=cfg.host_kv_budget), self.backend)
         self._stepping = False
         self.alive = True
         self.draining = False
@@ -282,7 +286,7 @@ class ReplicaSim:
             req.finished = now
             if req.done_cb:
                 req.done_cb(req)
-        if not self.core.running:
+        if not self.core.running and not self.core.loading:
             if self.core.pending:       # a rejection callback re-enqueued
                 self.sim.after(0.0, self._step)
             else:
@@ -311,7 +315,7 @@ class ReplicaSim:
             req.finished = now
             if req.done_cb:
                 req.done_cb(req)
-        if self.core.running or self.core.pending:
+        if self.core.running or self.core.pending or self.core.loading:
             self.sim.after(0.0, self._step)
         else:
             self._stepping = False
@@ -326,11 +330,13 @@ class Network:
         ("us", "eu"): 0.140, ("us", "asia"): 0.180, ("eu", "asia"): 0.200,
     }
 
-    def __init__(self, rtt: Optional[dict] = None, local_rtt: float = 0.004):
+    def __init__(self, rtt: Optional[dict] = None, local_rtt: float = 0.004,
+                 wan_gbps: float = 1.0):
         self.rtt = dict(self.DEFAULT_RTT)
         if rtt:
             self.rtt.update(rtt)
         self.local_rtt = local_rtt
+        self.wan_gbps = wan_gbps        # inter-region KV transfer bandwidth
         self._warned_pairs: set = set()
 
     def one_way(self, a: str, b: str) -> float:
@@ -346,6 +352,11 @@ class Network:
                     f"assuming 0.15 s RTT", stacklevel=2)
             return 0.15 / 2
         return self.rtt[key] / 2
+
+    def kv_transfer_s(self, a: str, b: str, nbytes: float) -> float:
+        """Latency of pulling `nbytes` of KV pages from region b to a: one
+        request/response round trip, then the payload at WAN bandwidth."""
+        return 2 * self.one_way(a, b) + nbytes / (self.wan_gbps * 1e9)
 
 
 # ------------------------------------------------------------------ LB
@@ -395,6 +406,36 @@ class _SimTransport:
         victim = self.lb.remote_lbs[peer_id]
         lat = self.lb.net.one_way(self.lb.region, victim.region)
         self.lb.sim.after(lat, lambda: victim.on_steal_request(self.lb, n))
+
+    def pull_pages(self, req: Request, peer_id: str, target_id: str,
+                   prefix_len: int, pull_tokens: int) -> None:
+        """Pull-prefix: after the WAN round trip + KV bytes at bandwidth,
+        install the prefix into the local replica's radix and deliver the
+        request there. The sim models the transferred pages by injecting
+        the token prefix directly (page_size=1: tokens are pages); the
+        replica's next admission then matches them as device-cached.
+        Optimistic in one way the real router is not: the peer's pages are
+        assumed still resident at arrival (its trie said so one remote
+        heartbeat ago)."""
+        peer = self.lb.remote_lbs[peer_id]
+        cost = self.lb.cfg.kv_params
+        bytes_per = (cost.kv_bytes_per_token if cost is not None
+                     else 131072.0)
+        lat = self.lb.net.kv_transfer_s(self.lb.region, peer.region,
+                                        pull_tokens * bytes_per)
+        prefix = tuple(req.prompt_tokens)[:prefix_len]
+
+        def _land() -> None:
+            r = self.lb.replicas.get(target_id)
+            if r is None or not r.alive:
+                # target died while the pages were on the WAN: requeue
+                self.lb.on_request(req)
+                return
+            if prefix:
+                r.core.inject_prefix(prefix)
+            r.enqueue(req)
+
+        self.lb.sim.after(lat, _land)
 
 
 class LoadBalancerSim:

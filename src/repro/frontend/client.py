@@ -167,7 +167,8 @@ class EngineHost:
         return self.engine.cancel(rid, reason)
 
     def pump(self) -> bool:
-        if not self.engine.pending and not self.engine.running:
+        if (not self.engine.pending and not self.engine.running
+                and not self.engine.loading):
             return False
         self.engine.step()
         return True

@@ -13,6 +13,8 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.page_copy import page_gather as _gather_pallas
+from repro.kernels.page_copy import page_scatter as _scatter_pallas
 from repro.kernels.paged_decode import paged_decode as _paged_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
@@ -45,6 +47,29 @@ def paged_decode(q, k_pages, v_pages, block_table, seq_lens):
         return _paged_pallas(q, k_pages, v_pages, block_table, seq_lens,
                              interpret=True)
     return ref.paged_decode_ref(q, k_pages, v_pages, block_table, seq_lens)
+
+
+def page_gather(k_pages, v_pages, ids):
+    """Pull pages `ids` out of the (L,P,page,K,hd) pools into dense
+    (N,L,page,K,hd) stacks (the demotion D2H staging layout)."""
+    if _on_tpu():
+        return _gather_pallas(k_pages, v_pages, ids)
+    if _force_interpret():
+        return _gather_pallas(k_pages, v_pages, ids, interpret=True)
+    return (ref.page_gather_ref(k_pages, ids),
+            ref.page_gather_ref(v_pages, ids))
+
+
+def page_scatter(k_pages, v_pages, k_stack, v_stack, ids):
+    """Write staged stacks back into the pools at page slots `ids`,
+    in place (aliased) on TPU."""
+    if _on_tpu():
+        return _scatter_pallas(k_pages, v_pages, k_stack, v_stack, ids)
+    if _force_interpret():
+        return _scatter_pallas(k_pages, v_pages, k_stack, v_stack, ids,
+                               interpret=True)
+    return (ref.page_scatter_ref(k_pages, k_stack, ids),
+            ref.page_scatter_ref(v_pages, v_stack, ids))
 
 
 def ssd_scan(x, dt, a, B_, C_, *, chunk: int = 128):

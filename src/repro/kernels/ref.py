@@ -81,3 +81,15 @@ def ssd_scan_ref(x, dt, a, B_, C_, *, chunk: int) -> jax.Array:
         step, h0, (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
                    jnp.moveaxis(Bh, 2, 0), jnp.moveaxis(Ch, 2, 0)))
     return jnp.moveaxis(ys, 0, 2)                         # (B,H,S,P)
+
+
+def page_gather_ref(pool, ids) -> jax.Array:
+    """pool: (L, P, page, K, hd); ids: (N,) int32 unique page slots.
+    Returns the dense page stack (N, L, page, K, hd)."""
+    return jnp.swapaxes(pool[:, ids], 0, 1)
+
+
+def page_scatter_ref(pool, staged, ids) -> jax.Array:
+    """Inverse of `page_gather_ref`: write `staged` (N, L, page, K, hd)
+    into the pool at page slots `ids` (unique). Returns the updated pool."""
+    return pool.at[:, ids].set(jnp.swapaxes(staged, 0, 1))

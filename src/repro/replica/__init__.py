@@ -8,9 +8,11 @@ from repro.replica.blocks import BlockAllocator
 from repro.replica.backends import CostModelBackend, CostParams
 from repro.replica.core import (ReplicaBackend, ReplicaCore,
                                 ReplicaCoreConfig, Seq, StepPlan)
+from repro.replica.hostpool import HostPool
 from repro.replica.radix import PagedRadix
 
 __all__ = [
-    "BlockAllocator", "CostModelBackend", "CostParams", "PagedRadix",
-    "ReplicaBackend", "ReplicaCore", "ReplicaCoreConfig", "Seq", "StepPlan",
+    "BlockAllocator", "CostModelBackend", "CostParams", "HostPool",
+    "PagedRadix", "ReplicaBackend", "ReplicaCore", "ReplicaCoreConfig",
+    "Seq", "StepPlan",
 ]

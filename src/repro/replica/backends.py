@@ -20,6 +20,8 @@ class CostParams:
     decode_base: float = 0.03       # s per iteration
     decode_per_seq: float = 0.0008  # s per running sequence
     speed_factor: float = 1.0       # >1 = straggler
+    kv_page_bytes: float = 131072.0  # bytes per KV page (host<->device copy)
+    host_copy_gbps: float = 20.0     # PCIe-class host<->device bandwidth
 
 # Stands in for a generated token the workload didn't predetermine. Fillers
 # flow into the radix cache on completion like any generated token would on
@@ -38,6 +40,9 @@ class CostModelBackend:
     def __init__(self, cost=None):
         self.cost = cost if cost is not None else CostParams()
         self._prefill_tokens = 0     # uncached tokens prefilled this step
+        self._copy_pages = 0         # host->device pages loading this step
+        self.demoted_pages = 0       # device->host demotions (D2H copies)
+        self.loaded_pages = 0        # completed load-backs (H2D copies)
 
     # ---- ReplicaBackend protocol
     def prefill(self, seq, start: int, end: int, sample: bool) -> Optional[int]:
@@ -53,15 +58,37 @@ class CostModelBackend:
     def decode(self, seqs) -> list:
         return [self._next_token(s) for s in seqs]
 
+    # ---- host-tier hooks (mirror JaxPagedBackend's async copy path)
+    def load_pages(self, seq, pairs) -> None:
+        """Host->device load dispatched for a LOADING admission; the copy's
+        analytic cost lands in this step's latency, overlapped with
+        decode."""
+        self._copy_pages += len(pairs)
+
+    def finish_load(self, seq) -> None:
+        self.loaded_pages += len(seq.host_plan)
+
+    def abort_load(self, seq) -> None:
+        pass                                    # nothing staged to drop
+
+    def on_demote(self, dev_page: int, host_page: int) -> None:
+        self.demoted_pages += 1                 # no bytes to snapshot
+
     # ---- cost model
     def step_cost(self, n_running: int) -> float:
         """Latency of the iteration just planned: prefill the admitted
-        suffixes + one decode for the running batch. Resets the prefill
-        accumulator."""
+        suffixes + one decode for the running batch, where the host->device
+        load-back OVERLAPS decode (async H2D staging on the real engine) —
+        the step takes max(decode, copy), not their sum. Resets the
+        accumulators."""
         c = self.cost
         t = self._prefill_tokens / c.prefill_tps
         self._prefill_tokens = 0
-        t += c.decode_base + c.decode_per_seq * n_running
+        decode_t = c.decode_base + c.decode_per_seq * n_running
+        copy_t = (self._copy_pages * float(getattr(c, "kv_page_bytes", 131072.0))
+                  / (float(getattr(c, "host_copy_gbps", 20.0)) * 1e9))
+        self._copy_pages = 0
+        t += max(decode_t, copy_t)
         return t * c.speed_factor
 
     @staticmethod

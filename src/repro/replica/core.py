@@ -81,6 +81,7 @@ class ReplicaCoreConfig:
                               # down to a page multiple); 0 = whole suffix
     preemption: bool = False  # higher-priority head may preempt running work
     reserved_pages: int = 0   # pinned at init (engine scratch pages)
+    host_pages: int = 0       # host-memory KV tier size; 0 = tier off
     record_decisions: bool = False  # ("admit"|"reject"|"evict"|"preempt", ..)
 
 
@@ -91,7 +92,7 @@ class Seq:
 
     __slots__ = ("req", "tokens", "pages", "cached_pages", "out",
                  "prompt_len", "max_new", "priority", "admit_index",
-                 "new_this_step", "preemptions", "error")
+                 "new_this_step", "preemptions", "error", "host_plan")
 
     def __init__(self, req, prompt: tuple, max_new: int, priority: int):
         self.req = req
@@ -106,6 +107,9 @@ class Seq:
         self.new_this_step = False
         self.preemptions = 0
         self.error: Optional[str] = None
+        # in-flight host->device load plan: (radix node, host page, target
+        # device page) triples; non-empty only while the seq is LOADING
+        self.host_plan: list = []
 
     @property
     def pos(self) -> int:
@@ -149,9 +153,21 @@ class ReplicaCore:
         self.alloc = BlockAllocator(cfg.n_pages)
         self.reserved: list[int] = (self.alloc.alloc(cfg.reserved_pages)
                                     if cfg.reserved_pages else [])
-        self.radix = PagedRadix(self.alloc, cfg.page_size)
+        self.radix = PagedRadix(self.alloc, cfg.page_size,
+                                host_pages=cfg.host_pages)
+        # demotion hook: backends that materialize KV snapshot the page D2H
+        # here (fires while the device page's contents are still intact)
+        demote_hook = getattr(backend, "on_demote", None)
+        if cfg.host_pages and demote_hook is not None:
+            self.radix.on_demote = demote_hook
         self.pending: deque[Seq] = deque()
         self.running: list[Seq] = []
+        # host-hit admissions whose device pages are still streaming in from
+        # the host tier (LOADING state): they hold batch slots and KV pages
+        # but run no compute until the load completes at the NEXT
+        # begin_step — one scheduler iteration of load latency, identical on
+        # every backend (the real copy overlaps the current step's decode)
+        self.loading: list[Seq] = []
         # host hook: called (seq, token, index) whenever a token is appended
         # (prefill boundary or decode) — tokens are already host-resident at
         # that point, so the hook adds ZERO device work; hosts buffer these
@@ -161,6 +177,8 @@ class ReplicaCore:
         self.steps = 0
         self.total_prefill_tokens = 0
         self.total_cached_tokens = 0
+        self.host_hit_tokens = 0
+        self.loaded_pages = 0
         self.completions = 0
         self.rejections = 0
         self.preemptions = 0
@@ -187,7 +205,7 @@ class ReplicaCore:
         return len(self.pending)
 
     def outstanding(self) -> int:
-        return len(self.pending) + len(self.running)
+        return len(self.pending) + len(self.running) + len(self.loading)
 
     def available(self) -> bool:
         """SP-P availability: no pending request (Alg. 1 line 5)."""
@@ -231,6 +249,23 @@ class ReplicaCore:
                 if self._prefill_q:
                     self._prefill_q = [(q, c) for q, c in self._prefill_q
                                        if q is not s]
+                self.alloc.free_all(s.pages)
+                s.pages = []
+                s.cached_pages = 0
+                self.cancellations += 1
+                self._record("cancel", rid)
+                return s
+        for s in self.loading:
+            if s.req.rid == rid:
+                # cancel racing the load-back: drop the staged copy, release
+                # the HOST pins (so demoted-then-orphaned pages can recycle)
+                # and the device pages — allocator balance exactly restored
+                self.loading.remove(s)
+                abort = getattr(self.backend, "abort_load", None)
+                if abort is not None:
+                    abort(s)
+                self.radix.unpin_host([hp for _, hp, _ in s.host_plan])
+                s.host_plan = []
                 self.alloc.free_all(s.pages)
                 s.pages = []
                 s.cached_pages = 0
@@ -296,8 +331,10 @@ class ReplicaCore:
         identical to sequential prefill."""
         admitted: list[Seq] = []
         rejected: list[Seq] = []
+        self._finish_loads(admitted)
         while self.pending:
-            if self.cfg.max_batch and len(self.running) >= self.cfg.max_batch:
+            if self.cfg.max_batch and (len(self.running) + len(self.loading)
+                                       >= self.cfg.max_batch):
                 break
             seq = self.pending[0]
             if self._blocked is not None:
@@ -314,18 +351,35 @@ class ReplicaCore:
                 self._record("reject", seq.req.rid)
                 rejected.append(seq)
                 continue
-            cached_len, cached_pages = self.radix.match(tuple(seq.tokens))
+            ps = self.cfg.page_size
+            if self.radix.host is not None:
+                cached_len, cached_pages, host_nodes = \
+                    self.radix.match_tiered(tuple(seq.tokens))
+            else:
+                cached_len, cached_pages = self.radix.match(tuple(seq.tokens))
+                host_nodes = []
             # never let the cache cover the WHOLE sequence — the last token
-            # must be (re)prefilled so prefill produces next-token logits
-            if cached_len >= len(seq.tokens):
-                drop = ((cached_len - len(seq.tokens))
-                        // self.cfg.page_size + 1)
-                cached_pages = cached_pages[:len(cached_pages) - drop]
-                cached_len = len(cached_pages) * self.cfg.page_size
+            # must be (re)prefilled so prefill produces next-token logits.
+            # Trim the HOST continuation from the end first (cheapest to
+            # give up: those pages would need a load-back anyway).
+            total_len = cached_len + len(host_nodes) * ps
+            if total_len >= len(seq.tokens):
+                drop = (total_len - len(seq.tokens)) // ps + 1
+                keep_host = max(0, len(host_nodes) - drop)
+                drop -= len(host_nodes) - keep_host
+                host_nodes = host_nodes[:keep_host]
+                if drop:
+                    cached_pages = cached_pages[:len(cached_pages) - drop]
+                    cached_len = len(cached_pages) * ps
+                total_len = cached_len + len(host_nodes) * ps
             need = self._pages(seq.final_len) - len(cached_pages)
             # hold refs on the matched prefix BEFORE evicting so eviction
-            # pressure can never free the pages this admission depends on
+            # pressure can never free the pages this admission depends on;
+            # same for the host continuation (pins block host-LRU eviction)
             self.radix.take_refs(cached_pages)
+            host_pins = [nd.host_page for nd in host_nodes]
+            if host_pins:
+                self.radix.pin_host(host_pins)
             short = need - self.alloc.free_pages
             if short > 0:
                 freed: list[int] = []
@@ -334,6 +388,8 @@ class ReplicaCore:
                     self._record("evict", p)
                 if got < short:
                     self.radix.release_refs(cached_pages)
+                    if host_pins:
+                        self.radix.unpin_host(host_pins)
                     # every already-admitted sequence must have its prefill
                     # tokens before a preemption decision (done() reads
                     # them; a queued victim's pages must not be freed with
@@ -345,8 +401,9 @@ class ReplicaCore:
                                      self.alloc.free_pages)
                     break                   # head waits for capacity
             self.pending.popleft()
-            seq.pages = list(cached_pages) + self.alloc.alloc(need)
-            seq.cached_pages = len(cached_pages)
+            fresh = self.alloc.alloc(need)
+            seq.pages = list(cached_pages) + fresh
+            seq.cached_pages = len(cached_pages) + len(host_nodes)
             resumed = seq.admit_index >= 0      # preempted earlier
             seq.admit_index = self._admit_counter
             self._admit_counter += 1
@@ -355,9 +412,23 @@ class ReplicaCore:
                 # re-prefills recompute overhead (its cost still lands in
                 # the backend), and the request keeps its first-admission
                 # cached_tokens
-                seq.req.cached_tokens = cached_len
+                seq.req.cached_tokens = total_len
                 self.total_prefill_tokens += len(seq.tokens)
-                self.total_cached_tokens += cached_len
+                self.total_cached_tokens += total_len
+                self.host_hit_tokens += len(host_nodes) * ps
+            if host_nodes:
+                # LOADING admission: the first len(host_nodes) fresh pages
+                # are the load-back targets; prefill waits for the copy
+                seq.host_plan = [(nd, nd.host_page, dp)
+                                 for nd, dp in zip(host_nodes, fresh)]
+                self.loading.append(seq)
+                self._record("admit", seq.req.rid, total_len)
+                self._record("hostload", seq.req.rid, len(host_nodes))
+                load = getattr(self.backend, "load_pages", None)
+                if load is not None:
+                    load(seq, [(hp, dp) for _, hp, dp in seq.host_plan])
+                self.loaded_pages += len(host_nodes)
+                continue
             self._prefill_q.append((seq, cached_len))
             seq.new_this_step = True
             self.running.append(seq)
@@ -369,6 +440,62 @@ class ReplicaCore:
         self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
         self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
         return StepPlan(admitted, rejected)
+
+    def _finish_loads(self, admitted: list) -> None:
+        """Complete last step's host->device loads: promote the radix nodes
+        onto the streamed-in device pages, release host pins, and move the
+        sequences into `running` with their prefill planned from the end of
+        the combined (device + promoted) prefix. They join THIS step's
+        `admitted` plan, so hosts stamp TTFT at their true first token."""
+        if not self.loading:
+            return
+        loads, self.loading = self.loading, []
+        fin = getattr(self.backend, "finish_load", None)
+        for seq in loads:
+            if fin is not None:
+                fin(seq)
+            for node, _hp, dp in seq.host_plan:
+                self.radix.promote(node, dp)
+            self.radix.unpin_host([hp for _, hp, _ in seq.host_plan])
+            seq.host_plan = []
+            self._prefill_q.append((seq, seq.cached_pages
+                                    * self.cfg.page_size))
+            seq.new_this_step = True
+            self.running.append(seq)
+            admitted.append(seq)
+
+    # --------------------------------------------------- KV prefix import
+    def inject_prefix(self, tokens: tuple) -> tuple[int, int, list[int]]:
+        """Install an externally-transferred KV prefix (cross-region
+        pull-prefix): claim device pages for the FULL-page prefix of
+        `tokens` not already device-cached and hand them to the radix.
+        Returns (n_tokens_installed, start_block, new_pages) — the caller
+        scatters the pulled KV bytes into `new_pages`, which cover token
+        blocks [start_block, start_block + len(new_pages)). Capacity-capped:
+        evicts for room but never preempts, installing what fits."""
+        ps = self.cfg.page_size
+        n = (len(tokens) // ps) * ps
+        if n == 0:
+            return 0, 0, []
+        toks = tuple(tokens[:n])
+        cached_len, cached_pages = self.radix.match(toks)
+        need = n // ps - len(cached_pages)
+        if need <= 0:
+            return cached_len, len(cached_pages), []
+        short = need - self.alloc.free_pages
+        if short > 0:
+            freed: list[int] = []
+            self.radix.evict(short, freed)
+            for p in freed:
+                self._record("evict", p)
+        take = min(need, self.alloc.free_pages)
+        if take <= 0:
+            return cached_len, len(cached_pages), []
+        n = (len(cached_pages) + take) * ps
+        new_pages = self.alloc.alloc(take)
+        self.radix.insert(tuple(tokens[:n]), list(cached_pages) + new_pages)
+        self.alloc.free_all(new_pages)       # the tree's refs survive
+        return n, len(cached_pages), new_pages
 
     def _chunks(self, seq: Seq, cached_len: int) -> list[tuple[int, int, bool]]:
         """Chunked prefill plan over the uncached suffix: page-aligned
@@ -442,4 +569,10 @@ class ReplicaCore:
         return finished
 
     def hit_rate(self) -> float:
+        """COMBINED (device + host) hit rate over served prompt tokens."""
         return self.total_cached_tokens / max(1, self.total_prefill_tokens)
+
+    def host_hit_rate(self) -> float:
+        """Fraction of served prompt tokens hit in the HOST tier only —
+        cache value that a device-only radix would have lost to eviction."""
+        return self.host_hit_tokens / max(1, self.total_prefill_tokens)

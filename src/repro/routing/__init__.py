@@ -8,6 +8,8 @@ from repro.routing.build import RoutingSpec, VARIANTS, build_routing
 from repro.routing.core import RoutingConfig, RoutingCore, Transport
 from repro.routing.failover import FailoverTracker
 from repro.routing.hashring import HashRing
+from repro.routing.kvtransfer import (KVTransferParams, PULL, PUSH,
+                                      RECOMPUTE, decide)
 from repro.routing.policies import (BP, SP_O, SP_P, BlendedScorePolicy,
                                     ConsistentHash, LeastLoad, Policy,
                                     PrefixTreePolicy, RoundRobin,
@@ -19,6 +21,7 @@ __all__ = [
     "RoutingSpec", "VARIANTS", "build_routing",
     "RoutingConfig", "RoutingCore", "Transport", "FailoverTracker",
     "HashRing", "PrefixTree",
+    "KVTransferParams", "PULL", "PUSH", "RECOMPUTE", "decide",
     "BP", "SP_O", "SP_P", "BlendedScorePolicy", "ConsistentHash",
     "LeastLoad", "Policy", "PrefixTreePolicy", "RoundRobin",
     "SGLangRouterLike", "TargetView", "eligible", "make_policy",

@@ -28,6 +28,8 @@ import dataclasses
 from collections import deque
 from typing import Optional, Protocol, Sequence, runtime_checkable
 
+from repro.routing.kvtransfer import (PULL, PUSH, RECOMPUTE, KVTransferParams,
+                                      decide)
 from repro.routing.policies import SP_P, Policy, TargetView, eligible
 
 
@@ -63,6 +65,15 @@ class Transport(Protocol):
         """Ask a peer LB to release up to n queued requests to us."""
         ...
 
+    def pull_pages(self, req, peer_id: str, target_id: str,
+                   prefix_len: int, pull_tokens: int) -> None:
+        """Fetch the KV for `req`'s first `prefix_len` prompt tokens from
+        `peer_id`'s region (only ~pull_tokens of them actually cross the
+        WAN — the rest are already local) and deliver `req` to local
+        `target_id` once the pages land (transport adds the WAN round trip
+        + bytes/bandwidth latency)."""
+        ...
+
 
 @dataclasses.dataclass
 class RoutingConfig:
@@ -87,8 +98,15 @@ class RoutingConfig:
     work_stealing: bool = False
     steal_threshold: int = 4        # only steal from queues deeper than this
     steal_batch: int = 2            # requests pulled per steal
-    # Record ("local"|"forward"|"steal", rid, target) tuples for parity
-    # tests / tracing. Off by default (unbounded list).
+    # BEYOND-PAPER cross-region KV-page transfer: on a strong remote prefix
+    # hit, weigh pulling the KV pages over the WAN (serve locally) against
+    # pushing the request (forward, the paper's only option) against plain
+    # local recompute, via repro.routing.kvtransfer.decide. Needs prefix-
+    # aware local AND remote policies (their tries estimate hit lengths).
+    kv_transfer: bool = False
+    kv_params: Optional[KVTransferParams] = None    # default params if None
+    # Record ("local"|"forward"|"steal"|"pull", rid, target) tuples for
+    # parity tests / tracing. Off by default (unbounded list).
     record_decisions: bool = False
 
 
@@ -113,6 +131,9 @@ class RoutingCore:
         self._sent_since_probe: dict[str, int] = {}
         self.forwarded_out = 0
         self.peak_queue = 0
+        # KV-transfer accounting (all zero with kv_transfer off)
+        self.kv_decisions = {PULL: 0, PUSH: 0, RECOMPUTE: 0}
+        self.pulled_tokens = 0
         self.decisions: Optional[list[tuple]] = (
             [] if self.cfg.record_decisions else None)
 
@@ -192,6 +213,16 @@ class RoutingCore:
                     # hashring) that still names a target removed between
                     # probes — never dispatch outside the eligible set
                     tid = locals_ok[0].id
+                act = self._kv_consult(req, locals_ok)
+                if act is not None:
+                    kind, peer, pull_spec = act
+                    self.queue.popleft()
+                    if kind == PULL:
+                        self._send_pull(req, peer, tid, *pull_spec)
+                    else:                           # PUSH on a remote hit
+                        self.kv_decisions[PUSH] += 1
+                        self._forward(req, peer)
+                    continue
                 self.queue.popleft()
                 self._send_local(req, tid)
                 continue
@@ -224,6 +255,59 @@ class RoutingCore:
                         self._forward(req, lbid)
                         continue
             break   # head-of-line waits for capacity
+
+    def _kv_consult(self, req, locals_ok) -> Optional[tuple]:
+        """Bytes-vs-recompute consult for the head request. Returns
+        (PULL, peer_id, pulled_tokens) or (PUSH, peer_id, 0) when moving KV
+        or the request beats local recompute; None to serve locally as
+        usual. Hit lengths come from the policies' PREFIX TRIES — the same
+        state both hosts replicate deterministically — never from clocks or
+        queue depths, so decisions are parity-safe."""
+        cfg = self.cfg
+        if not cfg.kv_transfer or getattr(req, "forwarded", False):
+            return None
+        ltree = getattr(self.policy, "tree", None)
+        rtree = getattr(self.remote_policy, "tree", None)
+        if ltree is None or rtree is None or not self._lb_snap:
+            return None
+        prompt = tuple(getattr(req, "prompt_tokens", ()) or ())
+        if not prompt:
+            return None
+        local_hit, _ = ltree.match(prompt, [v.id for v in locals_ok])
+        peers = [pid for pid, v in self._lb_snap.items()
+                 if v.n_replicas > 0 and self.transport.peer_alive(pid)]
+        remote_hit, peer = rtree.match(prompt, peers)
+        if peer is None or remote_hit <= local_hit:
+            return None
+        params = cfg.kv_params if cfg.kv_params is not None \
+            else KVTransferParams()
+        choice, costs = decide(len(prompt), local_hit, remote_hit, params)
+        if choice == PULL:
+            return PULL, peer, (remote_hit, int(costs["pulled_tokens"]))
+        if choice == PUSH:
+            return PUSH, peer, None
+        self.kv_decisions[RECOMPUTE] += 1
+        return None
+
+    def _send_pull(self, req, peer_id: str, tid: str, prefix_len: int,
+                   pull_tokens: int) -> None:
+        """Serve locally after pulling the prefix KV from `peer_id`'s
+        region: the transport replays the remote pages into `tid`'s replica
+        cache and delivers the request there after the WAN transfer."""
+        self.policy.on_routed(req, tid)     # the prefix now lives HERE
+        snap = self._replica_snap.get(tid)
+        if snap:
+            snap.pending += 1
+            snap.outstanding += 1
+            sent = self._sent_since_probe.get(tid, 0) + 1
+            self._sent_since_probe[tid] = sent
+            if sent >= self.cfg.max_inflight_per_probe:
+                snap.available = False
+        self.kv_decisions[PULL] += 1
+        self.pulled_tokens += pull_tokens
+        if self.decisions is not None:
+            self.decisions.append(("pull", req.rid, peer_id))
+        self.transport.pull_pages(req, peer_id, tid, prefix_len, pull_tokens)
 
     def _send_local(self, req, rid: str) -> None:
         self.policy.on_routed(req, rid)

@@ -19,6 +19,8 @@ import dataclasses
 import time
 from typing import Any
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.replica import ReplicaCore, ReplicaCoreConfig
 from repro.serving.jax_backend import JaxPagedBackend
@@ -36,6 +38,9 @@ class EngineConfig:
     scratch_pages: int = 1        # reserved ids for padding block tables
     prefill_chunk: int = 0        # max tokens per prefill call; 0 = whole suffix
     preemption: bool = False      # priority preemption (recompute on resume)
+    host_pages: int = 0           # host-memory KV tier pages; 0 = tier off
+    overlap_loads: bool = True    # async H2D load-back staging (False =
+                                  # block at dispatch; benchmark contrast)
     bucket_shapes: bool = True    # pow2 shape buckets (bounded jit cache);
                                   # False = exact shapes (compile churn)
     packed_prefill: bool = True   # admissions packed into one dispatch;
@@ -57,12 +62,14 @@ class Engine:
             model_cfg, params, n_pages=ecfg.n_pages, page_size=ecfg.page_size,
             prefill_pad=ecfg.prefill_pad, seed=seed,
             bucket_shapes=ecfg.bucket_shapes,
-            packed_prefill=ecfg.packed_prefill)
+            packed_prefill=ecfg.packed_prefill,
+            overlap_loads=ecfg.overlap_loads)
         self.core = ReplicaCore(ReplicaCoreConfig(
             page_size=ecfg.page_size, n_pages=ecfg.n_pages,
             max_batch=ecfg.max_batch, max_seq_len=ecfg.max_seq_len,
             prefill_chunk=ecfg.prefill_chunk, preemption=ecfg.preemption,
-            reserved_pages=ecfg.scratch_pages), self.backend)
+            reserved_pages=ecfg.scratch_pages,
+            host_pages=ecfg.host_pages), self.backend)
         self.backend.bind(self.core)
         self.results: dict[int, GenResult] = {}
         # tokens the core appended this step; drained ONCE per step into
@@ -101,6 +108,10 @@ class Engine:
     @property
     def running(self):
         return self.core.running
+
+    @property
+    def loading(self):
+        return self.core.loading
 
     @property
     def alloc(self):
@@ -165,7 +176,8 @@ class Engine:
 
     def _sweep_deadlines(self, now: float) -> int:
         expired = [s.req.rid for s in
-                   list(self.core.pending) + list(self.core.running)
+                   (list(self.core.pending) + list(self.core.running)
+                    + list(self.core.loading))
                    if s.req.deadline_s is not None
                    and s.req.arrival_s is not None
                    and now - s.req.arrival_s > s.req.deadline_s]
@@ -227,9 +239,30 @@ class Engine:
     def run_until_idle(self, max_steps: int = 100_000) -> dict[int, GenResult]:
         for _ in range(max_steps):
             self.step()
-            if not self.core.running and not self.core.pending:
+            if (not self.core.running and not self.core.pending
+                    and not self.core.loading):
                 break
         return self.results
+
+    # ------------------------------------------- cross-region KV transfer
+    def export_prefix(self, tokens: tuple):
+        """KV bytes for the longest device-cached full-page prefix of
+        `tokens`: (n_tokens, k_stack, v_stack) — the pull-prefix payload."""
+        n, pages = self.core.radix.match(tuple(tokens))
+        if not pages:
+            return 0, None, None
+        k_stack, v_stack = self.backend.export_pages(pages)
+        return n, k_stack, v_stack
+
+    def import_prefix(self, tokens: tuple, k_stack, v_stack) -> int:
+        """Install a pulled prefix: claim radix pages for the uncached
+        blocks of `tokens` and scatter the transferred KV into them.
+        Returns tokens now locally cached (capacity-capped)."""
+        n, start_block, new_pages = self.core.inject_prefix(tuple(tokens))
+        if new_pages:
+            rows = np.arange(start_block, start_block + len(new_pages))
+            self.backend.import_pages(new_pages, k_stack[rows], v_stack[rows])
+        return n
 
     def generate(self, reqs: list[GenRequest]) -> list[GenResult]:
         """Batched blocking API: submit all, run to completion, return in

@@ -41,8 +41,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.serving import model_runner as mr
 from repro.serving.bucketing import bucket, bucket_tokens
+
+
+@jax.jit
+def _gather_pages(k_pages, v_pages, ids):
+    return ops.page_gather(k_pages, v_pages, ids)
+
+
+@jax.jit
+def _scatter_pages(k_pages, v_pages, k_stack, v_stack, ids):
+    return ops.page_scatter(k_pages, v_pages, k_stack, v_stack, ids)
 
 
 class JaxPagedBackend:
@@ -55,18 +66,26 @@ class JaxPagedBackend:
     def __init__(self, model_cfg: ModelConfig, params: Any, *,
                  n_pages: int, page_size: int, prefill_pad: int = 64,
                  seed: int = 0, bucket_shapes: bool = True,
-                 packed_prefill: bool = True):
+                 packed_prefill: bool = True, overlap_loads: bool = True):
         self.cfg = model_cfg
         self.params = params
         self.page_size = page_size
         self.prefill_pad = prefill_pad
         self.bucket_shapes = bucket_shapes
         self.packed_prefill = packed_prefill
+        self.overlap_loads = overlap_loads
         kv_dtype = jax.tree.leaves(params)[0].dtype
         self.k_pages, self.v_pages = mr.init_kv_pool(
             model_cfg, n_pages, page_size, kv_dtype)
         self._base_key = jax.random.PRNGKey(seed)
         self._scratch: Optional[int] = None
+        # host KV tier (allocated at bind when the core enables it)
+        self._h_k: Optional[np.ndarray] = None
+        self._h_v: Optional[np.ndarray] = None
+        self._demote_q: list[tuple[int, int]] = []   # (dev_page, host_page)
+        self._staging: dict = {}                     # seq -> staged H2D copy
+        self.demoted_pages = 0
+        self.loaded_pages = 0
 
     def bind(self, core) -> None:
         if not core.reserved:
@@ -94,6 +113,93 @@ class JaxPagedBackend:
         self._dstate: Optional[dict] = None
         self._nb = 0
         self._npgb = 0
+        if ccfg.host_pages:
+            shp = (ccfg.host_pages,) + self.k_pages.shape[:1] \
+                + self.k_pages.shape[2:]             # (H, L, page, K, hd)
+            self._h_k = np.zeros(shp, self.k_pages.dtype)
+            self._h_v = np.zeros(shp, self.k_pages.dtype)
+
+    # --------------------------------------------------------- host tier
+    def on_demote(self, dev_page: int, host_page: int) -> None:
+        """Radix demotion hook: queue the D2H snapshot. The gather runs
+        lazily at the next dispatch boundary — the pool still holds the
+        page's KV then, because freed pages are only REWRITTEN by a later
+        prefill/scatter dispatch, and every such dispatch flushes first."""
+        self._demote_q.append((dev_page, host_page))
+
+    def _flush_demotes(self) -> None:
+        if not self._demote_q:
+            return
+        q, self._demote_q = self._demote_q, []
+        n = len(q)
+        pad = self._pow2_pad(n)
+        ids = np.fromiter((d for d, _ in q), np.int32, n)
+        ids = np.concatenate([ids, np.zeros(pad - n, np.int32)])
+        ks, vs = _gather_pages(self.k_pages, self.v_pages, jnp.asarray(ids))
+        kh, vh = np.asarray(ks), np.asarray(vs)      # one sync per flush
+        for i, (_, hp) in enumerate(q):
+            self._h_k[hp] = kh[i]
+            self._h_v[hp] = vh[i]
+        self.demoted_pages += n
+
+    def load_pages(self, seq, pairs) -> None:
+        """Dispatch the host->device copy for a LOADING admission: the
+        staged stacks start their H2D transfer NOW (jax.device_put is
+        async) and land in the pool at `finish_load` — the transfer
+        overlaps this step's decode. Per-seq staging entries double-buffer
+        concurrent loads."""
+        self._flush_demotes()
+        dev_ids = [dp for _, dp in pairs]
+        k_stack = np.stack([self._h_k[hp] for hp, _ in pairs])
+        v_stack = np.stack([self._h_v[hp] for hp, _ in pairs])
+        k_dev = jax.device_put(k_stack)
+        v_dev = jax.device_put(v_stack)
+        if not self.overlap_loads:                   # serialize (benchmarks)
+            jax.block_until_ready((k_dev, v_dev))
+        self._staging[seq] = (dev_ids, k_dev, v_dev)
+
+    def finish_load(self, seq) -> None:
+        self._flush_demotes()
+        dev_ids, k_dev, v_dev = self._staging.pop(seq)
+        n = len(dev_ids)
+        pad = self._pow2_pad(n)
+        # pad with the scratch page: its contents are never read back
+        ids = np.asarray(dev_ids + [self._scratch] * (pad - n), np.int32)
+        if pad > n:
+            reps = np.zeros(pad, np.int32)
+            reps[:n] = np.arange(n)
+            k_dev, v_dev = k_dev[reps], v_dev[reps]
+        self.k_pages, self.v_pages = _scatter_pages(
+            self.k_pages, self.v_pages, k_dev, v_dev, jnp.asarray(ids))
+        self.loaded_pages += n
+
+    def abort_load(self, seq) -> None:
+        self._staging.pop(seq, None)
+
+    # ------------------------------------------- cross-engine KV transfer
+    def export_pages(self, pages: list) -> tuple:
+        """Pull the KV of `pages` (device page ids) into host numpy stacks
+        (N, L, page, K, hd) — the wire format of cross-region pull-prefix."""
+        self._flush_demotes()
+        n = len(pages)
+        pad = self._pow2_pad(n)
+        ids = np.asarray(list(pages) + [0] * (pad - n), np.int32)
+        ks, vs = _gather_pages(self.k_pages, self.v_pages, jnp.asarray(ids))
+        return np.asarray(ks)[:n], np.asarray(vs)[:n]
+
+    def import_pages(self, pages: list, k_stack, v_stack) -> None:
+        """Write transferred KV stacks into local device `pages`."""
+        self._flush_demotes()
+        n = len(pages)
+        pad = self._pow2_pad(n)
+        ids = np.asarray(list(pages) + [self._scratch] * (pad - n), np.int32)
+        if pad > n:
+            reps = np.zeros(pad, np.int32)
+            reps[:n] = np.arange(n)
+            k_stack, v_stack = k_stack[reps], v_stack[reps]
+        self.k_pages, self.v_pages = _scatter_pages(
+            self.k_pages, self.v_pages, jnp.asarray(k_stack),
+            jnp.asarray(v_stack), jnp.asarray(ids))
 
     # ------------------------------------------------------------ prefill
     def _sample_pref(self, logits, seq, pos: int):
@@ -111,6 +217,7 @@ class JaxPagedBackend:
     def prefill(self, seq, start: int, end: int, sample: bool) -> Optional[int]:
         """One-request fallback (`packed_prefill=False`); the packed path
         below is the default."""
+        self._flush_demotes()
         ps = self.page_size
         suffix = seq.tokens[start:end]
         S = self._token_pad(len(suffix))
@@ -144,6 +251,7 @@ class JaxPagedBackend:
         items: [(seq, start, end, sample)] with page-aligned starts."""
         if not self.packed_prefill:
             return [self.prefill(seq, s, e, smp) for seq, s, e, smp in items]
+        self._flush_demotes()
         ps = self.page_size
         nseg = len(items)
         seg_lens = [end - start for _, start, end, _ in items]
@@ -210,6 +318,7 @@ class JaxPagedBackend:
 
     # ------------------------------------------------------------ decode
     def decode(self, seqs) -> list[int]:
+        self._flush_demotes()
         n = len(seqs)
         if not self._slots_current(seqs):
             self._sync_slots(seqs)

@@ -55,6 +55,37 @@ class _TickTransport:
         self.router._after(self.router.wan_delay_ticks,
                            lambda: self.router._arrive(peer_id, req))
 
+    def pull_pages(self, req: GenRequest, peer_id: str, target_id: str,
+                   prefix_len: int, pull_tokens: int) -> None:
+        """Pull-prefix: after a full WAN round trip (request out, KV pages
+        back) the peer's best cached prefix lands in `target_id`'s paged KV
+        pool via export_prefix/import_prefix — REAL bytes move between real
+        engines — then the request starts locally over the warmed cache."""
+        del pull_tokens     # tick transport: latency is ticks, not bytes
+        prefix = tuple(req.prompt_tokens)[:prefix_len]
+
+        def _xfer():
+            eng = self.lb.engines.get(target_id)
+            if eng is None:                   # engine moved by failover
+                home = self.router._engine_home.get(target_id)
+                if home is not None:
+                    eng = home.engines.get(target_id)
+            if eng is None:                   # target gone: route again
+                self.router._arrive(self.lb.region, req)
+                return
+            peer = self.router.lbs.get(peer_id)
+            if peer is not None and peer.alive:
+                best = None
+                for pe in peer.engines.values():
+                    n, ks, vs = pe.export_prefix(prefix)
+                    if n and (best is None or n > best[0]):
+                        best = (n, ks, vs)
+                if best is not None:
+                    eng.import_prefix(prefix[:best[0]], best[1], best[2])
+            eng.submit(req)
+
+        self.router._after(2 * self.router.wan_delay_ticks, _xfer)
+
     def steal_request(self, peer_id: str, n: int) -> None:
         self.router._after(
             self.router.wan_delay_ticks,
@@ -380,7 +411,7 @@ class InProcessRouter:
     def idle(self) -> bool:
         return (not self._mail
                 and all(not lb.queue and all(
-                    not e.pending and not e.running
+                    not e.pending and not e.running and not e.loading
                     for e in lb.engines.values())
                     for lb in self.lbs.values()))
 
