@@ -25,6 +25,11 @@ def _vmem_paged(page, H, K, hd):
     return (H * hd + 2 * page * K * hd) * 2 + (2 * H + H * hd) * 4
 
 
+def _vmem_verify(page, H, Q, K, hd):
+    # q tile folded to (K, G*Q, hd) + k/v page tiles + scratch (m, l, acc)
+    return (H * Q * hd + 2 * page * K * hd) * 2 + (2 * H * Q + H * Q * hd) * 4
+
+
 def _vmem_ssd(Q, P, N):
     return (Q * P + Q + 2 * Q * N) * 4 + (P * N) * 4 + (Q * Q) * 4
 
@@ -72,6 +77,27 @@ def run() -> list[dict]:
             "lane_aligned": 128 % 128 == 0,
             "grid": f"(B,{(npg*page)//pg})",
             "ref_us_cpu": round(us, 1)})
+
+    # paged verify (speculative decoding: Q = k_spec + 1 queries per seq)
+    from repro.kernels.paged_verify import paged_verify
+    from repro.kernels.ref import paged_verify_ref
+    for Q in (2, 4):
+        qv = jnp.asarray(rng.normal(size=(B, Q, H, hd)), jnp.float32)
+        # ragged lens INCLUDING the Q candidate positions
+        lnv = jnp.asarray(rng.integers(Q, npg * page + 1, size=(B,)),
+                          jnp.int32)
+        oracle = paged_verify_ref(qv, kp, vp, bt, lnv)
+        got = paged_verify(qv, kp, vp, bt, lnv, interpret=True)
+        err = float(jnp.max(jnp.abs(got - oracle)))
+        us = _timeit(jax.jit(paged_verify_ref), qv, kp, vp, bt, lnv)
+        rows.append({
+            "kernel": "paged_verify", "tile": f"q{Q}xpage{page}",
+            "vmem_kb": round(_vmem_verify(page, H, Q, K, hd) / 1024, 1),
+            "lane_aligned": hd % 128 == 0,
+            "grid": f"(B,{npg})",
+            "ref_us_cpu": round(us, 1),
+            # CI-gated: interpret-mode Pallas vs jnp oracle agreement
+            "verify_ok": 1.0 if err < 2e-5 else 0.0})
 
     # ssd chunks
     from repro.kernels.ref import ssd_scan_ref

@@ -41,6 +41,12 @@ SUMMARY_KEYS = frozenset({
     # bytes-vs-recompute decision count are pure functions of the
     # deterministic traces
     "host_hit_rate", "pulled_pages", "pull_vs_push_decisions",
+    # speculative decoding gate: emitted tokens per seq per fused dispatch,
+    # the synthetic-coin acceptance rate, drafter==target byte-identity,
+    # and the kernel sweep's interpret-vs-oracle paged_verify agreement —
+    # all deterministic (threefry PRNG, fixed seeds)
+    "spec_tokens_per_dispatch", "acceptance_rate", "exact_match_ok",
+    "verify_ok",
 })
 
 

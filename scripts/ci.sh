@@ -12,17 +12,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "=== tier-1: pytest ==="
-# test_training / test_moe_ep / test_compress fail in this container from
-# a pre-existing JAX-version incompatibility (present since the seed
-# commit; see README) — deselect them so the gate is green on a good tree
-# and the smoke sweep below actually runs. Drop the ignores once the
-# environment ships a compatible JAX. (test_kernels is back in the gate:
-# the Pallas CompilerParams spelling is now version-compatible, so the
-# interpret-mode kernel sweeps run everywhere.)
-python -m pytest -x -q \
-    --ignore=tests/test_training.py \
-    --ignore=tests/test_moe_ep.py \
-    --ignore=tests/test_compress.py
+# the whole suite runs: the jax-version incompatibilities that used to
+# force deselecting test_training / test_moe_ep / test_compress are
+# shimmed (axis_size -> psum(1), AxisType gated, shard_map fallback)
+python -m pytest -x -q
 
 echo "=== examples smoke (front API) ==="
 # the examples ARE the front-API contract users copy from: run them (fast

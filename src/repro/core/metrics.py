@@ -25,6 +25,11 @@ class RunMetrics:
     issued: int = 0
     t_start: float = 0.0
     t_end: float = 0.0
+    # hedged dispatch (latency-class duplication; repro.routing.hedging)
+    hedged: int = 0            # requests duplicated to a second region
+    hedge_wins: int = 0        # races the CLONE won (hedge paid off)
+    wasted_work_tok: int = 0   # loser-leg compute, in tokens: uncached
+                               # prefill + decoded-then-suppressed tokens
     # measured provisioning dollars (repro.provision.CostMeter.summary),
     # set by FleetController.finalize() on elastic-fleet runs
     cost: Optional[dict] = None
@@ -91,6 +96,9 @@ class RunMetrics:
             "rejected": len(self.rejected),
             "cancelled": len(self.cancelled),
             "deadline_aborted": len(self.deadline_aborted),
+            "hedged": self.hedged,
+            "hedge_wins": self.hedge_wins,
+            "wasted_work_tok": self.wasted_work_tok,
             "issued": self.issued,
             # issued but not terminally resolved by t_end: in-flight at the
             # horizon on a healthy run; DROPPED work if a drill expected

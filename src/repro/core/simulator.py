@@ -122,6 +122,11 @@ class ReplicaConfig:
     host_kv_budget: int = 0         # host-memory KV tier tokens; 0 = tier off
     kv_page_bytes: float = 131072.0  # bytes per KV page (page_size=1: token)
     host_copy_gbps: float = 20.0    # PCIe-class host<->device bandwidth
+    # Speculative decoding (draft-k/verify-1), mirrored analytically by
+    # CostModelBackend.decode_many; spec_k = 0 keeps the plain decode path.
+    spec_k: int = 0                 # drafted tokens per decode iteration
+    spec_accept_rate: float = 1.0   # per-draft acceptance probability
+    spec_draft_cost: float = 0.15   # drafter fwd cost as fraction of target
 
 
 class ReplicaSim:
@@ -365,6 +370,10 @@ class Network:
 # old name stays as an alias for existing callers/tests.
 LBConfig = RoutingConfig
 
+# hedge clones get rids from a range no workload generator uses, so a
+# clone's cancel can never pull someone else's request out of a queue
+_HEDGE_RID = itertools.count(1_000_000_000)
+
 
 class _SimTransport:
     """WAN transport for RoutingCore: one-way latencies from `Network`,
@@ -436,6 +445,114 @@ class _SimTransport:
             r.enqueue(req)
 
         self.lb.sim.after(lat, _land)
+
+    # ---- hedged dispatch (tail-TTFT insurance for the `latency` class)
+    def hedge(self, req: Request, peer_id: str) -> None:
+        """Duplicate `req` to a second region: a clone (fresh rid, no
+        deadline, marked forwarded so it can't re-forward) races the
+        primary, FIRST TOKEN WINS, and the loser is reaped through the
+        exactly-once cancel path (the travelling `cancelled` flag covers
+        a loser caught mid-WAN / mid-steal / mid-pull). If the clone wins,
+        its stream and terminal state surface through the PRIMARY request
+        object, so the frontend sees one rid-consistent lifecycle either
+        way. The loser's burned compute (uncached prefill + decoded
+        tokens) is charged to `RunMetrics.wasted_work_tok`."""
+        peer = self.lb.remote_lbs[peer_id]
+        clone = dataclasses.replace(
+            req, rid=next(_HEDGE_RID), deadline_s=None, forwarded=True,
+            arrival=0.0, origin_lb=None, ttft=None, finished=None,
+            cached_tokens=0, replica=None, error=None, cancelled=None,
+            finish_reason=None, admit_cb=None, token_cb=None, done_cb=None)
+        m = self.lb.metrics
+        if m is not None:
+            m.hedged += 1
+        orig_token = req.token_cb
+        orig_done = req.done_cb
+        state = {"winner": None}
+
+        def decide(who: Request) -> None:
+            if state["winner"] is not None:
+                return
+            state["winner"] = who
+            if who is clone and m is not None:
+                m.hedge_wins += 1
+            self._reap_hedge_loser(req if who is clone else clone)
+
+        def primary_token(r, tok, idx, t):
+            decide(req)
+            if state["winner"] is req:
+                if orig_token is not None:
+                    orig_token(req, tok, idx, t)
+            elif m is not None:
+                m.wasted_work_tok += 1
+
+        def clone_token(r, tok, idx, t):
+            decide(clone)
+            if state["winner"] is clone:
+                if orig_token is not None:
+                    orig_token(req, tok, idx, t)
+            elif m is not None:
+                m.wasted_work_tok += 1
+
+        def primary_done(r):
+            if state["winner"] is None:
+                decide(req)         # finished without a token (error path)
+            if state["winner"] is req:
+                if orig_done is not None:
+                    orig_done(req)
+            else:
+                # the primary was reaped as the hedge loser; the clone's
+                # completion surfaces through this object, so clear the
+                # bogus terminal state the cancel path stamped on it
+                req.finished = None
+                req.finish_reason = None
+
+        def clone_done(r):
+            if state["winner"] is None:
+                decide(clone)
+            if state["winner"] is clone:
+                req.ttft = clone.ttft
+                req.finished = clone.finished
+                req.cached_tokens = clone.cached_tokens
+                req.replica = clone.replica
+                req.error = clone.error
+                req.finish_reason = clone.finish_reason
+                if orig_done is not None:
+                    orig_done(req)
+            # clone lost: its cancel resolution ends here, exactly once
+
+        req.token_cb, req.done_cb = primary_token, primary_done
+        clone.token_cb, clone.done_cb = clone_token, clone_done
+        self.lb.sim.after(self.lb.net.one_way(self.lb.region, peer.region),
+                          lambda: peer.on_request(clone))
+
+    def _reap_hedge_loser(self, loser: Request) -> None:
+        """Cancel the losing leg wherever it is: some LB queue, some
+        replica (pending/running/loading), or the WAN. The `cancelled`
+        flag is set FIRST so a loser in flight (forward, steal handoff,
+        pull-prefix landing) resolves itself at arrival."""
+        loser.cancelled = "hedge"
+        if loser.finished is not None:
+            return
+        lbs = [self.lb] + list(self.lb.remote_lbs.values())
+        for lb in lbs:
+            if lb.core.cancel(loser.rid):
+                if loser.finished is None:
+                    resolve_cancelled(loser, self.lb.sim.now)
+                return
+            for r in lb.replicas.values():
+                seq = r.cancel(loser.rid)
+                if seq is not None:
+                    # compute the loser burned before the reap: uncached
+                    # prefill (if it was admitted) + any decoded tokens —
+                    # all spent, none delivered
+                    if self.lb.metrics is not None:
+                        waste = len(seq.out)
+                        if seq.admit_index >= 0:
+                            waste += max(0, seq.prompt_len
+                                         - seq.req.cached_tokens)
+                        self.lb.metrics.wasted_work_tok += waste
+                    return
 
 
 class LoadBalancerSim:

@@ -16,6 +16,7 @@ from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.page_copy import page_gather as _gather_pallas
 from repro.kernels.page_copy import page_scatter as _scatter_pallas
 from repro.kernels.paged_decode import paged_decode as _paged_pallas
+from repro.kernels.paged_verify import paged_verify as _verify_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 
@@ -47,6 +48,18 @@ def paged_decode(q, k_pages, v_pages, block_table, seq_lens):
         return _paged_pallas(q, k_pages, v_pages, block_table, seq_lens,
                              interpret=True)
     return ref.paged_decode_ref(q, k_pages, v_pages, block_table, seq_lens)
+
+
+def paged_verify(q, k_pages, v_pages, block_table, seq_lens):
+    """q: (B,Q,H,hd) — Q speculative candidates per sequence; pools
+    (P,page,K,hd); block_table (B,NPG); seq_lens (B,) TOTAL valid tokens
+    including the Q candidates (>= Q)."""
+    if _on_tpu():
+        return _verify_pallas(q, k_pages, v_pages, block_table, seq_lens)
+    if _force_interpret():
+        return _verify_pallas(q, k_pages, v_pages, block_table, seq_lens,
+                              interpret=True)
+    return ref.paged_verify_ref(q, k_pages, v_pages, block_table, seq_lens)
 
 
 def page_gather(k_pages, v_pages, ids):

@@ -57,6 +57,44 @@ def paged_decode_ref(q, k_pages, v_pages, block_table, seq_lens) -> jax.Array:
     return jax.vmap(one)(q, block_table, seq_lens)
 
 
+def paged_verify_ref(q, k_pages, v_pages, block_table, seq_lens) -> jax.Array:
+    """Multi-query verify attention over a paged KV cache (speculative
+    decoding's target-model half).
+    q: (B,Q,H,hd) — Q candidate positions per sequence, whose K/V the
+    caller has already written into the pool; seq_lens: (B,) TOTAL valid
+    token counts INCLUDING the Q candidates (>= Q). With
+    base = seq_len - Q committed tokens, query qi attends positions
+    < base + qi + 1 (its own position and everything before it, none of
+    the later candidates). Same garbage-past-ragged-edge block-table
+    contract as `paged_decode_ref`; reduces to its math at Q=1."""
+    B, Q, H, hd = q.shape
+    Ptot, page, K, _ = k_pages.shape
+    npages = block_table.shape[1]
+    G = H // K
+
+    def one(qb, bt, ln):
+        live = jnp.arange(npages, dtype=jnp.int32) * page < ln
+        bt = jnp.where(live, bt, 0)
+        k = k_pages[bt]                                   # (npages,page,K,hd)
+        v = v_pages[bt]
+        T = npages * page
+        k = k.reshape(T, K, hd)
+        v = v.reshape(T, K, hd)
+        # fold the query axis into the grouped-query axis: row g*Q + qi
+        qg = qb.transpose(1, 0, 2).reshape(K, G * Q, hd)
+        logits = jnp.einsum("kgh,tkh->kgt", qg, k).astype(jnp.float32)
+        logits *= hd ** -0.5
+        qi = jnp.arange(G * Q, dtype=jnp.int32) % Q
+        limit = ln - Q + qi + 1                           # (G*Q,)
+        valid = jnp.arange(T, dtype=jnp.int32)[None, :] < limit[:, None]
+        logits = jnp.where(valid[None], logits, -2.0e38)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("kgt,tkh->kgh", probs, v)
+        return out.reshape(K, G, Q, hd).transpose(2, 0, 1, 3).reshape(Q, H, hd)
+
+    return jax.vmap(one)(q, block_table, seq_lens)
+
+
 def ssd_scan_ref(x, dt, a, B_, C_, *, chunk: int) -> jax.Array:
     """Chunked SSD oracle (zero initial state).
     x: (B,H,S,P) f32; dt: (B,H,S) f32 post-softplus; a: (H,) f32 (<0);

@@ -22,6 +22,11 @@ class CostParams:
     speed_factor: float = 1.0       # >1 = straggler
     kv_page_bytes: float = 131072.0  # bytes per KV page (host<->device copy)
     host_copy_gbps: float = 20.0     # PCIe-class host<->device bandwidth
+    # Speculative decoding (draft-k/verify-1). spec_k = 0 disables the
+    # `decode_many` surface entirely (core falls back to `decode`).
+    spec_k: int = 0                  # drafted tokens per decode iteration
+    spec_accept_rate: float = 1.0    # per-draft acceptance probability
+    spec_draft_cost: float = 0.15    # drafter fwd cost as fraction of target
 
 # Stands in for a generated token the workload didn't predetermine. Fillers
 # flow into the radix cache on completion like any generated token would on
@@ -58,6 +63,30 @@ class CostModelBackend:
     def decode(self, seqs) -> list:
         return [self._next_token(s) for s in seqs]
 
+    def decode_many(self, seqs) -> Optional[list]:
+        """Speculative decode iteration, mirrored analytically: each draft
+        position is accepted with probability `spec_accept_rate` (leading
+        matches only — the first rejection discards the rest, exactly the
+        draft-k/verify-1 rule), then the verify pass always contributes one
+        target-sampled token, so every sequence emits accepted+1 tokens.
+        The coin flips are a deterministic hash of (rid, position, draft
+        index), so reruns — and the JAX engine at rate 1.0 with
+        drafter == target — produce identical decision streams."""
+        k = int(getattr(self.cost, "spec_k", 0))
+        if k <= 0:
+            return None
+        rate = float(getattr(self.cost, "spec_accept_rate", 1.0))
+        out = []
+        for s in seqs:
+            n_acc = 0
+            for j in range(k):
+                if not self._accept(s.req.rid, len(s.out), j, rate):
+                    break
+                n_acc += 1
+            out.append([self._token_at(s, len(s.out) + j)
+                        for j in range(n_acc + 1)])
+        return out
+
     # ---- host-tier hooks (mirror JaxPagedBackend's async copy path)
     def load_pages(self, seq, pairs) -> None:
         """Host->device load dispatched for a LOADING admission; the copy's
@@ -85,6 +114,11 @@ class CostModelBackend:
         t = self._prefill_tokens / c.prefill_tps
         self._prefill_tokens = 0
         decode_t = c.decode_base + c.decode_per_seq * n_running
+        spec_k = int(getattr(c, "spec_k", 0))
+        if spec_k > 0:
+            # k drafter forwards at a fraction of target cost + the wider
+            # verify dispatch (~= one target forward) per iteration
+            decode_t *= 1.0 + spec_k * float(getattr(c, "spec_draft_cost", 0.15))
         copy_t = (self._copy_pages * float(getattr(c, "kv_page_bytes", 131072.0))
                   / (float(getattr(c, "host_copy_gbps", 20.0)) * 1e9))
         self._copy_pages = 0
@@ -96,3 +130,18 @@ class CostModelBackend:
         out = getattr(seq.req, "output_tokens", None) or ()
         i = len(seq.out)
         return int(out[i]) if i < len(out) else FILLER_TOKEN
+
+    @staticmethod
+    def _token_at(seq, i: int) -> int:
+        out = getattr(seq.req, "output_tokens", None) or ()
+        return int(out[i]) if i < len(out) else FILLER_TOKEN
+
+    @staticmethod
+    def _accept(rid: int, pos: int, j: int, rate: float) -> bool:
+        if rate >= 1.0:
+            return True
+        if rate <= 0.0:
+            return False
+        x = (rid * 1000003 ^ pos * 10007 ^ j * 101) & 0xFFFFFFFF
+        x = (x * 2654435761) & 0xFFFFFFFF
+        return x / 2.0 ** 32 < rate

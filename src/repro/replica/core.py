@@ -69,6 +69,15 @@ class ReplicaBackend(Protocol):
     # dispatch (JaxPagedBackend) implement it; the core falls back to
     # sequential `prefill` calls otherwise. Scheduling decisions are
     # identical either way — only compute dispatch changes.
+    #
+    # Optional: `decode_many(seqs) -> Optional[list[list[int]]]` — the
+    # speculative-decoding step contract: one decode iteration may emit
+    # SEVERAL verified tokens per sequence (>= 1 each). Returning None
+    # means speculation is off and the core falls back to `decode`. The
+    # core appends each list in order, truncating once the sequence
+    # finishes mid-list, and records ("accept", rid, n_appended) in the
+    # decision stream — CostModelBackend mirrors the acceptance count
+    # analytically so sim/JAX decision parity holds under speculation.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +189,8 @@ class ReplicaCore:
         self.host_hit_tokens = 0
         self.loaded_pages = 0
         self.completions = 0
+        self.spec_steps = 0       # decode iterations served by decode_many
+        self.spec_tokens = 0      # tokens those iterations emitted
         self.rejections = 0
         self.preemptions = 0
         self.cancellations = 0
@@ -542,17 +553,36 @@ class ReplicaCore:
 
     # ------------------------------------------------------------ decode
     def finish_step(self) -> list[Seq]:
-        """Decode phase: one token for every previously-running sequence
-        (admissions already got theirs from prefill), then reap."""
+        """Decode phase: one decode iteration for every previously-running
+        sequence (admissions already got theirs from prefill), then reap.
+        With a speculative backend (`decode_many`) an iteration may emit
+        several verified tokens per sequence; each is appended (and
+        streamed through `token_sink`) in order, truncated once the
+        sequence hits its budget/stop token, with the per-sequence emitted
+        count recorded as ("accept", rid, n) in the decision stream."""
         batch = [s for s in self.running
                  if not s.new_this_step and not s.done()]
         if batch:
-            toks = self.backend.decode(batch)
-            for s, t in zip(batch, toks):
-                s.out.append(int(t))
-                s.tokens.append(int(t))
-                if self.token_sink is not None:
-                    self.token_sink(s, int(t), len(s.out) - 1)
+            many = getattr(self.backend, "decode_many", None)
+            tok_lists = many(batch) if many is not None else None
+            spec = tok_lists is not None
+            if not spec:
+                tok_lists = [[t] for t in self.backend.decode(batch)]
+            if spec:
+                self.spec_steps += 1
+            for s, toks in zip(batch, tok_lists):
+                n_app = 0
+                for t in toks:
+                    if s.done():
+                        break                  # budget/stop hit mid-list
+                    s.out.append(int(t))
+                    s.tokens.append(int(t))
+                    if self.token_sink is not None:
+                        self.token_sink(s, int(t), len(s.out) - 1)
+                    n_app += 1
+                if spec:
+                    self.spec_tokens += n_app
+                    self._record("accept", s.req.rid, n_app)
         for s in self.running:
             s.new_this_step = False
         finished = [s for s in self.running if s.done()]

@@ -28,6 +28,7 @@ import dataclasses
 from collections import deque
 from typing import Optional, Protocol, Sequence, runtime_checkable
 
+from repro.routing.hedging import HedgeParams, should_hedge
 from repro.routing.kvtransfer import (PULL, PUSH, RECOMPUTE, KVTransferParams,
                                       decide)
 from repro.routing.policies import SP_P, Policy, TargetView, eligible
@@ -105,6 +106,12 @@ class RoutingConfig:
     # aware local AND remote policies (their tries estimate hit lengths).
     kv_transfer: bool = False
     kv_params: Optional[KVTransferParams] = None    # default params if None
+    # BEYOND-PAPER hedged dispatch: duplicate a `latency`-class request to a
+    # second region when the chosen replica's predicted TTFT blows the
+    # request's budget (repro.routing.hedging). First token wins; the
+    # transport reaps the loser through the exactly-once cancel path.
+    hedging: bool = False
+    hedge_params: Optional[HedgeParams] = None      # default params if None
     # Record ("local"|"forward"|"steal"|"pull", rid, target) tuples for
     # parity tests / tracing. Off by default (unbounded list).
     record_decisions: bool = False
@@ -134,6 +141,7 @@ class RoutingCore:
         # KV-transfer accounting (all zero with kv_transfer off)
         self.kv_decisions = {PULL: 0, PUSH: 0, RECOMPUTE: 0}
         self.pulled_tokens = 0
+        self.hedges = 0
         self.decisions: Optional[list[tuple]] = (
             [] if self.cfg.record_decisions else None)
 
@@ -225,6 +233,7 @@ class RoutingCore:
                     continue
                 self.queue.popleft()
                 self._send_local(req, tid)
+                self._maybe_hedge(req, tid)
                 continue
             # one WAN hop normally — but an LB that owns ZERO live targets
             # (elastic scale-to-zero, region outage) can never serve the
@@ -325,6 +334,38 @@ class RoutingCore:
         if self.decisions is not None:
             self.decisions.append(("local", req.rid, rid))
         self.transport.deliver(req, rid)
+
+    def _maybe_hedge(self, req, tid: str) -> None:
+        """After a local send, consider duplicating a `latency`-class
+        request to the healthiest remote region (pure snapshot rule in
+        repro.routing.hedging). The transport owns the race: first token
+        wins, the loser is cancelled exactly once. Transports without a
+        `hedge` method (plain fixtures) silently opt out."""
+        cfg = self.cfg
+        if not cfg.hedging or not self._lb_snap:
+            return
+        hedge_fn = getattr(self.transport, "hedge", None)
+        if hedge_fn is None:
+            return
+        snap = self._replica_snap.get(tid)
+        if snap is None:
+            return
+        params = cfg.hedge_params if cfg.hedge_params is not None \
+            else HedgeParams()
+        if not should_hedge(req, snap, params):
+            return
+        # a hedge must land where replicas EXIST (busy is fine) — same
+        # guard as re-forwarding, or it would bounce off an empty region
+        peers = [v for v in self._lb_snap.values()
+                 if v.n_replicas > 0 and self.transport.peer_alive(v.id)]
+        if not peers:
+            return
+        peer = max(peers,
+                   key=lambda v: (v.n_avail_replicas, -v.queue_len)).id
+        self.hedges += 1
+        if self.decisions is not None:
+            self.decisions.append(("hedge", req.rid, peer))
+        hedge_fn(req, peer)
 
     def _forward(self, req, lbid: str) -> None:
         req.forwarded = True

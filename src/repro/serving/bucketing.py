@@ -34,6 +34,21 @@ def bucket_tokens(n: int, pad: int) -> int:
     return pad * next_pow2(max(1, -(-n // pad)))
 
 
+def token_pad(n: int, pad: int, bucket_shapes: bool = True) -> int:
+    """Packed prefill token-axis pad: the pow2 ladder over `pad` when
+    bucketing is on, the exact pad-multiple otherwise. (Shared by the
+    backend's prefill packing — previously duplicated there.)"""
+    if bucket_shapes:
+        return bucket_tokens(n, pad)
+    return -(-n // pad) * pad
+
+
+def pow2_pad(n: int, bucket_shapes: bool = True) -> int:
+    """Plain pow2 ladder for small packed axes (page-id lists, segment
+    counts); exact when bucketing is off."""
+    return bucket_tokens(n, 1) if bucket_shapes else n
+
+
 def n_buckets(cap: int) -> int:
     """How many buckets the ladder {1, 2, 4, ..., cap} holds — the bound
     serving_bench asserts on per-axis compile counts."""

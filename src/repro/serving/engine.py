@@ -45,11 +45,18 @@ class EngineConfig:
                                   # False = exact shapes (compile churn)
     packed_prefill: bool = True   # admissions packed into one dispatch;
                                   # False = one prefill_step per request
+    spec_k: int = 0               # speculative drafts per decode iteration;
+                                  # 0 = off. >0 requires Engine(draft_cfg=,
+                                  # draft_params=) — the drafter model
+    spec_synth_rate: Any = None   # Optional[float]: benchmark knob — fixed
+                                  # synthetic acceptance rate (emitted
+                                  # tokens then NOT baseline-exact)
 
 
 class Engine:
     def __init__(self, model_cfg: ModelConfig, params: Any,
-                 ecfg: EngineConfig = EngineConfig(), seed: int = 0):
+                 ecfg: EngineConfig = EngineConfig(), seed: int = 0,
+                 draft_cfg: Any = None, draft_params: Any = None):
         if model_cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 f"paged engine serves transformer-family archs; got "
@@ -63,7 +70,10 @@ class Engine:
             prefill_pad=ecfg.prefill_pad, seed=seed,
             bucket_shapes=ecfg.bucket_shapes,
             packed_prefill=ecfg.packed_prefill,
-            overlap_loads=ecfg.overlap_loads)
+            overlap_loads=ecfg.overlap_loads,
+            spec_k=ecfg.spec_k, draft_cfg=draft_cfg,
+            draft_params=draft_params,
+            spec_synth_rate=ecfg.spec_synth_rate)
         self.core = ReplicaCore(ReplicaCoreConfig(
             page_size=ecfg.page_size, n_pages=ecfg.n_pages,
             max_batch=ecfg.max_batch, max_seq_len=ecfg.max_seq_len,

@@ -43,7 +43,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.serving import model_runner as mr
-from repro.serving.bucketing import bucket, bucket_tokens
+from repro.serving.bucketing import bucket, pow2_pad, token_pad
 
 
 @jax.jit
@@ -66,7 +66,10 @@ class JaxPagedBackend:
     def __init__(self, model_cfg: ModelConfig, params: Any, *,
                  n_pages: int, page_size: int, prefill_pad: int = 64,
                  seed: int = 0, bucket_shapes: bool = True,
-                 packed_prefill: bool = True, overlap_loads: bool = True):
+                 packed_prefill: bool = True, overlap_loads: bool = True,
+                 spec_k: int = 0, draft_cfg: Optional[ModelConfig] = None,
+                 draft_params: Any = None,
+                 spec_synth_rate: Optional[float] = None):
         self.cfg = model_cfg
         self.params = params
         self.page_size = page_size
@@ -77,6 +80,24 @@ class JaxPagedBackend:
         kv_dtype = jax.tree.leaves(params)[0].dtype
         self.k_pages, self.v_pages = mr.init_kv_pool(
             model_cfg, n_pages, page_size, kv_dtype)
+        # speculative decoding: the drafter keeps its OWN pools with the
+        # target pool's page geometry (same page ids index both), so the
+        # scheduler manages one set of pages for two models
+        self.spec_k = spec_k
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.spec_synth_rate = spec_synth_rate
+        if spec_k > 0:
+            if draft_cfg is None or draft_params is None:
+                raise ValueError("spec_k > 0 requires draft_cfg + "
+                                 "draft_params (the drafter model)")
+            self.dk_pages, self.dv_pages = mr.init_kv_pool(
+                draft_cfg, n_pages, page_size, kv_dtype)
+        else:
+            self.dk_pages = self.dv_pages = None
+        self.spec_dispatches = 0      # decode_many calls
+        self.spec_drafted = 0         # draft positions proposed
+        self.spec_accepted = 0        # draft positions accepted
         self._base_key = jax.random.PRNGKey(seed)
         self._scratch: Optional[int] = None
         # host KV tier (allocated at bind when the core enables it)
@@ -239,6 +260,14 @@ class JaxPagedBackend:
             self.k_pages, self.v_pages, jnp.asarray(np_past),
             jnp.int32(start), jnp.int32(len(suffix)),
             cfg=self.cfg, page_size=ps)
+        if self.spec_k > 0:
+            # mirror the chunk through the drafter so its cache tracks the
+            # target's committed positions (same pages, its own pools)
+            _, self.dk_pages, self.dv_pages = mr.prefill_step(
+                self.draft_params, jnp.asarray(toks), jnp.asarray(np_new),
+                self.dk_pages, self.dv_pages, jnp.asarray(np_past),
+                jnp.int32(start), jnp.int32(len(suffix)),
+                cfg=self.draft_cfg, page_size=ps)
         if not sample:
             return None
         tok = self._sample_pref(logits, seq, end)
@@ -304,6 +333,18 @@ class JaxPagedBackend:
             jnp.asarray(last_idx), jnp.asarray(temps), jnp.asarray(topks),
             jnp.asarray(seeds), jnp.asarray(spos), self._base_key,
             cfg=self.cfg, page_size=ps)
+        if self.spec_k > 0:
+            # drafter mirror of the whole packed round (sampled boundary
+            # tokens are the target's business; the drafter only needs its
+            # cache to hold every committed position)
+            _, self.dk_pages, self.dv_pages = mr.prefill_pack_step(
+                self.draft_params, jnp.asarray(toks), jnp.asarray(segs),
+                jnp.asarray(poss), jnp.asarray(dpage), jnp.asarray(dslot),
+                self.dk_pages, self.dv_pages, jnp.asarray(past),
+                jnp.asarray(past_start), jnp.asarray(past_len),
+                jnp.asarray(last_idx), jnp.asarray(temps),
+                jnp.asarray(topks), jnp.asarray(seeds), jnp.asarray(spos),
+                self._base_key, cfg=self.draft_cfg, page_size=ps)
         tn = np.asarray(toks_dev)                  # one host sync per round
         now = time.monotonic()
         out: list = []
@@ -334,6 +375,43 @@ class JaxPagedBackend:
         self._m_toks[:self._nb] = np.where(active, out[:self._nb],
                                            self._m_toks[:self._nb])
         return [int(t) for t in out[:n]]
+
+    def decode_many(self, seqs) -> Optional[list]:
+        """ReplicaCore's speculative step contract: None when speculation
+        is off (core falls back to `decode`); else ONE fused
+        `mr.spec_decode_step` dispatch over the same persistent bucketed
+        batch state, and — like `decode` — a single host sync per step.
+        Returns the n_acc+1 verified tokens per sequence, all of them
+        target samples (bit-identical to the sequential engine unless the
+        synthetic-acceptance bench knob is set). The drafter's pools are
+        NOT moved by the host tier or cross-region import, so a reloaded
+        prefix degrades acceptance, never correctness."""
+        if self.spec_k <= 0:
+            return None
+        self._flush_demotes()
+        n = len(seqs)
+        if not self._slots_current(seqs):
+            self._sync_slots(seqs)
+        (T, n_acc, self._dstate, self.k_pages, self.v_pages,
+         self.dk_pages, self.dv_pages) = mr.spec_decode_step(
+            self.params, self.draft_params, self._dstate,
+            self.k_pages, self.v_pages, self.dk_pages, self.dv_pages,
+            self._base_key, jnp.int32(self._scratch),
+            cfg=self.cfg, dcfg=self.draft_cfg, page_size=self.page_size,
+            nb=self._nb, npgb=self._npgb, k_spec=self.spec_k,
+            synth_rate=self.spec_synth_rate)
+        Tn, an = jax.device_get((T, n_acc))        # the single host sync
+        # advance the mirrors exactly like the fused step advanced the
+        # device state (active rows move past their accepted run + 1)
+        active = self._m_lens[:self._nb] > 0
+        self._m_lens[:self._nb] += np.where(active, an + 1, 0).astype(np.int32)
+        rows = np.arange(self._nb)
+        self._m_toks[:self._nb] = np.where(active, Tn[rows, an],
+                                           self._m_toks[:self._nb])
+        self.spec_dispatches += 1
+        self.spec_drafted += n * self.spec_k
+        self.spec_accepted += int(an[:n].sum())
+        return [[int(t) for t in Tn[i, :an[i] + 1]] for i in range(n)]
 
     def _slots_current(self, seqs) -> bool:
         if len(self._slots) != len(seqs):
@@ -381,12 +459,9 @@ class JaxPagedBackend:
         }
 
     # ------------------------------------------------------------ shapes
+    # (one implementation for every caller: repro.serving.bucketing)
     def _token_pad(self, n: int) -> int:
-        if self.bucket_shapes:
-            return bucket_tokens(n, self.prefill_pad)
-        return -(-n // self.prefill_pad) * self.prefill_pad
+        return token_pad(n, self.prefill_pad, self.bucket_shapes)
 
     def _pow2_pad(self, n: int) -> int:
-        if self.bucket_shapes:
-            return bucket_tokens(n, 1)        # plain pow2 ladder
-        return n
+        return pow2_pad(n, self.bucket_shapes)

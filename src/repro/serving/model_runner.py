@@ -57,6 +57,7 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models.layers import apply_mlp, embed_tokens, lm_logits, rms_norm
 from repro.kernels import ops as kops
+from repro.serving.sampling import fold_key, sample_rows_impl as _sample_rows
 
 
 def kv_pool_spec(cfg: ModelConfig, n_pages: int, page_size: int,
@@ -80,61 +81,34 @@ def _ffn(lp, h, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------- sampling
-
-def _sample_rows(logits, base_key, seeds, pos, temps, top_ks):
-    """Per-row sampling, batch-shape-invariant and run-stable.
-
-    logits: (B, V); seeds/pos: (B,) int32 identity of each draw (the
-    request's sampling seed and the sampled token's position); temps: (B,)
-    float32 (<= 0 => greedy); top_ks: (B,) int32 (0 => disabled).
-    Row i's randomness depends only on (base_key, seeds[i], pos[i]) — NOT
-    on i, B, or any process-global counter — so padded/bucketed batches
-    sample identical tokens and reruns reproduce.
-    """
-    lg = logits.astype(jnp.float32)
-    V = lg.shape[-1]
-    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-
-    def topk_mask():
-        srt = jnp.sort(lg, axis=-1)[:, ::-1]
-        kth = jnp.take_along_axis(
-            srt, (jnp.clip(top_ks, 1, V) - 1)[:, None], axis=-1)  # (B, 1)
-        return jnp.where((top_ks[:, None] > 0) & (lg < kth), -jnp.inf, lg)
-
-    def stochastic():
-        masked = jax.lax.cond(jnp.any(top_ks > 0), topk_mask, lambda: lg)
-        scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
-
-        def draw(seed, p, row):
-            k = jax.random.fold_in(jax.random.fold_in(base_key, seed), p)
-            return jax.random.categorical(k, row)
-
-        sampled = jax.vmap(draw)(seeds, pos, scaled).astype(jnp.int32)
-        return jnp.where(temps <= 0.0, greedy, sampled)
-
-    # all-greedy batches (the common case) skip the sort + categorical
-    return jax.lax.cond(jnp.any(temps > 0.0), stochastic, lambda: greedy)
-
+# The per-row implementation `_sample_rows` and the seed+position keying
+# contract live in repro.serving.sampling (one source of truth shared with
+# the speculative verify path); this module re-exports the jitted entries.
 
 @jax.jit
 def sample_rows(logits, base_key, seeds, pos, temps, top_ks):
-    """Standalone jitted `_sample_rows` (the sequential-prefill path)."""
+    """Standalone jitted `sampling.sample_rows_impl` (sequential prefill)."""
     return _sample_rows(logits, base_key, seeds, pos, temps, top_ks)
 
 
 @jax.jit
 def sample(logits: jax.Array, key: jax.Array, *, temperature=0.0,
-           top_k=0) -> jax.Array:
+           top_k=0, seed=0, pos=0) -> jax.Array:
     """Fallback batch sampler, logits: (B, V) -> (B,) int32.
 
-    `temperature` / `top_k` are TRACED scalars (one compiled program for
-    every sampling config), not static_argnames — a distinct config no
-    longer compiles a fresh program.
+    `temperature` / `top_k` / `seed` / `pos` are TRACED scalars (one
+    compiled program for every sampling config). The draw key derives from
+    `sampling.fold_key(key, seed, pos)` — the same seed+position contract
+    as the fused decode/verify paths, so a caller that passes the engine
+    base key plus the request seed and token position reproduces exactly
+    the hot path's draw.
     """
     lg = logits.astype(jnp.float32)
     V = lg.shape[-1]
     t = jnp.asarray(temperature, jnp.float32)
     k = jnp.asarray(top_k, jnp.int32)
+    draw_key = fold_key(key, jnp.asarray(seed, jnp.int32),
+                        jnp.asarray(pos, jnp.int32))
     greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
 
     def topk_mask():
@@ -146,7 +120,8 @@ def sample(logits: jax.Array, key: jax.Array, *, temperature=0.0,
     def stochastic():
         masked = jax.lax.cond(k > 0, topk_mask, lambda: lg)
         scaled = masked / jnp.maximum(t, 1e-6)
-        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(draw_key, scaled,
+                                      axis=-1).astype(jnp.int32)
 
     return jax.lax.cond(t > 0.0, stochastic, lambda: greedy)
 
@@ -303,6 +278,37 @@ def prefill_pack_step(params: Any, tokens: jax.Array, seg_ids: jax.Array,
 
 # ------------------------------------------------------------------ decode
 
+def _token_fwd(params, toks, positions, atn_lens, bt, page_ids, offsets,
+               k_pages, v_pages, *, cfg: ModelConfig):
+    """One single-token forward for a batch — the body shared by the fused
+    decode step and the drafter's proposal steps: embed + per-layer KV
+    write at (page_ids, offsets) + ragged paged attention over `atn_lens`
+    tokens. Returns (logits (B, V), k_pages, v_pages)."""
+    h = embed_tokens(params, toks[:, None], cfg)   # compute in param dtype
+
+    def blk(carry, xs):
+        h, kp, vp = carry
+        lp, li = xs
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = attn._project_q(lp["attn"], x, cfg, positions[:, None], rope=True)
+        k_new, v_new = attn._project_kv(lp["attn"], x, cfg,
+                                        positions[:, None], rope=True)
+        kp = kp.at[li, page_ids, offsets].set(k_new[:, 0].astype(kp.dtype))
+        vp = vp.at[li, page_ids, offsets].set(v_new[:, 0].astype(vp.dtype))
+        o = kops.paged_decode(q[:, 0], kp[li], vp[li], bt, atn_lens)
+        y = jnp.einsum("bhk,hkd->bd", o, lp["attn"]["wo"])[:, None]
+        h = h + y
+        h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return (h, kp, vp), None
+
+    L = cfg.n_layers
+    (h, k_pages, v_pages), _ = jax.lax.scan(
+        blk, (h, k_pages, v_pages),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg)[:, 0], k_pages, v_pages
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "page_size", "nb", "npgb"),
                    donate_argnums=(1, 2, 3))
@@ -335,32 +341,11 @@ def decode_step(params: Any, state: dict, k_pages: jax.Array,
     top_ks = jax.lax.slice(state["top_ks"], (0,), (nb,))
     seeds = jax.lax.slice(state["seeds"], (0,), (nb,))
 
-    h = embed_tokens(params, toks[:, None], cfg)   # compute in param dtype
-    positions = lens                                           # (nb,)
     page_ids = bt[jnp.arange(nb), lens // page_size]
     offsets = lens % page_size
-
-    def blk(carry, xs):
-        h, kp, vp = carry
-        lp, li = xs
-        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
-        q = attn._project_q(lp["attn"], x, cfg, positions[:, None], rope=True)
-        k_new, v_new = attn._project_kv(lp["attn"], x, cfg,
-                                        positions[:, None], rope=True)
-        kp = kp.at[li, page_ids, offsets].set(k_new[:, 0].astype(kp.dtype))
-        vp = vp.at[li, page_ids, offsets].set(v_new[:, 0].astype(vp.dtype))
-        o = kops.paged_decode(q[:, 0], kp[li], vp[li], bt, lens + 1)
-        y = jnp.einsum("bhk,hkd->bd", o, lp["attn"]["wo"])[:, None]
-        h = h + y
-        h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
-        return (h, kp, vp), None
-
-    L = cfg.n_layers
-    (h, k_pages, v_pages), _ = jax.lax.scan(
-        blk, (h, k_pages, v_pages),
-        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
-    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    logits = lm_logits(params, h, cfg)[:, 0]                   # (nb, V)
+    logits, k_pages, v_pages = _token_fwd(
+        params, toks, lens, lens + 1, bt, page_ids, offsets,
+        k_pages, v_pages, cfg=cfg)                             # (nb, V)
 
     new_toks = _sample_rows(logits, base_key, seeds, lens + 1, temps, top_ks)
     active = lens > 0
@@ -370,6 +355,167 @@ def decode_step(params: Any, state: dict, k_pages: jax.Array,
                  toks=state["toks"].at[:nb].set(
                      jnp.where(active, new_toks, toks)))
     return new_toks, state, k_pages, v_pages
+
+
+# ------------------------------------------------------- speculative decode
+
+def _verify_fwd(params, qtoks, qpos, bt, dest_page, dest_slot, total,
+                k_pages, v_pages, *, cfg: ModelConfig):
+    """Multi-query target forward over the Q = k_spec+1 candidate
+    positions: embed + per-layer KV write of ALL candidates + ragged
+    multi-query paged attention (`kops.paged_verify`). Returns
+    (logits (B, Q, V), k_pages, v_pages)."""
+    h = embed_tokens(params, qtoks, cfg)                       # (B, Q, d)
+
+    def blk(carry, xs):
+        h, kp, vp = carry
+        lp, li = xs
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = attn._project_q(lp["attn"], x, cfg, qpos, rope=True)
+        k_new, v_new = attn._project_kv(lp["attn"], x, cfg, qpos, rope=True)
+        kp = kp.at[li, dest_page, dest_slot].set(k_new.astype(kp.dtype))
+        vp = vp.at[li, dest_page, dest_slot].set(v_new.astype(vp.dtype))
+        o = kops.paged_verify(q, kp[li], vp[li], bt, total)    # (B,Q,H,hd)
+        y = jnp.einsum("bqhk,hkd->bqd", o, lp["attn"]["wo"])
+        h = h + y
+        h = h + _ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return (h, kp, vp), None
+
+    L = cfg.n_layers
+    (h, k_pages, v_pages), _ = jax.lax.scan(
+        blk, (h, k_pages, v_pages),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), k_pages, v_pages
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "dcfg", "page_size", "nb", "npgb",
+                                    "k_spec", "synth_rate"),
+                   donate_argnums=(2, 3, 4, 5, 6))
+def spec_decode_step(params: Any, dparams: Any, state: dict,
+                     k_pages: jax.Array, v_pages: jax.Array,
+                     dk_pages: jax.Array, dv_pages: jax.Array,
+                     base_key: jax.Array, scratch: jax.Array, *,
+                     cfg: ModelConfig, dcfg: ModelConfig, page_size: int,
+                     nb: int, npgb: int, k_spec: int,
+                     synth_rate=None):
+    """Fused draft-k/verify-1 speculative decode: k_spec+1 drafter
+    single-token forwards propose candidates, then the target verifies all
+    k_spec+1 positions in ONE multi-query dispatch — one jitted call per
+    engine iteration, same bucketed batch-state contract as `decode_step`.
+
+    The drafter shares the target's block tables / page ids / lens (its
+    own pools `dk_pages`/`dv_pages` mirror the target pool's page
+    geometry), so the scheduler manages ONE set of pages. Acceptance is
+    exact-match: the target samples T_j at every verified position with
+    the seed+position keys sequential decode would use, and draft d_j is
+    accepted iff it equals T_{j-1}; the step therefore always emits
+    n_acc+1 >= 1 TARGET-sampled tokens, which makes the emitted stream
+    bit-identical to the non-speculative engine no matter how bad the
+    drafter is. Rejected positions' KV writes are rolled back logically:
+    `lens` advances only past accepted tokens, so the stale slots sit
+    beyond every row's ragged edge (masked by seq_lens, overwritten by the
+    next step's writes). Writes that would land past the bucket's
+    `npgb * page_size` horizon are redirected to the scratch page.
+
+    With `synth_rate` set (a float in [0,1], static), the accept/reject
+    decision per draft position is replaced by a deterministic synthetic
+    coin (keyed on the same seed+position PRNG, decorrelated by a tag) —
+    the benchmark knob that measures speculation mechanics at a fixed
+    acceptance rate; emitted tokens are then NOT baseline-exact.
+
+    Returns (T (nb, k_spec+1) all target samples, n_acc (nb,) accepted
+    draft counts, state, k_pages, v_pages, dk_pages, dv_pages).
+    """
+    Q = k_spec + 1
+    bt = jax.lax.slice(state["bt"], (0, 0), (nb, npgb))
+    lens = jax.lax.slice(state["lens"], (0,), (nb,))
+    toks = jax.lax.slice(state["toks"], (0,), (nb,))
+    temps = jax.lax.slice(state["temps"], (0,), (nb,))
+    top_ks = jax.lax.slice(state["top_ks"], (0,), (nb,))
+    seeds = jax.lax.slice(state["seeds"], (0,), (nb,))
+    rows = jnp.arange(nb)
+    cap = npgb * page_size
+
+    def dests(positions):
+        # a position past the bucket horizon must not clamp onto a REAL
+        # page (the wrapped slot would corrupt committed KV): redirect it
+        # to the scratch page, whose contents are never read back
+        ok = positions < cap
+        pids = bt[rows, jnp.minimum(positions // page_size, npgb - 1)]
+        return jnp.where(ok, pids, scratch), positions % page_size
+
+    # ---- draft phase: k_spec proposal forwards + 1 write-only forward
+    # (the last candidate's KV must be resident for the all-accepted case:
+    # next step's drafter attends position lens+k_spec)
+    x = toks
+    drafts = []
+    for i in range(k_spec + 1):
+        p = lens + i
+        pids, offs = dests(p)
+        d_logits, dk_pages, dv_pages = _token_fwd(
+            dparams, x, p, p + 1, bt, pids, offs, dk_pages, dv_pages,
+            cfg=dcfg)
+        if i < k_spec:
+            # drafts draw through the SAME seed+position keying as the
+            # target's verify draws: an identical drafter reproduces the
+            # target's samples exactly (acceptance 1.0 by construction)
+            d = _sample_rows(d_logits, base_key, seeds, p + 1, temps, top_ks)
+            drafts.append(d)
+            x = d
+
+    # ---- verify phase: ONE fused multi-query target dispatch
+    if k_spec:
+        D = jnp.stack(drafts, axis=1)                          # (nb, k)
+        qtoks = jnp.concatenate([toks[:, None], D], axis=1)    # (nb, Q)
+    else:
+        D = jnp.zeros((nb, 0), jnp.int32)
+        qtoks = toks[:, None]
+    qpos = lens[:, None] + jnp.arange(Q, dtype=jnp.int32)[None, :]
+    dok = qpos < cap
+    dp = jnp.take_along_axis(bt, jnp.minimum(qpos // page_size, npgb - 1),
+                             axis=1)
+    dp = jnp.where(dok, dp, scratch)
+    dsl = qpos % page_size
+    # seq_lens for the verify kernel count ALL Q candidates; inactive
+    # padding rows (lens=0, scratch block table) pass the minimum Q
+    total = jnp.where(lens > 0, lens + Q, Q)
+    logits, k_pages, v_pages = _verify_fwd(
+        params, qtoks, qpos, bt, dp, dsl, total, k_pages, v_pages,
+        cfg=cfg)                                               # (nb, Q, V)
+
+    # target samples at every verified position with the sequential keys
+    T = jnp.stack(
+        [_sample_rows(logits[:, j], base_key, seeds, lens + 1 + j,
+                      temps, top_ks) for j in range(Q)], axis=1)
+
+    # exact-match acceptance: accept the longest draft prefix that equals
+    # the target's own draws (leading matches only)
+    if k_spec:
+        if synth_rate is None:
+            m = (D == T[:, :k_spec]).astype(jnp.int32)
+        else:
+            def urow(seed, ps_):
+                def u1(p):
+                    return jax.random.uniform(
+                        jax.random.fold_in(fold_key(base_key, seed, p), 7))
+                return jax.vmap(u1)(ps_)
+            u = jax.vmap(urow)(seeds, qpos[:, 1:])
+            m = (u < jnp.float32(synth_rate)).astype(jnp.int32)
+        n_acc = jnp.sum(jnp.cumprod(m, axis=1), axis=1)        # (nb,)
+    else:
+        n_acc = jnp.zeros((nb,), jnp.int32)
+
+    emitted = n_acc + 1
+    new_toks = T[rows, n_acc]
+    active = lens > 0
+    state = dict(state,
+                 lens=state["lens"].at[:nb].set(
+                     jnp.where(active, lens + emitted, lens)),
+                 toks=state["toks"].at[:nb].set(
+                     jnp.where(active, new_toks, toks)))
+    return T, n_acc, state, k_pages, v_pages, dk_pages, dv_pages
 
 
 # ---------------------------------------------------------- instrumentation
@@ -383,6 +529,7 @@ def compile_counts() -> dict:
         except Exception:                                    # noqa: BLE001
             return -1
     return {"decode_step": n(decode_step),
+            "spec_decode_step": n(spec_decode_step),
             "prefill_pack_step": n(prefill_pack_step),
             "prefill_step": n(prefill_step),
             "sample": n(sample),

@@ -31,9 +31,10 @@ def next_rid() -> int:
 # lower when the replica runs with preemption enabled). "standard" is 0 —
 # the same priority a request gets on the legacy surfaces — so entering
 # through the frontend Client never changes how default traffic schedules;
-# "batch" yields to it, "interactive" may preempt it. Unknown labels map
-# to the "standard" tier.
-SLO_CLASSES = {"batch": -1, "standard": 0, "interactive": 1}
+# "batch" yields to it, "interactive" may preempt it; "latency" sits above
+# all of them AND is the one class eligible for cross-region hedged
+# dispatch (repro.routing.hedging). Unknown labels map to "standard".
+SLO_CLASSES = {"batch": -1, "standard": 0, "interactive": 1, "latency": 2}
 
 
 def slo_priority(slo_class: str) -> int:

@@ -25,7 +25,7 @@ from repro.routing import (RoutingConfig, RoutingCore, RoutingSpec, SP_P,
 from repro.routing.failover import FailoverTracker
 from repro.serving.engine import Engine
 from repro.serving.request import (GenRequest, GenResult,
-                                   cancel_finish_reason)
+                                   cancel_finish_reason, next_rid)
 
 
 class _TickTransport:
@@ -90,6 +90,103 @@ class _TickTransport:
         self.router._after(
             self.router.wan_delay_ticks,
             lambda: self.router._serve_steal(peer_id, self.lb.region, n))
+
+    # ---- hedged dispatch (tail-TTFT insurance for the `latency` class)
+    def hedge(self, req: GenRequest, peer_id: str) -> None:
+        """Duplicate `req` to `peer_id`: a clone (fresh rid, no deadline,
+        marked forwarded so it can't re-forward or re-hedge) races the
+        primary over a real second engine, FIRST TOKEN WINS, and the loser
+        is reaped through the exactly-once cancel path. The clone's stream
+        and terminal result — re-keyed to the primary rid — surface through
+        the primary's callbacks when it wins, so the frontend handle sees
+        one rid-consistent lifecycle either way."""
+        rt = self.router
+        clone = dataclasses.replace(
+            req, rid=next_rid(), deadline_s=None, cancelled=None,
+            arrival_s=None, cached_tokens=0, first_token_s=None,
+            finished_s=None, on_admit=None, on_token=None, on_done=None)
+        clone.forwarded = True
+        rt.hedged += 1
+        rt._hedge_clone_rids.add(clone.rid)
+        orig_token = req.on_token
+        orig_done = req.on_done
+        state: dict = {"winner": None}
+
+        def decide(who) -> None:
+            if state["winner"] is not None:
+                return
+            state["winner"] = who
+            if who is clone:
+                rt.hedge_wins += 1
+            self._reap_hedge_loser(req if who is clone else clone)
+
+        def primary_token(r, tok, idx, t):
+            decide(req)
+            if state["winner"] is req:
+                if orig_token is not None:
+                    orig_token(req, tok, idx, t)
+            else:
+                rt.wasted_work_tok += 1
+
+        def clone_token(r, tok, idx, t):
+            decide(clone)
+            if state["winner"] is clone:
+                if orig_token is not None:
+                    orig_token(req, tok, idx, t)
+            else:
+                rt.wasted_work_tok += 1
+
+        def primary_done(res: GenResult):
+            if state["winner"] is None:
+                decide(req)         # finished without a token (error path)
+            if state["winner"] is req:
+                if orig_done is not None:
+                    orig_done(res)
+            # else: the primary lost; its cancel result is overridden by
+            # the clone's completion in `results()` / `clone_done`
+
+        def clone_done(res: GenResult):
+            if state["winner"] is None:
+                decide(clone)
+            if state["winner"] is clone:
+                req.cached_tokens = clone.cached_tokens
+                req.first_token_s = clone.first_token_s
+                req.finished_s = clone.finished_s
+                out = dataclasses.replace(res, rid=req.rid)
+                rt._hedge_overrides[req.rid] = out
+                if orig_done is not None:
+                    orig_done(out)
+            # clone lost: its cancel resolution ends here, exactly once
+
+        req.on_token, req.on_done = primary_token, primary_done
+        clone.on_token, clone.on_done = clone_token, clone_done
+        rt._after(rt.wan_delay_ticks, lambda: rt._arrive(peer_id, clone))
+
+    def _reap_hedge_loser(self, loser: GenRequest) -> None:
+        """Cancel the losing leg wherever it is: an LB queue, an engine
+        (pending / running / loading), or the WAN — where the travelling
+        `cancelled` flag resolves it at the next arrival."""
+        loser.cancelled = "cancelled"
+        for lb in self.router.lbs.values():
+            got = lb.core.cancel(loser.rid)
+            if got is not None:
+                self.router._resolve_front(got, "cancelled")
+                return
+        for lb in self.router.lbs.values():
+            for e in lb.engines.values():
+                ran = any(s.req.rid == loser.rid for s in e.core.running)
+                if e.cancel(loser.rid, "cancelled"):
+                    # compute the loser burned before the reap: uncached
+                    # prefill (if it was admitted) + any decoded tokens —
+                    # all spent, none delivered
+                    res = e.results.get(loser.rid)
+                    if res is not None:
+                        waste = len(res.output_tokens)
+                        if ran:
+                            waste += max(0, res.prompt_len
+                                         - res.cached_tokens)
+                        self.router.wasted_work_tok += waste
+                    return
 
 
 class _RegionLB:
@@ -175,6 +272,14 @@ class InProcessRouter:
         # terminal results for requests that never reached an engine
         # (cancelled / deadline-aborted while queued or on the WAN)
         self._front_results: dict[int, GenResult] = {}
+        # hedged dispatch (repro.routing.hedging): clone rids are internal
+        # artifacts hidden from results(); a clone win overrides the
+        # primary rid's (cancelled) engine result with the real completion
+        self.hedged = 0
+        self.hedge_wins = 0
+        self.wasted_work_tok = 0
+        self._hedge_clone_rids: set[int] = set()
+        self._hedge_overrides: dict[int, GenResult] = {}
 
     @classmethod
     def from_spec(cls, spec: RoutingSpec | str,
@@ -420,4 +525,7 @@ class InProcessRouter:
         for lb in self.lbs.values():
             for e in lb.engines.values():
                 out.update(e.results)
+        for rid in self._hedge_clone_rids:      # internal artifacts
+            out.pop(rid, None)
+        out.update(self._hedge_overrides)       # clone-won completions
         return out

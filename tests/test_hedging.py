@@ -1,0 +1,265 @@
+"""Cross-region hedged dispatch for the `latency` SLO class: duplicate to
+a second region when predicted TTFT blows the budget, FIRST TOKEN WINS,
+and the loser is reaped through the exactly-once cancel path. Covers both
+hosts of the shared RoutingCore — the discrete-event simulator and the
+tick-driven InProcessRouter over real engines — plus the decision rule
+itself and the wasted-work accounting."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim_mod
+from repro.core.simulator import ReplicaConfig, Request
+from repro.core.system import ServingSystem
+from repro.routing.hedging import HedgeParams, predict_ttft, should_hedge
+
+RCFG = ReplicaConfig(kv_budget=8192)
+
+
+def _req(rid, region="us", prompt=None, out_len=8, slo="standard", **kw):
+    prompt = prompt if prompt is not None else tuple(range(rid, rid + 64))
+    return Request(rid=rid, user_id=f"u{rid}", session_key=f"s{rid}",
+                   region=region, prompt_tokens=tuple(prompt),
+                   output_len=out_len, output_tokens=tuple(range(out_len)),
+                   slo_class=slo, **kw)
+
+
+def _system(budget=0.05):
+    sys = ServingSystem("skylb", {"us": 1, "eu": 1}, replica_cfg=RCFG)
+    for lb in sys.lbs.values():
+        lb.cfg.hedging = True
+        lb.cfg.hedge_params = HedgeParams(ttft_budget_s=budget)
+    return sys
+
+
+def _clean(sys):
+    for rep in sys.replicas:
+        assert not rep.core.running and not rep.core.pending
+        assert rep.core.alloc.used_pages == rep.core.radix.cached_pages
+
+
+# --------------------------------------------------------- decision rule
+
+def test_should_hedge_rule():
+    p = HedgeParams(ttft_budget_s=0.1, queue_wait_s=0.05,
+                    per_outstanding_s=0.003, prefill_tps=1000.0)
+
+    class V:
+        def __init__(self, pending, outstanding):
+            self.pending, self.outstanding = pending, outstanding
+
+    lat = _req(0, slo="latency")
+    std = _req(1, slo="standard")
+    # short prompt, idle replica: predicted TTFT under budget -> no hedge
+    assert not should_hedge(lat, V(0, 0), p)
+    # deep queue blows the budget -> hedge, but ONLY for the latency class
+    assert should_hedge(lat, V(3, 10), p)
+    assert not should_hedge(std, V(3, 10), p)
+    # a forwarded request must never re-hedge (no hedge storms)
+    fwd = _req(2, slo="latency")
+    fwd.forwarded = True
+    assert not should_hedge(fwd, V(3, 10), p)
+    # the predictor itself is monotone in load
+    assert (predict_ttft(64, 3, 10, p)
+            > predict_ttft(64, 0, 0, p) > 0)
+
+
+# ------------------------------------------------------------- simulator
+
+def test_sim_hedge_clone_wins_rid_consistent():
+    """Straggler home region: the clone wins on the healthy peer, its
+    stream/terminal state surface through the PRIMARY request object, the
+    straggler leg is reaped exactly once, and allocators stay balanced."""
+    sys = _system()
+    sys.replicas[0].cfg.speed_factor = 20.0
+    for i in range(6):
+        sys.submit(_req(100 + i, out_len=64))
+    done = []
+    sys.sim.after(0.3, lambda: sys.submit(
+        _req(0, out_len=8, slo="latency"), done.append))
+    sys.run(until=600.0)
+    assert len(done) == 1 and done[0].rid == 0
+    assert done[0].finished is not None
+    assert done[0].replica == "eu-r1"            # the clone's replica
+    m = sys.metrics
+    assert m.hedged == 1 and m.hedge_wins == 1
+    assert m.summary()["unresolved"] == 0
+    # the loser was reaped exactly once: one cancellation, somewhere local
+    assert sum(r.core.cancellations for r in sys.replicas) <= 1
+    _clean(sys)
+
+
+def test_sim_hedge_primary_wins_loser_reaped():
+    """Healthy-but-loaded home region: the primary wins, the clone is
+    cancelled on the peer, and the clone's burned prefill is charged to
+    wasted_work_tok."""
+    sys = _system()
+    for i in range(6):
+        sys.submit(_req(100 + i, out_len=256))
+    done = []
+    sys.sim.after(0.3, lambda: sys.submit(
+        _req(0, out_len=8, slo="latency"), done.append))
+    sys.run(until=600.0)
+    assert len(done) == 1 and done[0].replica == "us-r0"
+    m = sys.metrics
+    assert m.hedged == 1 and m.hedge_wins == 0
+    assert m.wasted_work_tok > 0                 # the clone's prefill
+    assert m.summary()["unresolved"] == 0
+    eu = sys.replicas[1]
+    assert eu.core.cancellations == 1 and eu.core.completions == 0
+    _clean(sys)
+
+
+def test_sim_hedge_loser_caught_on_wan():
+    """The primary wins while the clone is still ON THE WAN: the reap
+    finds it nowhere, so the travelling `cancelled` flag resolves it at
+    arrival — exactly once, zero peer-side work."""
+    sys = _system(budget=1e-4)                   # hedge every latency req
+    clones = []
+    eu_lb = sys.lbs["lb-eu"]
+    orig = eu_lb.on_request
+
+    def spy(req):
+        if req.rid >= 1_000_000_000:             # hedge-clone rid range
+            clones.append(req)
+        return orig(req)
+
+    eu_lb.on_request = spy
+    done = []
+    # idle us: first token lands well inside the 70 ms WAN delay
+    sys.submit(_req(0, prompt=tuple(range(8)), out_len=4,
+                    slo="latency"), done.append)
+    sys.run(until=60.0)
+    assert len(done) == 1 and done[0].replica == "us-r0"
+    m = sys.metrics
+    assert m.hedged == 1 and m.hedge_wins == 0
+    eu = sys.replicas[1]
+    assert eu.core.cancellations == 0 and eu.core.completions == 0
+    assert not eu.core.pending and not eu.core.running
+    # the clone resolved exactly once, via the travelling flag
+    assert len(clones) == 1
+    assert clones[0].cancelled == "hedge"
+    assert clones[0].finished is not None
+    _clean(sys)
+
+
+def test_sim_hedge_only_latency_class():
+    sys = _system(budget=1e-4)
+    done = []
+    for i in range(4):                           # standard: never hedged
+        sys.submit(_req(i, out_len=4), done.append)
+    sys.run(until=60.0)
+    assert len(done) == 4
+    assert sys.metrics.hedged == 0
+
+
+def test_sim_hedge_tail_ttft_improves():
+    """The benchmark claim, in miniature: with a straggler home region,
+    hedging improves the latency class's worst-case TTFT."""
+    def run(hedge):
+        rng = np.random.default_rng(5)
+        sys = _system() if hedge else ServingSystem(
+            "skylb", {"us": 1, "eu": 1}, replica_cfg=RCFG)
+        sys.replicas[0].cfg.speed_factor = 8.0
+        for i in range(6):
+            sys.submit(_req(100 + i, out_len=64,
+                            prompt=tuple(int(t) for t in
+                                         rng.integers(1, 5000, 64))))
+        lat = []
+        for i in range(4):
+            r = _req(i, out_len=8, slo="latency",
+                     prompt=tuple(int(t) for t in rng.integers(1, 5000, 64)))
+            sys.sim.after(0.2 + 0.2 * i, (lambda q: lambda: sys.submit(q))(r))
+            lat.append(r)
+        sys.run(until=600.0)
+        assert all(r.finished is not None for r in lat)
+        return max(r.ttft - r.issued for r in lat), sys
+    worst_off, _ = run(False)
+    worst_on, sys_on = run(True)
+    assert sys_on.metrics.hedged > 0
+    assert worst_on < worst_off
+    assert sys_on.metrics.summary()["unresolved"] == 0
+
+
+# ------------------------------------------------------------ tick router
+
+@pytest.fixture(scope="module")
+def router_parts(qwen_reduced, qwen_model_params):
+    return qwen_reduced, qwen_model_params[1]
+
+
+def _router(model_cfg, params, budget=1e-4):
+    from repro.routing.core import RoutingConfig
+    from repro.routing.policies import LeastLoad
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.router import InProcessRouter
+    router = InProcessRouter(cfg=RoutingConfig(
+        pushing="SP-P", cross_region=True, max_inflight_per_probe=4,
+        hedging=True, hedge_params=HedgeParams(ttft_budget_s=budget)))
+    ecfg = EngineConfig(page_size=16, n_pages=64, max_batch=1,
+                        max_seq_len=512, prefill_pad=16)
+    for region in ("us", "eu"):
+        lb = router.add_region(region, LeastLoad())
+        lb.add_engine(f"{region}-r0", Engine(model_cfg, params, ecfg))
+    return router
+
+
+def _gen(rng, vocab, n_new, slo="standard"):
+    from repro.serving.request import GenRequest, SamplingParams
+    return GenRequest(
+        prompt_tokens=tuple(int(t) for t in rng.integers(1, vocab, 48)),
+        sampling=SamplingParams(max_new_tokens=n_new), slo_class=slo)
+
+
+def test_router_hedge_clone_wins_exactly_once(router_parts):
+    """Real-engine tick path: the home engine is busy (max_batch=1 with a
+    long decode), so the hedge clone wins on the idle peer. The clone rid
+    never appears in results(); the primary rid carries the clone's
+    completion; the loser resolves exactly once."""
+    model_cfg, params = router_parts
+    router = _router(model_cfg, params)
+    rng = np.random.default_rng(0)
+    bg = _gen(rng, model_cfg.vocab, 150)
+    router.submit("us", bg)
+    for _ in range(8):                 # remote probes populate the snapshot
+        router.step()
+    lat = _gen(rng, model_cfg.vocab, 8, slo="latency")
+    router.submit("us", lat)
+    router.run_until_idle()
+    res = router.results()
+    assert set(res) == {bg.rid, lat.rid}          # no clone rid leaks
+    assert router.hedged == 1 and router.hedge_wins == 1
+    r = res[lat.rid]
+    assert r.rid == lat.rid
+    assert str(r.finish_reason).endswith("length") or len(
+        r.output_tokens) == 8
+    assert router.lbs["eu"].engines["eu-r0"].completions == 1
+    for reg in ("us", "eu"):
+        e = router.lbs[reg].engines[f"{reg}-r0"]
+        assert not e.running and not e.pending and not e.loading
+        # +1: the engine's reserved scratch page
+        assert e.alloc.used_pages == e.core.radix.cached_pages + 1
+
+
+def test_router_hedge_primary_wins_wasted_counted(router_parts):
+    """Idle home engine: the primary streams first, the clone is reaped on
+    the peer, and its burned prefill lands in wasted_work_tok."""
+    model_cfg, params = router_parts
+    router = _router(model_cfg, params)
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        router.step()
+    lat = _gen(rng, model_cfg.vocab, 8, slo="latency")
+    router.submit("us", lat)
+    router.run_until_idle()
+    res = router.results()
+    assert set(res) == {lat.rid}
+    assert res[lat.rid].output_tokens and len(res[lat.rid].output_tokens) == 8
+    assert router.hedged == 1 and router.hedge_wins == 0
+    # the clone either died queued (0 waste) or after prefill (>0): either
+    # way it resolved exactly once and the peer engine drained clean
+    eu = router.lbs["eu"].engines["eu-r0"]
+    assert eu.completions == 0
+    assert not eu.running and not eu.pending
+    assert router.wasted_work_tok >= 0

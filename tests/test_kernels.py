@@ -10,6 +10,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.paged_decode import paged_decode
+from repro.kernels.paged_verify import paged_verify
 from repro.kernels.ssd_scan import ssd_scan
 
 RNG = np.random.default_rng(42)
@@ -128,6 +129,79 @@ def test_paged_decode_ragged_sweep():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
 
 
+# ---------------------------------------------------------------- verify
+
+@pytest.mark.parametrize("B,H,K,hd,page,Ptot,npg,Q", [
+    (2, 4, 4, 32, 8, 16, 4, 2),
+    (3, 8, 2, 64, 16, 32, 8, 4),   # GQA, k_spec=3
+    (1, 4, 1, 32, 8, 8, 2, 3),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_verify_sweep(B, H, K, hd, page, Ptot, npg, Q, dtype):
+    q = _rand((B, Q, H, hd), dtype)
+    kp = _rand((Ptot, page, K, hd), dtype)
+    vp = _rand((Ptot, page, K, hd), dtype)
+    bt = jnp.asarray(RNG.integers(0, Ptot, size=(B, npg)), jnp.int32)
+    # lens count ALL valid tokens INCLUDING the Q candidates (>= Q)
+    lens = jnp.asarray(RNG.integers(Q, npg * page + 1, size=(B,)), jnp.int32)
+    out = paged_verify(q, kp, vp, bt, lens, interpret=True)
+    want = ref.paged_verify_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_verify_q1_matches_paged_decode():
+    """Q=1 degenerates to plain paged decode (same mask, same numbers)."""
+    B, H, K, hd, page, Ptot, npg = 2, 4, 2, 32, 8, 16, 4
+    q = _rand((B, H, hd), jnp.float32)
+    kp = _rand((Ptot, page, K, hd), jnp.float32)
+    vp = _rand((Ptot, page, K, hd), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, Ptot, size=(B, npg)), jnp.int32)
+    lens = jnp.asarray([5, 27], jnp.int32)
+    out = paged_verify(q[:, None], kp, vp, bt, lens, interpret=True)
+    want = paged_decode(q, kp, vp, bt, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(want),
+                               atol=1e-6)
+
+
+def test_paged_verify_causal_within_candidates():
+    """Candidate j must not see candidates j+1..Q-1: truncating the batch
+    to the first j+1 candidates cannot change query j's output."""
+    B, H, K, hd, page, Ptot, npg, Q = 1, 4, 2, 32, 8, 16, 4, 4
+    q = _rand((B, Q, H, hd), jnp.float32)
+    kp = _rand((Ptot, page, K, hd), jnp.float32)
+    vp = _rand((Ptot, page, K, hd), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, Ptot, size=(B, npg)), jnp.int32)
+    lens = jnp.asarray([20], jnp.int32)
+    full = np.asarray(paged_verify(q, kp, vp, bt, lens, interpret=True))
+    for j in range(Q):
+        part = np.asarray(paged_verify(
+            q[:, :j + 1], kp, vp, bt, lens - (Q - j - 1), interpret=True))
+        np.testing.assert_allclose(part[:, j], full[:, j], atol=2e-5)
+
+
+def test_paged_verify_ignores_garbage_pages():
+    """Block-table entries past the ragged edge may hold arbitrary int32
+    (the rollback contract: rejected-draft KV sits beyond the edge)."""
+    B, H, K, hd, page, Ptot, npg, Q = 2, 4, 2, 32, 8, 16, 4, 3
+    q = _rand((B, Q, H, hd), jnp.float32)
+    kp = _rand((Ptot, page, K, hd), jnp.float32)
+    vp = _rand((Ptot, page, K, hd), jnp.float32)
+    bt = np.asarray(RNG.integers(0, Ptot, size=(B, npg)), np.int32)
+    lens = np.asarray([12, Q], np.int32)
+    clean = jnp.asarray(bt.copy())
+    for i in range(B):
+        bt[i, (int(lens[i]) + page - 1) // page:] = RNG.integers(
+            -(2 ** 31), 2 ** 31 - 1)
+    bt, lens = jnp.asarray(bt), jnp.asarray(lens)
+    o1 = paged_verify(q, kp, vp, clean, lens, interpret=True)
+    o2 = paged_verify(q, kp, vp, bt, lens, interpret=True)
+    want = ref.paged_verify_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(want), atol=2e-5)
+
+
 # ---------------------------------------------------------------- ssd
 
 @pytest.mark.parametrize("B,H,S,P,G,N,chunk", [
@@ -180,4 +254,24 @@ def test_ops_force_interpret(monkeypatch):
     k = _rand((1, 2, 128, 32), jnp.float32)
     out = ops.flash_attention(q, k, k)
     want = ref.flash_attention_ref(q, k, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_ops_paged_verify_dispatch(monkeypatch):
+    """ops.paged_verify: CPU default hits the jnp oracle; with
+    REPRO_FORCE_INTERPRET=1 it runs the Pallas body in interpret mode —
+    both must agree with the reference."""
+    from repro.kernels import ops
+    B, H, K, hd, page, Ptot, npg, Q = 2, 4, 2, 32, 8, 16, 4, 3
+    q = _rand((B, Q, H, hd), jnp.float32)
+    kp = _rand((Ptot, page, K, hd), jnp.float32)
+    vp = _rand((Ptot, page, K, hd), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, Ptot, size=(B, npg)), jnp.int32)
+    lens = jnp.asarray([17, Q], jnp.int32)
+    want = ref.paged_verify_ref(q, kp, vp, bt, lens)
+    monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
+    out = ops.paged_verify(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    out = ops.paged_verify(q, kp, vp, bt, lens)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)

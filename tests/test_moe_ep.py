@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
 from repro.models import moe as moe_mod
 from repro.models import moe_ep
 
@@ -29,8 +30,7 @@ def test_ep_matches_pjit_single_device():
     x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, cfg.d_model)),
                     jnp.float32)
     y_ref, aux_ref = moe_mod.apply_moe(p, x, cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_local_mesh(1, 1)
     with mesh:
         assert moe_ep.ep_applicable(cfg, x.shape)
         y_ep, aux_ep = moe_ep.apply_moe_ep(p, x, cfg)
@@ -57,6 +57,7 @@ _SUBPROC = textwrap.dedent("""
     import dataclasses
     import numpy as np, jax, jax.numpy as jnp
     from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
     from repro.models import moe as moe_mod
     from repro.models import moe_ep
 
@@ -67,8 +68,7 @@ _SUBPROC = textwrap.dedent("""
     x = jnp.asarray(np.random.default_rng(0).normal(
         size=(4, 16, cfg.d_model)), jnp.float32)
     y_ref, _ = moe_mod.apply_moe(p, x, cfg)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_local_mesh(2, 4)
     with mesh:
         y_ep, _ = jax.jit(lambda p, x: moe_ep.apply_moe_ep(p, x, cfg))(p, x)
     err = float(jnp.max(jnp.abs(y_ref - y_ep)))

@@ -17,7 +17,8 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.replica import CostModelBackend, ReplicaCore, ReplicaCoreConfig
+from repro.replica import (CostModelBackend, CostParams, ReplicaCore,
+                           ReplicaCoreConfig)
 from repro.serving.jax_backend import JaxPagedBackend
 from repro.serving.request import GenRequest, SamplingParams
 
@@ -110,3 +111,33 @@ def test_sim_engine_replica_parity(qwen_reduced, qwen_model_params):
     assert core_sim.preemptions == core_jax.preemptions == 1
     assert core_sim.cancellations == core_jax.cancellations == 2
     assert core_sim.total_cached_tokens == core_jax.total_cached_tokens
+
+
+def test_spec_mode_replica_parity(qwen_reduced, qwen_model_params):
+    """Speculation ON for both backends — the cost model at acceptance
+    rate 1.0 vs the JAX engine with drafter == target (every greedy draft
+    matches) — must still make byte-identical decisions, now INCLUDING the
+    ("accept", rid, n) burst events the speculative step records."""
+    _, params = qwen_model_params
+    trace = _trace(qwen_reduced.vocab)
+    K = 3
+
+    core_sim = ReplicaCore(CFG, CostModelBackend(
+        CostParams(spec_k=K, spec_accept_rate=1.0)))
+    cached_sim = _drive(core_sim, trace)
+
+    backend = JaxPagedBackend(qwen_reduced, params, n_pages=CFG.n_pages,
+                              page_size=CFG.page_size, prefill_pad=16,
+                              spec_k=K, draft_cfg=qwen_reduced,
+                              draft_params=params)
+    core_jax = ReplicaCore(CFG, backend)
+    backend.bind(core_jax)
+    cached_jax = _drive(core_jax, trace)
+
+    assert core_sim.decisions == core_jax.decisions
+    assert cached_sim == cached_jax
+    accepts = [d for d in core_sim.decisions if d[0] == "accept"]
+    assert accepts and any(n > 1 for _, _, n in accepts)
+    assert core_sim.completions == core_jax.completions == 6
+    assert core_sim.spec_steps == core_jax.spec_steps > 0
+    assert core_sim.spec_tokens == core_jax.spec_tokens > 0

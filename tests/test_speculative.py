@@ -1,0 +1,211 @@
+"""Speculative decoding: draft-k/verify-1 inside the fused hot path.
+
+The acceptance rule (accept draft j iff it equals the token the TARGET
+samples at that position, then emit the target's n_acc+1 tokens) makes the
+emitted stream BYTE-IDENTICAL to the non-speculative engine for ANY
+drafter — a perfect drafter only changes throughput, an adversarial one
+only costs wasted drafts. These tests pin both ends plus the decision
+stream and the multi-token-per-step event drain."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import Engine, EngineConfig, GenRequest, SamplingParams
+
+ECFG = EngineConfig(page_size=8, n_pages=64, max_batch=4, max_seq_len=256,
+                    prefill_pad=16)
+K_SPEC = 3
+
+
+@pytest.fixture(scope="module")
+def drafter(qwen_reduced):
+    from repro.models import build_model
+    dcfg = dataclasses.replace(
+        qwen_reduced, name="drafter", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=1, d_ff=64, head_dim=16)
+    dparams = build_model(dcfg, jnp.float32).init(jax.random.PRNGKey(99))
+    return dcfg, dparams
+
+
+def _reqs(vocab, specs, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for n_prompt, kw in specs:
+        out.append(GenRequest(
+            prompt_tokens=tuple(int(t) for t in
+                                rng.integers(1, vocab, size=n_prompt)),
+            sampling=SamplingParams(**kw)))
+    return out
+
+
+SPECS = [(10, dict(max_new_tokens=12)), (23, dict(max_new_tokens=7)),
+         (17, dict(max_new_tokens=16, temperature=0.8, seed=5)),
+         (5, dict(max_new_tokens=10, temperature=0.6, top_k=8, seed=9))]
+
+
+def _run(model_cfg, params, ecfg, *, draft=None, events=None):
+    dcfg, dparams = draft if draft is not None else (None, None)
+    eng = Engine(model_cfg, params, ecfg, seed=0,
+                 draft_cfg=dcfg, draft_params=dparams)
+    reqs = _reqs(model_cfg.vocab, SPECS)
+    if events is not None:
+        for r in reqs:
+            r.on_token = (lambda req, tok, idx, t:
+                          events.append((req.rid, tok, idx)))
+    res = eng.generate(reqs)
+    return eng, [tuple(r.output_tokens) for r in res]
+
+
+@pytest.mark.parametrize("bucketed,packed", [(True, True), (True, False),
+                                             (False, True)])
+def test_perfect_drafter_byte_identical(qwen_reduced, qwen_model_params,
+                                        bucketed, packed):
+    """drafter == target: acceptance is exactly 1.0 and the stream is
+    byte-identical to the non-speculative engine, across the bucketed and
+    packed-prefill configurations (greedy AND sampled requests)."""
+    _, params = qwen_model_params
+    ecfg = dataclasses.replace(ECFG, bucket_shapes=bucketed,
+                               packed_prefill=packed)
+    _, base = _run(qwen_reduced, params, ecfg)
+    eng, out = _run(qwen_reduced, params,
+                    dataclasses.replace(ecfg, spec_k=K_SPEC),
+                    draft=(qwen_reduced, params))
+    assert out == base
+    b = eng.backend
+    assert b.spec_dispatches > 0
+    assert b.spec_accepted == b.spec_drafted          # acceptance 1.0
+    # speculation actually batched tokens: more emitted than decode steps
+    assert eng.core.spec_tokens > eng.core.spec_steps
+
+
+def test_adversarial_drafter_graceful(qwen_reduced, qwen_model_params,
+                                      drafter):
+    """A random-init drafter with DIFFERENT dims: acceptance collapses but
+    the engine never emits an unverified token — the stream stays
+    byte-identical to the baseline and every request completes."""
+    _, params = qwen_model_params
+    _, base = _run(qwen_reduced, params, ECFG)
+    eng, out = _run(qwen_reduced, params,
+                    dataclasses.replace(ECFG, spec_k=K_SPEC),
+                    draft=drafter)
+    assert out == base
+    b = eng.backend
+    assert b.spec_drafted > 0
+    assert b.spec_accepted / b.spec_drafted < 0.2     # ~0 acceptance
+    assert eng.completions == len(SPECS)
+
+
+def test_spec_stream_multi_token_ordering(qwen_reduced, qwen_model_params):
+    """PR 5 streaming stays correct when a step appends SEVERAL tokens to
+    one sequence: every request's token events arrive with contiguous
+    `index` 0..n-1, in order, exactly once — and match the final result."""
+    _, params = qwen_model_params
+    events: list = []
+    eng, out = _run(qwen_reduced, params,
+                    dataclasses.replace(ECFG, spec_k=K_SPEC),
+                    draft=(qwen_reduced, params), events=events)
+    per = {}
+    for rid, tok, idx in events:
+        per.setdefault(rid, []).append((idx, tok))
+    assert len(per) == len(SPECS)
+    for rid, got in per.items():
+        res = eng.results[rid]
+        assert [i for i, _ in got] == list(range(len(res.output_tokens)))
+        assert tuple(t for _, t in got) == res.output_tokens
+    # at least one step really delivered > 1 token for a sequence
+    assert eng.core.spec_tokens > eng.core.spec_steps
+
+
+def test_accept_events_and_budget_truncation(qwen_reduced,
+                                             qwen_model_params):
+    """The core records an ("accept", rid, n) decision per sequence per
+    speculative step, and n never exceeds the request's remaining token
+    budget (done() truncation)."""
+    _, params = qwen_model_params
+    eng = Engine(qwen_reduced, params,
+                 dataclasses.replace(ECFG, spec_k=K_SPEC), seed=0,
+                 draft_cfg=qwen_reduced, draft_params=params)
+    eng.core.decisions = []                       # start recording
+    reqs = _reqs(qwen_reduced.vocab, [(9, dict(max_new_tokens=5)),
+                                      (12, dict(max_new_tokens=9))])
+    res = eng.generate(reqs)
+    accepts = [d for d in eng.core.decisions if d[0] == "accept"]
+    assert accepts
+    per = {}
+    for _, rid, n in accepts:
+        assert 1 <= n <= K_SPEC + 1
+        per[rid] = per.get(rid, 0) + n
+    for r in res:
+        # the first token comes from prefill; every later one from an
+        # accept burst — the counts must reconcile exactly
+        assert per[r.rid] == len(r.output_tokens) - 1
+    # exact budget: 5 and 9 tokens, never a token past max_new_tokens
+    assert sorted(len(r.output_tokens) for r in res) == [5, 9]
+
+
+def test_cost_model_spec_decode_many():
+    """CostModelBackend mirrors speculation analytically: spec_k>0 turns
+    decode into multi-token accept bursts with the SAME decision-stream
+    shape, the acceptance-rate knob sets the burst length distribution,
+    and rate=1.0 always yields k+1 tokens."""
+    from repro.core.simulator import ReplicaConfig, ReplicaSim, Request, Sim
+
+    def run(rate):
+        sim = Sim()
+        cfg = ReplicaConfig(kv_budget=4096, spec_k=K_SPEC,
+                            spec_accept_rate=rate)
+        r = ReplicaSim(sim, "r0", "us", cfg)
+        r.core.decisions = []                     # record the stream
+        for i in range(3):
+            r.enqueue(Request(
+                rid=i, user_id="u", session_key=f"s{i}", region="us",
+                prompt_tokens=tuple(range(8)), output_len=12,
+                output_tokens=tuple(range(100, 112))))
+        sim.run(until=300.0)
+        return r
+
+    r1 = run(1.0)
+    assert r1.core.completions == 3
+    accepts = [d for d in r1.core.decisions if d[0] == "accept"]
+    assert accepts
+    # rate 1.0: every burst is k+1 tokens (except the budget-truncated tail)
+    assert all(n == K_SPEC + 1 for _, _, n in accepts[:-3])
+    for i in range(3):
+        # prefill emits token 0; accept bursts cover the remaining 11
+        assert sum(n for _, rid, n in accepts if rid == i) == 11
+    # the emitted tokens are still the request's own stream, in order
+    r0 = run(0.0)
+    assert r0.core.completions == 3
+    # rate 0: one token per seq per step, like plain decode
+    assert all(n == 1 for d in r0.core.decisions if d[0] == "accept"
+               for n in [d[2]])
+    assert r0.core.spec_steps > r1.core.spec_steps
+
+
+def test_cost_model_acceptance_coin_deterministic():
+    """The synthetic acceptance coin is a pure function of (rid, pos, j) —
+    two identical runs produce identical decision streams."""
+    from repro.core.simulator import ReplicaConfig, ReplicaSim, Request, Sim
+
+    def run():
+        sim = Sim()
+        r = ReplicaSim(sim, "r0", "us", ReplicaConfig(
+            kv_budget=4096, spec_k=K_SPEC, spec_accept_rate=0.6))
+        r.core.decisions = []
+        for i in range(4):
+            r.enqueue(Request(
+                rid=i, user_id="u", session_key=f"s{i}", region="us",
+                prompt_tokens=tuple(range(6)), output_len=15,
+                output_tokens=tuple(range(200, 215))))
+        sim.run(until=300.0)
+        return [d for d in r.core.decisions if d[0] == "accept"]
+
+    a, b = run(), run()
+    assert a == b
+    assert any(n > 1 for _, _, n in a) and any(n < K_SPEC + 1
+                                               for _, _, n in a)
