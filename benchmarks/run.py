@@ -47,6 +47,10 @@ SUMMARY_KEYS = frozenset({
     # all deterministic (threefry PRNG, fixed seeds)
     "spec_tokens_per_dispatch", "acceptance_rate", "exact_match_ok",
     "verify_ok",
+    # multi-process plane gate (serving.multiprocess): the kill -9 drill
+    # must lose zero requests — both are deterministic 0/1 outcomes
+    # (`unresolved` is already matched above); wall-clock tok/s stays out
+    "drill_ok",
 })
 
 

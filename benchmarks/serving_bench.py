@@ -22,6 +22,13 @@ prompts through an engine whose host tier is on, once with the H2D page
 staging dispatched concurrently with decode (overlap_loads=True, the
 default) and once forced synchronous. Wall-clock steps/s for both runs are
 reported ungated; host_hits_tok confirms the replay actually load-backs.
+
+The multiprocess section runs the SAME cost-model engines and workload
+twice — through the in-process tick router and through the socket plane
+(repro.plane: real processes, real TCP, sender-paced WAN delay) — then
+kill -9s a replica with decode in flight. Gated: `unresolved` == 0 and
+`drill_ok` (the crash loses zero requests). Ungated: the two wall-clock
+tok/s numbers (process parallelism vs socket/codec overhead).
 """
 from __future__ import annotations
 
@@ -86,6 +93,7 @@ def main(smoke: bool = False) -> dict:
     host_tier = _host_tier_overlap(model_cfg, params)
     speculation = _speculation(model_cfg, params, reqs, ecfg)
     hedging = _hedging(smoke)
+    multiprocess = _multiprocess(smoke)
 
     bound = (n_buckets(ecfg.max_batch)
              * n_buckets(-(-ecfg.max_seq_len // ecfg.page_size)))
@@ -105,6 +113,7 @@ def main(smoke: bool = False) -> dict:
         "host_tier": host_tier,
         "speculation": speculation,
         "hedging": hedging,
+        "multiprocess": multiprocess,
     }
     for name, row in (("bucketed", bucketed), ("exact", exact)):
         print(f"[serving] {name:9s} {row['steps']:4d} steps "
@@ -133,7 +142,102 @@ def main(smoke: bool = False) -> dict:
           f"{hedging['off_ttft_p99_s']:.3f}s -> {hedging['on_ttft_p99_s']:.3f}s"
           f" ({hedging['hedge_n']} hedged, {hedging['hedge_wins_n']} wins, "
           f"{hedging['hedge_wasted_tok']} wasted tok)")
+    print(f"[serving] multiprocess: {multiprocess['procs_tok_s_wall']:.1f}"
+          f" tok/s over {multiprocess['n_processes']} processes vs "
+          f"{multiprocess['inproc_tok_s_wall']:.1f} in-process "
+          f"({multiprocess['procs_speedup_wall']:.2f}x); kill -9 drill "
+          f"re-dispatched {multiprocess['drill_redispatched_n']}, "
+          f"unresolved {multiprocess['unresolved']} (gate == 0)")
     return out
+
+
+def _multiprocess(smoke: bool) -> dict:
+    """The multi-process socket plane (repro.plane) vs the in-process tick
+    router, SAME cost-model engines, SAME workload, SAME RoutingCore.
+
+    Gated (deterministic): `unresolved` == 0 and `drill_ok` == 1 after a
+    kill -9 replica drill — a crash with decode in flight must lose ZERO
+    requests (stale heartbeats -> target removed -> stranded work
+    re-dispatched). Ungated (wall-clock, machine-local): the two tok/s
+    numbers — real process parallelism vs socket/codec overhead."""
+    from repro.frontend import Client, RequestState, RouterHost
+    from repro.plane import CostEngine, PlaneConfig, ServingPlane
+    from repro.routing import build_routing
+    from repro.serving import GenRequest, InProcessRouter, SamplingParams
+
+    n = 10 if smoke else 24
+    max_new, tscale = 12, 0.01
+
+    def reqs():
+        rng = np.random.default_rng(5)
+        return [GenRequest(
+            prompt_tokens=tuple(int(x) for x in
+                                rng.integers(1, 5000, size=20)),
+            sampling=SamplingParams(max_new_tokens=max_new))
+            for _ in range(n)]
+
+    def skew(i):    # diurnal peak on us
+        return "us" if i % 3 < 2 else "eu"
+
+    # in-process reference: same RoutingCore over the tick transport,
+    # engines stepped serially in this one process
+    router = InProcessRouter.from_spec(build_routing("skylb"))
+    for region in ("us", "eu"):
+        lb = router.add_region(region)
+        for k in range(2):
+            lb.add_engine(f"{region}-r{k}", CostEngine(time_scale=tscale))
+    client = Client(RouterHost(router))
+    t0 = time.perf_counter()
+    handles = [client.submit(r, region=skew(i))
+               for i, r in enumerate(reqs())]
+    client.drain()
+    inproc_wall = time.perf_counter() - t0
+    assert all(h.state is RequestState.FINISHED for h in handles)
+    toks = sum(len(h.result.output_tokens) for h in handles)
+
+    # the socket plane: one OS process per engine and per LB
+    plane = ServingPlane(PlaneConfig(
+        regions=("us", "eu"), replicas=2, backend="cost",
+        wan_delay_ms=5.0, time_scale=tscale, stale_after_s=0.3)).start()
+    host = plane.host()
+    try:
+        pclient = Client(host)
+        t0 = time.perf_counter()
+        ph = [pclient.submit(r, region=skew(i))
+              for i, r in enumerate(reqs())]
+        pclient.drain()
+        procs_wall = time.perf_counter() - t0
+        assert all(h.state is RequestState.FINISHED for h in ph)
+        ptoks = sum(len(h.result.output_tokens) for h in ph)
+
+        # kill -9 drill: crash a replica with decode in flight
+        drill = [pclient.submit(r, region="us") for r in reqs()[:6]]
+        while not any(h.events for h in drill):
+            pclient.poll()
+        plane.kill_replica("us-r0")
+        t1 = time.perf_counter()
+        while any(not h.done for h in drill) \
+                and time.perf_counter() - t1 < 60:
+            pclient.poll()
+        drill_ok = all(h.state is RequestState.FINISHED for h in drill)
+        m = plane.metrics()
+    finally:
+        host.close()
+        plane.shutdown()
+    assert drill_ok, "kill -9 drill lost requests"
+    return {
+        # CI-gated: the crash drill loses nothing
+        "unresolved": m["unresolved"],
+        "drill_ok": 1.0 if drill_ok else 0.0,
+        # ungated detail + wall-clock (names dodge the gated key set)
+        "n_requests": n,
+        "n_processes": m["n_processes"],
+        "drill_redispatched_n": m["redispatched"],
+        "inproc_tok_s_wall": round(toks / inproc_wall, 1),
+        "procs_tok_s_wall": round(ptoks / procs_wall, 1),
+        "procs_speedup_wall": round((ptoks / procs_wall)
+                                    / max(toks / inproc_wall, 1e-9), 2),
+    }
 
 
 def _host_tier_overlap(model_cfg, params) -> dict:

@@ -1,35 +1,44 @@
-"""End-to-end multi-region serving driver: the full SkyLB two-layer system
-(prefix-trie routing + SP-P) over SIX real JAX engines in three regions,
-driven through the UNIFIED front API (`repro.frontend.Client`): every
-request is a handle with an incremental token-event stream, the skewed
-multi-turn workload forces cross-region offloading, and the lifecycle
-extras — `handle.cancel()` mid-stream and an expired `deadline_s` — are
-exercised against real paged KV caches.
+"""End-to-end multi-region serving driver, two substrates, ONE front API.
+
+Default (in-process): the full SkyLB two-layer system (prefix-trie routing
++ SP-P) over SIX real JAX engines in three regions, driven through the
+UNIFIED front API (`repro.frontend.Client`): every request is a handle
+with an incremental token-event stream, the skewed multi-turn workload
+forces cross-region offloading, and the lifecycle extras —
+`handle.cancel()` mid-stream and an expired `deadline_s` — are exercised
+against real paged KV caches.
+
+`--procs`: the SAME story over REAL process boundaries — N regions x M
+replica processes (cost-model backend: JAX-free children, CI-cheap)
+behind one LB process per region, wired over TCP with sender-paced WAN
+delay, driven through the same `Client`. Ends with the two crash drills:
+kill -9 a replica mid-decode (stale heartbeats -> target removed ->
+stranded work re-dispatched, ZERO requests lost) and kill -9 a whole LB
+(the client re-homes its unresolved requests to a survivor, which adopts
+the orphaned replicas). Exits non-zero if any request is left unresolved.
 
 Run:  PYTHONPATH=src python examples/serve_multiregion.py [--requests 36]
+      PYTHONPATH=src python examples/serve_multiregion.py --procs \
+          [--requests 12] [--regions us,eu] [--replicas 2]
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.configs import get_config
-from repro.frontend import Client, RequestState, RouterHost
-from repro.models import build_model
-from repro.routing import build_routing
-from repro.serving import (Engine, EngineConfig, GenRequest, InProcessRouter,
-                           SamplingParams)
 
 REGIONS = ("us", "eu", "asia")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=36)
-    ap.add_argument("--max-new", type=int, default=12)
-    args = ap.parse_args()
+def run_inprocess(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.frontend import Client, RequestState, RouterHost
+    from repro.models import build_model
+    from repro.routing import build_routing
+    from repro.serving import (Engine, EngineConfig, GenRequest,
+                               InProcessRouter, SamplingParams)
 
     cfg = get_config("qwen3-0.6b").reduced()
     model = build_model(cfg, jnp.float32)
@@ -121,6 +130,136 @@ def main():
         assert hit_any > 0.2, "expected radix prefix reuse across turns"
     print("serve_multiregion OK — streaming front API + cancel/deadline + "
           "cross-region offload work")
+
+
+def _drain(client, handles, timeout_s=60.0):
+    t0 = time.monotonic()
+    while any(not h.done for h in handles) \
+            and time.monotonic() - t0 < timeout_s:
+        client.poll()
+    return [h.state.value for h in handles]
+
+
+def run_procs(args):
+    from repro.frontend import Client, RequestState
+    from repro.plane import PlaneConfig, ServingPlane
+    from repro.serving import GenRequest, SamplingParams
+
+    regions = tuple(args.regions.split(","))
+    assert len(regions) >= 2, "--procs needs at least two regions"
+    rng = np.random.default_rng(1)
+
+    def req(max_new, deadline_s=None):
+        return GenRequest(
+            prompt_tokens=tuple(int(x) for x in
+                                rng.integers(1, 5000,
+                                             size=int(rng.integers(12, 32)))),
+            deadline_s=deadline_s,
+            sampling=SamplingParams(max_new_tokens=max_new))
+
+    t0 = time.time()
+    plane = ServingPlane(PlaneConfig(
+        regions=regions, replicas=args.replicas, backend="cost",
+        wan_delay_ms=10.0, time_scale=0.02, stale_after_s=0.3)).start()
+    host = plane.host()
+    try:
+        client = Client(host)
+        pids = {n: plane.pid_of(n) for n in plane.procs}
+        print(f"[procs] plane up: {len(plane.procs)} processes "
+              f"({len(regions)} LBs, {len(plane.replica_addrs)} replicas) "
+              f"pids={sorted(pids.values())}")
+
+        # -- phase 1: diurnal-skewed streaming workload ------------------
+        # 2/3 of the offered load enters at the peak region (regions[0]);
+        # its LB must forward the overflow to the off-peak peers over the
+        # sender-paced WAN links.
+        hs = [client.submit(req(args.max_new),
+                            region=regions[0] if i % 3 < 2
+                            else regions[i % len(regions)])
+              for i in range(args.requests)]
+        states = _drain(client, hs)
+        assert states == ["finished"] * len(hs), f"workload: {states}"
+        for h in hs:    # streaming contract holds across process hops
+            assert [e.index for e in h.events] == \
+                list(range(len(h.result.output_tokens)))
+
+        # -- phase 2: lifecycle extras over the wire ---------------------
+        hc = client.submit(req(500), region=regions[0])      # cancel
+        while not hc.events:
+            client.poll()
+        hc.cancel()
+        hd = client.submit(req(900, deadline_s=0.15),        # LB-judged
+                           region=regions[0])
+        he = client.submit(req(8, deadline_s=-1.0),          # client-judged
+                           region=regions[0])
+        _drain(client, [hc, hd, he])
+        assert hc.state is RequestState.CANCELLED
+        assert hd.state is RequestState.DEADLINE
+        assert he.state is RequestState.DEADLINE and he.events == []
+
+        # -- phase 3: kill -9 a replica mid-decode -----------------------
+        victim = f"{regions[0]}-r0"
+        drill = [client.submit(req(30), region=regions[0]) for _ in range(6)]
+        while not any(h.events for h in drill):
+            client.poll()
+        pid = plane.kill_replica(victim)
+        print(f"[procs] drill 1: SIGKILL {victim} (pid {pid}) mid-decode")
+        states = _drain(client, drill)
+        assert states == ["finished"] * len(drill), f"replica drill: {states}"
+        assert all(len(h.result.output_tokens) == 30 for h in drill)
+        # snapshot BEFORE drill 2 kills the LB holding these counters
+        m1 = plane.metrics()
+        assert m1["redispatched"] >= 1, "drill 1 never exercised failover"
+
+        # -- phase 4: kill -9 a whole LB, survivor adopts the orphans ----
+        drill2 = [client.submit(req(20), region=regions[0]) for _ in range(5)]
+        while not any(h.events for h in drill2):
+            client.poll()
+        pid = plane.kill_lb(regions[0])
+        plane.adopt(regions[1], regions[0])
+        print(f"[procs] drill 2: SIGKILL lb-{regions[0]} (pid {pid}); "
+              f"{regions[1]} adopts its replicas")
+        states = _drain(client, drill2)
+        # in-flight requests may legitimately resolve ABORT after two
+        # failed re-homes; non-in-flight ones must never be lost
+        assert all(s in ("finished", "abort") for s in states), states
+        assert not host.unresolved, "client left requests unresolved"
+
+        m = plane.metrics()
+        wall = time.time() - t0
+        resolved = sum(1 for h in hs + [hc, hd, he] + drill + drill2
+                       if h.done)
+        print(f"[procs] {resolved} requests resolved in {wall:.1f}s across "
+              f"{m['n_processes']} processes; "
+              f"redispatched={m1['redispatched']} forwards={m1['forwards']} "
+              f"resubmitted={sum(host.resubmitted.values())} "
+              f"unresolved={m['unresolved']}")
+        assert m["unresolved"] == 0, "plane lost requests"
+        print("serve_multiregion --procs OK — sockets + real processes + "
+              "kill -9 drills, zero requests lost")
+    finally:
+        host.close()
+        plane.shutdown()
+    leaked = [p for p in plane.procs.values() if p.is_alive()]
+    assert not leaked, f"leaked children: {leaked}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=36)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--procs", action="store_true",
+                    help="multi-process plane (sockets + cost backend) "
+                         "instead of the in-process JAX fleet")
+    ap.add_argument("--regions", default="us,eu",
+                    help="--procs: comma-separated region list")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="--procs: replica processes per region")
+    args = ap.parse_args()
+    if args.procs:
+        run_procs(args)
+    else:
+        run_inprocess(args)
 
 
 if __name__ == "__main__":

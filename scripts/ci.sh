@@ -26,6 +26,20 @@ echo "=== examples smoke (front API) ==="
 python examples/quickstart.py
 python examples/serve_multiregion.py --requests 6
 
+echo "=== multi-process plane smoke (sockets + kill -9 drills) ==="
+# the same example over REAL processes and TCP (cost backend, JAX-free
+# children): streaming/cancel/deadline across process boundaries plus both
+# crash drills. A hard timeout bounds a hung plane, and the orphan check
+# fails CI if ANY spawned process outlives the run (the plane must reap
+# everything even after two SIGKILL drills).
+timeout 300 python examples/serve_multiregion.py --procs --requests 6
+# [.] keeps the pattern from matching this script's own text in ps output
+if pgrep -f "multiprocessing[.]spawn" > /dev/null; then
+    echo "FAIL: orphaned plane processes survived the --procs smoke" >&2
+    pgrep -af "multiprocessing[.]spawn" >&2
+    exit 1
+fi
+
 echo "=== smoke benchmarks ==="
 # fresh per-figure outputs land in a scratch dir (the committed
 # artifacts/bench-smoke/ stays the baseline); benchmarks.run also writes the

@@ -18,6 +18,16 @@ from repro.frontend.client import (Client, EngineHost, RouterHost, SimHost,
                                    state_of, wire_gen_request)
 
 __all__ = [
-    "Client", "EngineHost", "RequestHandle", "RequestState", "RouterHost",
-    "SimHost", "TokenEvent", "state_of", "wire_gen_request",
+    "Client", "EngineHost", "ProcessHost", "RequestHandle", "RequestState",
+    "RouterHost", "SimHost", "TokenEvent", "state_of", "wire_gen_request",
 ]
+
+
+def __getattr__(name):
+    # The fourth host — Client over the multi-process socket plane — lives
+    # in repro.plane and is loaded lazily to keep this package import-light
+    # (replica child processes import the plane without the frontend).
+    if name == "ProcessHost":
+        from repro.plane.host import ProcessHost
+        return ProcessHost
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

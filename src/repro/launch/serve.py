@@ -5,10 +5,16 @@ modes drive the UNIFIED front API (`repro.frontend.Client`): submit returns
 a streaming `RequestHandle`, and the reported TTFT comes from each
 request's FIRST TokenEvent, not from the terminal result.
 
+A third mode, `--procs`, serves the same front API from the multi-process
+socket plane (`repro.plane`): one LB process per region, cost-model
+replica processes, TCP transport with sender-paced WAN delay. JAX is not
+imported in that mode (nor in any of its children).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b-reduced \
       --requests 24 --max-new 16
   PYTHONPATH=src python -m repro.launch.serve --multiregion --variant skylb
+  PYTHONPATH=src python -m repro.launch.serve --procs --replicas 2
 """
 from __future__ import annotations
 
@@ -16,16 +22,10 @@ import argparse
 import statistics
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.frontend import Client, EngineHost, RequestState, RouterHost
-from repro.models import build_model
-from repro.routing import build_routing
-from repro.serving import (Engine, EngineConfig, GenRequest, InProcessRouter,
-                           SamplingParams)
+from repro.frontend import Client, RequestState
+from repro.serving import GenRequest, SamplingParams
 
 REGIONS = ("us", "eu", "asia")
 
@@ -65,6 +65,14 @@ def _drain_and_stats(client: Client, handles: list) -> dict:
 
 
 def serve_single(arch: str, n_requests: int, max_new: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.frontend import EngineHost
+    from repro.models import build_model
+    from repro.serving import Engine, EngineConfig
+
     cfg = get_config(arch)
     model = build_model(cfg, jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
@@ -82,6 +90,15 @@ def serve_single(arch: str, n_requests: int, max_new: int) -> dict:
 
 def serve_multiregion(arch: str, n_requests: int, max_new: int,
                       variant: str = "skylb") -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.frontend import RouterHost
+    from repro.models import build_model
+    from repro.routing import build_routing
+    from repro.serving import Engine, EngineConfig, InProcessRouter
+
     cfg = get_config(arch)
     model = build_model(cfg, jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
@@ -108,16 +125,55 @@ def serve_multiregion(arch: str, n_requests: int, max_new: int,
     return out
 
 
+def serve_procs(n_requests: int, max_new: int, *, variant: str = "skylb",
+                regions: tuple = ("us", "eu"), replicas: int = 2) -> dict:
+    """The multi-process plane behind the same unified front API: real
+    LB / replica processes over TCP, cost-model engines (no JAX anywhere
+    in the process tree), sender-paced WAN delay."""
+    from repro.plane import PlaneConfig, ServingPlane
+
+    plane = ServingPlane(PlaneConfig(
+        regions=regions, replicas=replicas, variant=variant,
+        backend="cost", wan_delay_ms=10.0, time_scale=0.02)).start()
+    host = plane.host()
+    try:
+        client = Client(host)
+        reqs = make_requests(5000, n_requests, max_new=max_new)
+        handles = [client.submit(req, region=regions[0] if i % 4 < 2
+                                 else regions[i % len(regions)])
+                   for i, req in enumerate(reqs)]
+        out = _drain_and_stats(client, handles)
+        m = plane.metrics()
+        out.update({"processes": m["n_processes"],
+                    "forwards": m["forwards"],
+                    "unresolved": m["unresolved"]})
+    finally:
+        host.close()
+        plane.shutdown()
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b-reduced")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--multiregion", action="store_true")
+    ap.add_argument("--procs", action="store_true",
+                    help="multi-process socket plane (cost backend)")
+    ap.add_argument("--regions", default="us,eu",
+                    help="--procs: comma-separated region list")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="--procs: replica processes per region")
     ap.add_argument("--variant", default="skylb",
                     help="routing variant (see repro.routing.VARIANTS)")
     args = ap.parse_args()
-    if args.multiregion:
+    if args.procs:
+        out = serve_procs(args.requests, args.max_new,
+                          variant=args.variant.lower(),
+                          regions=tuple(args.regions.split(",")),
+                          replicas=args.replicas)
+    elif args.multiregion:
         out = serve_multiregion(args.arch, args.requests, args.max_new,
                                 args.variant.lower())
     else:

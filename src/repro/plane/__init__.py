@@ -1,0 +1,31 @@
+"""The multi-process serving plane: the `repro.routing.Transport` protocol
+over real sockets, engines in their own OS processes, wall-clock WAN delay
+injection, and crash drills on real PIDs.
+
+    wire       framed msgpack-or-JSON codec + the deadline clock-ownership
+               rule (who may judge `deadline_s`, and on whose clock)
+    mailbox    Conn/Node: framed, sender-paced (WAN delay) connections and
+               the one-inbox-per-process recv model
+    transport  SocketTransport — the Transport protocol over a Node
+    replica    ReplicaProcess: an engine (cost-model or JAX) + recv loop +
+               heartbeat publisher in a spawned process
+    lb         LBProcess: one RoutingCore per region over SocketTransport
+    host       ServingPlane (launcher/control) + ProcessHost (the
+               frontend.Client adapter)
+    metrics    per-process snapshot merge into the RunMetrics schema
+
+The tick-based `repro.serving.router.InProcessRouter` remains the
+deterministic-parity reference for the same RoutingCore; this package is
+the same brain on real wires (tests assert the decision streams match).
+"""
+from repro.plane.host import PlaneConfig, ProcessHost, ServingPlane
+from repro.plane.lb import LBServer, LBSpec
+from repro.plane.metrics import merge_snapshots
+from repro.plane.replica import CostEngine, ReplicaSpec
+from repro.plane.transport import SocketTransport
+
+__all__ = [
+    "PlaneConfig", "ProcessHost", "ServingPlane",
+    "LBServer", "LBSpec", "merge_snapshots",
+    "CostEngine", "ReplicaSpec", "SocketTransport",
+]

@@ -1,0 +1,571 @@
+"""`LBProcess` — one region's load balancer in its own OS process.
+
+Hosts exactly one `repro.routing.RoutingCore` (byte-identical to the one
+the simulator and the tick router run) over a `SocketTransport`.  The
+process owns:
+
+    the accept loop      clients submit/cancel here; peer LBs and the
+                         launcher's control channel attach here too
+    heartbeat state      replica ``hb`` frames and peer ``rhb`` frames land
+                         in freshness tables; the PROBE TIMERS feed them to
+                         `core.refresh_local` / `core.refresh_remote` — so
+                         the core sees the same stale-snapshot regime as on
+                         every other transport, just against real clocks
+    deadline ownership   the accepting LB stamps `arrival_s` on ITS clock
+                         and keeps an absolute-expiry table for queued and
+                         dispatched requests; expiry fires an explicit
+                         ``cancel`` frame (replicas never judge deadlines —
+                         the cross-process clock-skew rule in
+                         repro.plane.wire)
+    in-flight tracking   every deliver is recorded; when a replica's
+                         heartbeats go stale (kill -9) or its socket drops,
+                         the LB removes the target and RE-DISPATCHES the
+                         in-flight requests — the paper's failover path on
+                         real PIDs
+    the hedge race       clones raced to a peer region; first token wins,
+                         the loser leg is reaped through the idempotent
+                         cancel path, and the clone's stream/result are
+                         re-keyed to the primary rid before reaching the
+                         client
+    KV pull relay        ``kvpull`` -> best local replica ``kvfetch`` ->
+                         ``kvpages`` back to the requester; the requester
+                         parks the request and attaches the payload to the
+                         eventual deliver frame
+
+Reply routing: token/admit/result frames carry the ORIGIN region (the LB
+that accepted the request from a client).  A replica sends to its own LB;
+an LB relays anything whose origin is not itself to that peer — so a
+forwarded request's stream finds its way home across regions without
+replicas ever dialing foreign LBs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import sys
+import time
+from typing import Optional
+
+from repro.plane import wire
+from repro.plane.mailbox import Node
+from repro.plane.transport import SocketTransport
+from repro.routing import RoutingCore, TargetView, build_routing
+from repro.serving.request import (GenRequest, GenResult,
+                                   cancel_finish_reason)
+
+
+@dataclasses.dataclass(frozen=True)
+class LBSpec:
+    """Everything an LB child needs, picklable for mp spawn."""
+    region: str
+    variant: str = "skylb"
+    replicas: tuple = ()                # ((rid, [host, port]), ...)
+    probe_interval_s: float = 0.05
+    remote_probe_interval_s: float = 0.1
+    stale_after_s: float = 0.4
+    local_delay_ms: float = 0.0
+    pull_timeout_s: float = 2.0
+    cfg_overrides: tuple = ()           # (("max_inflight_per_probe", 2), ..)
+
+
+class LBServer:
+    """The event loop around one RoutingCore + SocketTransport."""
+
+    def __init__(self, spec: LBSpec):
+        self.spec = spec
+        self.region = spec.region
+        self.node = Node()
+        rspec = build_routing(spec.variant)
+        self.policy = rspec.local_policy()
+        remote = rspec.remote_policy() if rspec.remote_policy else None
+        cfg = rspec.make_config(**dict(spec.cfg_overrides))
+        self.transport = SocketTransport(
+            self.node, self.region, stale_after_s=spec.stale_after_s,
+            on_dispatch=self._track_dispatch, on_pull=self._park_pull,
+            on_hedge=self._hedge_start, origin_of=self._origin_of)
+        self.transport.on_forward = self._track_forward
+        self.core = RoutingCore(self.region, self.policy, remote, cfg,
+                                self.transport)
+        self.running = True
+        # ---- state tables
+        self.hb_views: dict[str, dict] = {}       # replica -> latest view
+        self.peer_views: dict[str, dict] = {}     # region -> latest rhb
+        self.peers: dict[str, float] = {}         # region -> link delay_s
+        self.inflight: dict[int, tuple] = {}      # rid -> (req, target)
+        self.origin_map: dict[int, str] = {}      # rid -> origin region
+        self.client_of: dict[int, object] = {}    # rid -> client Conn
+        self.fwd_to: dict[int, str] = {}          # rid -> peer forwarded to
+        self.expiry: dict[int, float] = {}        # rid -> abs deadline (my
+                                                  # clock — I own it)
+        self.pulls: dict[int, tuple] = {}         # rid -> (req, peer,
+                                                  # target, plen, ptok, due)
+        self.hedge_state: dict[int, dict] = {}    # primary rid -> race
+        self.clone_of: dict[int, int] = {}        # clone rid -> primary rid
+        self.known_replicas: set[str] = set()
+        self.dead_targets: set[str] = set()
+        self.events: list[tuple[float, str]] = []
+        # ---- counters
+        self.issued = 0
+        self.resolved = 0
+        self.redispatched = 0
+        self.hedge_wins = 0
+        self.wasted_work_tok = 0
+        self._t0 = time.monotonic()
+        self._probe_due = 0.0
+        self._rprobe_due = 0.0
+        self._publish_due = 0.0
+        self._sweep_due = 0.0
+        # dial local replicas (routable as soon as their heartbeats land;
+        # seed freshness so the first dispatch needn't wait a full probe)
+        for rid, addr in spec.replicas:
+            self._add_replica(rid, addr)
+
+    # ------------------------------------------------------------ topology
+    def _add_replica(self, rid: str, addr) -> None:
+        try:
+            self.node.connect(addr, rid,
+                              delay_s=self.spec.local_delay_ms / 1e3,
+                              hello=wire.msg("attach", id=self.region,
+                                             kind="lb"))
+        except OSError:
+            return          # already dead (e.g. adopting a killed region)
+        self.transport.saw(rid)
+        self.core.target_added(TargetView(id=rid))
+        self.known_replicas.add(rid)
+        self.dead_targets.discard(rid)
+
+    def _dial_peers(self, peers: list[dict]) -> None:
+        """Launcher control: the peer table. Only the lexicographically
+        SMALLER region dials (one paced conn per pair; the acceptor learns
+        the symmetric link delay from the hello)."""
+        for p in peers:
+            region, delay = p["region"], float(p.get("delay_ms", 0.0)) / 1e3
+            if region == self.region:
+                continue
+            self.peers[region] = delay
+            self.core.peer_added(region)
+            if self.region < region and region not in self.node.by_id:
+                self.node.connect(
+                    p["addr"], region, delay_s=delay,
+                    hello=wire.msg("hello", kind="lb", id=self.region,
+                                   delay_ms=p.get("delay_ms", 0.0)))
+            self.transport.saw(region)   # optimistic until first rhb lapse
+
+    # --------------------------------------------------- transport hooks
+    def _track_dispatch(self, req: GenRequest, target: str) -> None:
+        self.inflight[req.rid] = (req, target)
+
+    def _track_forward(self, req: GenRequest, peer: str) -> None:
+        """Ownership transfers with the request: the receiving LB re-stamps
+        arrival and owns the (remaining) deadline from its own clock."""
+        self.fwd_to[req.rid] = peer
+        self.expiry.pop(req.rid, None)
+
+    def _origin_of(self, req: GenRequest) -> str:
+        return self.origin_map.get(req.rid, self.region)
+
+    def _park_pull(self, req: GenRequest, peer: str, target: str,
+                   prefix_len: int, pull_tokens: int) -> None:
+        self.pulls[req.rid] = (req, peer, target, prefix_len, pull_tokens,
+                               time.monotonic() + self.spec.pull_timeout_s)
+
+    def _hedge_start(self, clone: GenRequest, primary: GenRequest,
+                     peer: str) -> None:
+        self.hedge_state[primary.rid] = {"clone": clone.rid, "winner": None}
+        self.clone_of[clone.rid] = primary.rid
+        self.origin_map[clone.rid] = self.region
+
+    # ------------------------------------------------------------ requests
+    def _accept(self, req: GenRequest, origin: str,
+                client_conn=None) -> None:
+        """A request enters (or re-enters) THIS LB: stamp arrival on MY
+        clock, take deadline ownership, queue into the core."""
+        now = time.monotonic()
+        req.arrival_s = now
+        self.origin_map[req.rid] = origin
+        if client_conn is not None:
+            self.client_of[req.rid] = client_conn
+        if req.cancelled is not None:
+            # a cancel raced the request over the WAN — resolve at arrival
+            self._resolve_front(req, req.cancelled)
+            return
+        if req.deadline_s is not None:
+            if req.deadline_s <= 0:
+                self._resolve_front(req, "deadline")
+                return
+            self.expiry[req.rid] = now + req.deadline_s
+        self.core.on_request(req)
+
+    def _resolve_front(self, req: GenRequest, reason: str) -> None:
+        """Terminal result for a request that never reached a replica."""
+        res = GenResult(
+            rid=req.rid, output_tokens=(),
+            finish_reason=cancel_finish_reason(reason), cached_tokens=0,
+            prompt_len=len(req.prompt_tokens),
+            e2e_s=(time.monotonic() - req.arrival_s
+                   if req.arrival_s is not None else None))
+        self._emit_result(wire.msg("result", res=wire.encode_result(res),
+                                   origin=self.origin_map.get(
+                                       req.rid, self.region)))
+
+    # ----------------------------------------------------------- reply path
+    def _route_back(self, m: dict) -> None:
+        """Send a token/admit/result frame toward the request's origin."""
+        origin = m.get("origin") or self.region
+        if origin != self.region:
+            self.node.send_to(origin, m)
+            return
+        rid = m["rid"] if "rid" in m else m["res"]["rid"]
+        conn = self.client_of.get(rid)
+        if conn is not None and conn.alive:
+            conn.send(m)
+
+    def _race(self, primary_rid: int, who: str) -> str:
+        """First signal wins; reap the loser leg exactly once."""
+        st = self.hedge_state.get(primary_rid)
+        if st is None:
+            return "primary"
+        if st["winner"] is None:
+            st["winner"] = who
+            if who == "clone":
+                self.hedge_wins += 1
+                self._cancel_request(primary_rid, "cancelled")
+            else:
+                self._cancel_request(st["clone"], "cancelled")
+        return st["winner"]
+
+    def _on_token(self, m: dict) -> None:
+        if m.get("origin") and m["origin"] != self.region:
+            self.node.send_to(m["origin"], m)
+            return
+        rid = m["rid"]
+        primary = self.clone_of.get(rid)
+        if primary is not None:                       # a hedge clone's token
+            if self._race(primary, "clone") == "clone":
+                m = dict(m, rid=primary)
+                self._route_back(m)
+            else:
+                self.wasted_work_tok += 1
+            return
+        if rid in self.hedge_state:
+            if self._race(rid, "primary") != "primary":
+                self.wasted_work_tok += 1
+                return
+        self._route_back(m)
+
+    def _on_result(self, m: dict) -> None:
+        rid = m["res"]["rid"]
+        # local bookkeeping happens at the LB that DISPATCHED the request
+        self.inflight.pop(rid, None)
+        self.expiry.pop(rid, None)
+        if m.get("origin") and m["origin"] != self.region:
+            self.node.send_to(m["origin"], m)
+            return
+        primary = self.clone_of.get(rid)
+        if primary is not None:                       # a hedge clone's result
+            winner = self._race(primary, "clone")
+            if winner == "clone":
+                res = dict(m["res"], rid=primary)
+                self._finish_hedge(primary)
+                self._emit_result(wire.msg("result", res=res,
+                                           origin=self.region))
+            else:                                     # losing clone reaped
+                self.wasted_work_tok += len(m["res"]["output_tokens"])
+                self.clone_of.pop(rid, None)
+            return
+        st = self.hedge_state.get(rid)
+        if st is not None:
+            winner = self._race(rid, "primary")
+            if winner != "primary":
+                # losing primary's cancel-result: swallow; the clone's
+                # completion (re-keyed to this rid) is the real terminal
+                self.wasted_work_tok += len(m["res"]["output_tokens"])
+                return
+            self._finish_hedge(rid)
+        self._emit_result(m)
+
+    def _finish_hedge(self, primary_rid: int) -> None:
+        st = self.hedge_state.pop(primary_rid, None)
+        if st is not None:
+            self.clone_of.pop(st["clone"], None)
+
+    def _emit_result(self, m: dict) -> None:
+        rid = m["res"]["rid"]
+        self.resolved += 1
+        self._route_back(m)
+        self.client_of.pop(rid, None)
+        self.origin_map.pop(rid, None)
+        self.fwd_to.pop(rid, None)
+        self.expiry.pop(rid, None)
+
+    # ------------------------------------------------------------- cancel
+    def _cancel_request(self, rid: int, reason: str,
+                        relay: bool = True) -> None:
+        got = self.core.cancel(rid)
+        if got is not None:                       # still queued here
+            self._resolve_front(got, reason)
+            return
+        if rid in self.pulls:                     # parked on a KV pull
+            req, *_ = self.pulls.pop(rid)
+            self._resolve_front(req, reason)
+            return
+        if rid in self.inflight:                  # at one of my replicas
+            req, target = self.inflight[rid]
+            req.cancelled = reason
+            self.node.send_to(target, wire.msg("cancel", rid=rid,
+                                               reason=reason))
+            return
+        peer = self.fwd_to.get(rid)
+        if peer is not None and relay:            # forwarded: relay once
+            self.node.send_to(peer, wire.msg("cancel", rid=rid,
+                                             reason=reason, relay=False))
+
+    # ------------------------------------------------------------ failover
+    def _declare_dead(self, rid_replica: str) -> None:
+        if rid_replica in self.dead_targets \
+                or rid_replica not in self.known_replicas:
+            return
+        self.dead_targets.add(rid_replica)
+        self.core.target_removed(rid_replica)
+        self.transport.forget(rid_replica)
+        self.hb_views.pop(rid_replica, None)
+        self.node.drop(rid_replica)
+        stranded = [(rid, req) for rid, (req, tgt) in self.inflight.items()
+                    if tgt == rid_replica]
+        for rid, req in stranded:
+            self.inflight.pop(rid, None)
+            self.redispatched += 1
+            # progress restarts from zero on the new replica; the client
+            # dedupes token events by index
+            req.first_token_s = None
+            req.cached_tokens = 0
+            self.core.on_request(req)
+        self.events.append((time.monotonic(),
+                            f"failover {rid_replica} "
+                            f"({len(stranded)} re-dispatched)"))
+
+    # ------------------------------------------------------------ handlers
+    def handle(self, conn, m: dict) -> None:
+        t = m.get("t")
+        if t == "hb":
+            self.transport.saw(m["id"])
+            self.hb_views[m["id"]] = m["view"]
+        elif t == "rhb":
+            self.transport.saw(m["id"])
+            self.peer_views[m["id"]] = m["view"]
+        elif t == "token" or t == "admit":
+            self._on_token(m)
+        elif t == "result":
+            self._on_result(m)
+        elif t == "submit":
+            req = wire.decode_request(m["req"])
+            self.issued += 1
+            self._accept(req, self.region, client_conn=conn)
+        elif t == "forward":
+            req = wire.decode_request(m["req"])
+            self._accept(req, m.get("origin", self.region))
+        elif t == "redispatch":
+            req = wire.decode_request(m["req"])
+            self.redispatched += 1
+            self.origin_map[req.rid] = m.get("origin", self.region)
+            self.core.on_request(req)
+        elif t == "steal":
+            for req in self.core.release_for_steal(m["n"], m["thief"]):
+                self.expiry.pop(req.rid, None)
+                self.node.send_to(m["thief"], wire.msg(
+                    "forward",
+                    req=wire.encode_request(req, deadline=wire.REMAINING,
+                                            now=time.monotonic()),
+                    origin=self.origin_map.get(req.rid, self.region)))
+        elif t == "cancel":
+            self._cancel_request(m["rid"], m.get("reason", "cancelled"),
+                                 relay=m.get("relay", True))
+        elif t == "kvpull":
+            self._serve_kvpull(m)
+        elif t == "kvpages":
+            self._kv_arrived(m)
+        elif t == "hello":
+            if conn.id is None:
+                conn.id = m["id"]
+            if m.get("kind") == "lb":
+                if m["id"] not in self.node.by_id:
+                    self.node.by_id[m["id"]] = conn
+                conn.delay_s = float(m.get("delay_ms", 0.0)) / 1e3
+                self.transport.saw(m["id"])
+            else:
+                self.node.by_id.setdefault(m["id"], conn)
+        elif t == "peers":
+            self._dial_peers(m["peers"])
+        elif t == "adopt":
+            for rid, addr in m["replicas"]:
+                if rid not in self.node.by_id:
+                    self._add_replica(rid, addr)
+            self.events.append((time.monotonic(),
+                                f"adopted {len(m['replicas'])} replicas"))
+        elif t == "bye":
+            if m.get("id"):
+                self._declare_dead(m["id"])
+        elif t == "metrics?":
+            conn.send(wire.msg("metrics", id=f"lb:{self.region}",
+                               data=self.snapshot()))
+        elif t == "drain" or t == "shutdown":
+            self.running = False
+        elif t == "_lost":
+            if conn.id and conn.id in self.known_replicas:
+                self._declare_dead(conn.id)
+
+    # ------------------------------------------------------------ KV pulls
+    def _serve_kvpull(self, m: dict) -> None:
+        """A peer wants our cached KV for a prefix: ask the best local
+        replica (the policy trie knows who served it) to export."""
+        tokens = tuple(m["tokens"])
+        target = None
+        tree = getattr(self.policy, "tree", None)
+        live = [r for r in self.hb_views if self.transport.target_alive(r)]
+        if tree is not None and live:
+            _, target = tree.match(tokens, live)
+        if target is None and live:
+            target = live[0]
+        if target is None:          # nothing alive: empty reply unblocks
+            self.node.send_to(m["requester"], wire.msg(
+                "kvpages", rid=m["rid"], requester=m["requester"],
+                kv={"tokens": list(tokens), "n": 0}))
+            return
+        self.node.send_to(target, wire.msg(
+            "kvfetch", rid=m["rid"], tokens=list(tokens),
+            requester=m["requester"]))
+
+    def _kv_arrived(self, m: dict) -> None:
+        if m.get("requester") != self.region:      # relay leg (peer's LB)
+            self.node.send_to(m["requester"], m)
+            return
+        parked = self.pulls.pop(m["rid"], None)
+        if parked is None:
+            return
+        req, _peer, target, _plen, _ptok, _due = parked
+        self._deliver_with_kv(req, target, m.get("kv"))
+
+    def _deliver_with_kv(self, req: GenRequest, target: str,
+                         kv: Optional[dict]) -> None:
+        if not self.transport.target_alive(target):
+            self.core.on_request(req)              # target died mid-pull
+            return
+        self._track_dispatch(req, target)
+        d = wire.msg("deliver",
+                     req=wire.encode_request(req, deadline=wire.STRIP),
+                     origin=self._origin_of(req))
+        if kv and kv.get("n", 0) > 0:
+            d["kv"] = kv
+        self.node.send_to(target, d)
+
+    # -------------------------------------------------------------- timers
+    def _local_probe(self) -> None:
+        views = [TargetView(**self.hb_views[r]) for r in self.hb_views
+                 if self.transport.target_alive(r)]
+        self.core.refresh_local(views)
+        self.core.maybe_steal()
+
+    def _remote_probe(self) -> None:
+        views = []
+        for p in self.peers:
+            if self.transport.peer_alive(p) and p in self.peer_views:
+                views.append(TargetView(**self.peer_views[p]))
+            else:
+                views.append(TargetView.unavailable(p))
+        if views:
+            self.core.refresh_remote(views)
+
+    def _publish_remote(self) -> None:
+        live = [r for r in self.hb_views
+                if self.transport.target_alive(r)]
+        view = {
+            "id": self.region,
+            "n_avail_replicas": sum(
+                1 for r in live if self.hb_views[r].get("available")),
+            "n_replicas": len(live),
+            "queue_len": len(self.core.queue),
+            "outstanding": sum(self.hb_views[r].get("outstanding", 0)
+                               for r in live),
+        }
+        for p in self.peers:
+            self.node.send_to(p, wire.msg("rhb", id=self.region, view=view))
+
+    def _sweep(self) -> None:
+        now = time.monotonic()
+        # deadlines I own (queued or dispatched here), on MY clock only
+        for rid in [r for r, due in self.expiry.items() if now > due]:
+            self.expiry.pop(rid, None)
+            self._cancel_request(rid, "deadline")
+        # stale replicas -> failover
+        for r in list(self.hb_views):
+            if not self.transport.target_alive(r):
+                self._declare_dead(r)
+        # timed-out KV pulls -> deliver without the payload (recompute)
+        for rid in [r for r, p in self.pulls.items() if now > p[5]]:
+            req, _peer, target, _plen, _ptok, _due = self.pulls.pop(rid)
+            self._deliver_with_kv(req, target, None)
+
+    # ------------------------------------------------------------- metrics
+    def snapshot(self) -> dict:
+        return {
+            "kind": "lb", "id": self.region, "pid": os.getpid(),
+            "uptime_s": time.monotonic() - self._t0,
+            "issued": self.issued, "resolved": self.resolved,
+            "queue_len": len(self.core.queue),
+            "inflight": len(self.inflight),
+            "forwarded_out": self.core.forwarded_out,
+            "peak_queue": self.core.peak_queue,
+            "redispatched": self.redispatched,
+            "hedged": self.core.hedges, "hedge_wins": self.hedge_wins,
+            "wasted_work_tok": self.wasted_work_tok,
+            "kv_decisions": dict(self.core.kv_decisions),
+            "pulled_tokens": self.core.pulled_tokens,
+            "events": [e for _, e in self.events],
+        }
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> None:
+        sp = self.spec
+        while self.running:
+            got = self.node.poll(0.005)
+            budget = 128
+            while got is not None and budget > 0:
+                self.handle(*got)
+                budget -= 1
+                got = self.node.poll(0.0)
+            now = time.monotonic()
+            if now >= self._probe_due:
+                self._local_probe()
+                self._probe_due = now + sp.probe_interval_s
+            if now >= self._rprobe_due:
+                self._remote_probe()
+                self._rprobe_due = now + sp.remote_probe_interval_s
+            if now >= self._publish_due:
+                self._publish_remote()
+                self._publish_due = now + sp.remote_probe_interval_s
+            if now >= self._sweep_due:
+                self._sweep()
+                self._sweep_due = now + min(0.05, sp.probe_interval_s)
+        for conn in self.node.conns:
+            if conn.alive and conn.id:
+                conn.send(wire.msg("bye", id=f"lb:{self.region}",
+                                   metrics=self.snapshot()))
+        time.sleep(0.05)                       # let the pacer flush
+        self.node.close()
+
+
+def lb_main(spec_dict: dict, ready) -> None:
+    """Child-process entry (mp spawn target)."""
+    spec = LBSpec(**spec_dict)
+    server = LBServer(spec)
+
+    def _graceful(_sig, _frm):
+        server.running = False
+
+    signal.signal(signal.SIGINT, _graceful)
+    signal.signal(signal.SIGTERM, _graceful)
+    ready.send(("addr", list(server.node.addr)))
+    ready.close()
+    server.run()
+    sys.exit(0)

@@ -1,0 +1,195 @@
+"""Socket plumbing for the serving plane: framed, paced, bidirectional
+connections plus one inbox per process.
+
+`Node` owns a listening TCP socket (127.0.0.1, OS-assigned port) and a
+single `queue.Queue` inbox.  Every connection — dialed or accepted — is a
+`Conn`: a reader thread decodes frames into the owner's inbox as
+``(conn, msg)`` tuples, and a paced sender thread writes queued frames to
+the socket **after the link's delay** — this is where WAN latency is
+injected, at the SENDER, per link (`delay_s`), exactly like the tick
+router's `wan_delay_ticks` but on the wall clock and a real wire.  Frames
+on one conn keep FIFO order (equal delays can't reorder; the pacer heap
+tie-breaks on enqueue sequence).
+
+A dead peer (EOF, reset, refused) surfaces as a ``{"t": "_lost"}`` inbox
+message so the single-threaded owner loop handles connection failure the
+same way it handles any other event.  All threads are daemons: a process
+that decides to exit never blocks on its sockets.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue
+import socket
+import threading
+import time
+from typing import Optional
+
+from repro.plane import wire
+
+
+class Conn:
+    """One framed bidirectional connection with sender-side pacing."""
+
+    def __init__(self, sock: socket.socket, inbox: "queue.Queue", *,
+                 delay_s: float = 0.0, label: str = ""):
+        self.sock = sock
+        self.inbox = inbox
+        self.delay_s = float(delay_s)
+        self.label = label
+        self.id: Optional[str] = None       # set once the peer is known
+        self.alive = True
+        self._lock = threading.Condition()
+        self._outq: list = []               # (due, seq, frame_bytes)
+        self._seq = itertools.count()
+        self._closing = False
+        self._sender = threading.Thread(target=self._send_loop, daemon=True)
+        self._reader = threading.Thread(target=self._recv_loop, daemon=True)
+        self._sender.start()
+        self._reader.start()
+
+    # ------------------------------------------------------------- sending
+    def send(self, msg: dict) -> bool:
+        """Queue `msg`; it hits the wire `delay_s` from NOW (the message is
+        frozen — encoded — at call time, like a packet leaving the NIC)."""
+        if not self.alive:
+            return False
+        frame = wire.pack(msg)
+        with self._lock:
+            heapq.heappush(self._outq,
+                           (time.monotonic() + self.delay_s,
+                            next(self._seq), frame))
+            self._lock.notify()
+        return True
+
+    def _send_loop(self) -> None:
+        while True:
+            with self._lock:
+                while not self._outq and not self._closing:
+                    self._lock.wait()
+                if self._closing and not self._outq:
+                    return
+                due, _, frame = self._outq[0]
+                wait = due - time.monotonic()
+                if wait > 0:
+                    self._lock.wait(timeout=wait)
+                    continue
+                heapq.heappop(self._outq)
+            try:
+                self.sock.sendall(frame)
+            except OSError:
+                self._mark_lost()
+                return
+
+    # ----------------------------------------------------------- receiving
+    def _recv_loop(self) -> None:
+        while True:
+            try:
+                msg = wire.read_frame(self.sock)
+            except (OSError, ValueError):
+                msg = None
+            if msg is None:
+                self._mark_lost()
+                return
+            self.inbox.put((self, msg))
+
+    def _mark_lost(self) -> None:
+        if self.alive:
+            self.alive = False
+            if not self._closing:
+                self.inbox.put((self, {"t": "_lost", "id": self.id}))
+
+    # -------------------------------------------------------------- close
+    def close(self) -> None:
+        self._closing = True
+        self.alive = False
+        with self._lock:
+            self._lock.notify()
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class Node:
+    """A process's socket endpoint: listener + inbox + peer table."""
+
+    def __init__(self, host: str = "127.0.0.1"):
+        self.inbox: queue.Queue = queue.Queue()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, 0))
+        self._listener.listen(64)
+        self.addr = self._listener.getsockname()     # (host, port)
+        self.conns: list[Conn] = []
+        self.by_id: dict[str, Conn] = {}
+        self._closing = False
+        self._acceptor = threading.Thread(target=self._accept_loop,
+                                          daemon=True)
+        self._acceptor.start()
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self.conns.append(Conn(sock, self.inbox))
+
+    # ------------------------------------------------------------- dialing
+    def connect(self, addr, remote_id: str, *, delay_s: float = 0.0,
+                hello: Optional[dict] = None,
+                timeout: float = 5.0) -> Conn:
+        """Dial `addr`, register the conn under `remote_id`, and send the
+        `hello` frame (how the remote learns who we are)."""
+        sock = socket.create_connection(tuple(addr), timeout=timeout)
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        conn = Conn(sock, self.inbox, delay_s=delay_s, label=remote_id)
+        conn.id = remote_id
+        self.conns.append(conn)
+        self.by_id[remote_id] = conn
+        if hello is not None:
+            conn.send(hello)
+        return conn
+
+    def register(self, conn: Conn, remote_id: str) -> None:
+        """Bind an ACCEPTED conn to an id (on receiving its hello)."""
+        conn.id = remote_id
+        self.by_id[remote_id] = conn
+
+    def send_to(self, remote_id: str, msg: dict) -> bool:
+        conn = self.by_id.get(remote_id)
+        return bool(conn is not None and conn.alive and conn.send(msg))
+
+    def drop(self, remote_id: str) -> None:
+        conn = self.by_id.pop(remote_id, None)
+        if conn is not None:
+            conn.close()
+
+    # --------------------------------------------------------------- poll
+    def poll(self, timeout: Optional[float] = 0.0) -> Optional[tuple]:
+        """Next (conn, msg), or None when the inbox stays empty for
+        `timeout` seconds (0 = non-blocking)."""
+        try:
+            if timeout is None:
+                return self.inbox.get()
+            return self.inbox.get(timeout=timeout) if timeout > 0 \
+                else self.inbox.get_nowait()
+        except queue.Empty:
+            return None
+
+    def close(self) -> None:
+        self._closing = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for conn in self.conns:
+            conn.close()

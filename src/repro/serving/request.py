@@ -99,6 +99,29 @@ class GenRequest:
     on_done: Optional[Callable] = dataclasses.field(
         default=None, repr=False, compare=False)   # (GenResult)
 
+    def clone_for_dispatch(self, *, fresh_rid: bool = True) -> "GenRequest":
+        """A copy safe to dispatch as a SEPARATE request (hedge clones, wire
+        re-dispatch): same content (prompt/sampling/identity/priority/
+        slo_class), but every lifecycle field is reset — fresh rid (unless
+        `fresh_rid=False`), no deadline, no travelling-cancel flag, no
+        clocks, no engine progress, and NO callbacks (a clone that inherited
+        `on_token`/`on_done` would double-fire the primary's handle; one
+        that inherited `deadline_s` would race two deadline owners). New
+        GenRequest fields default to leaking into clones via
+        `dataclasses.replace` — add them to the reset list here if they are
+        per-dispatch state, so they can't silently ride along."""
+        clone = dataclasses.replace(
+            self, rid=(next_rid() if fresh_rid else self.rid),
+            deadline_s=None, cancelled=None, arrival_s=None,
+            cached_tokens=0, first_token_s=None, finished_s=None,
+            on_admit=None, on_token=None, on_done=None)
+        # predetermined completion (cost-backend replay) is content, not
+        # lifecycle: it rides along when present
+        out = getattr(self, "output_tokens", None)
+        if out is not None:
+            clone.output_tokens = out
+        return clone
+
 
 @dataclasses.dataclass
 class GenResult:

@@ -25,7 +25,7 @@ from repro.routing import (RoutingConfig, RoutingCore, RoutingSpec, SP_P,
 from repro.routing.failover import FailoverTracker
 from repro.serving.engine import Engine
 from repro.serving.request import (GenRequest, GenResult,
-                                   cancel_finish_reason, next_rid)
+                                   cancel_finish_reason)
 
 
 class _TickTransport:
@@ -37,7 +37,7 @@ class _TickTransport:
         self.lb = lb
 
     def now(self) -> float:
-        return float(self.router.tick)
+        return self.router.now()
 
     def target_alive(self, target_id: str) -> bool:
         return target_id in self.lb.engines
@@ -101,10 +101,7 @@ class _TickTransport:
         the primary's callbacks when it wins, so the frontend handle sees
         one rid-consistent lifecycle either way."""
         rt = self.router
-        clone = dataclasses.replace(
-            req, rid=next_rid(), deadline_s=None, cancelled=None,
-            arrival_s=None, cached_tokens=0, first_token_s=None,
-            finished_s=None, on_admit=None, on_token=None, on_done=None)
+        clone = req.clone_for_dispatch()
         clone.forwarded = True
         rt.hedged += 1
         rt._hedge_clone_rids.add(clone.rid)
@@ -250,7 +247,8 @@ class InProcessRouter:
                  work_stealing: bool = False,
                  cfg: Optional[RoutingConfig] = None,
                  wan_delay_ticks: int = 1, local_delay_ticks: int = 0,
-                 probe_every: int = 1, remote_probe_every: int = 2):
+                 probe_every: int = 1, remote_probe_every: int = 2,
+                 clock: str = "tick"):
         self.remote_policy = remote_policy
         self.cfg = (dataclasses.replace(cfg) if cfg is not None
                     else RoutingConfig(pushing=pushing,
@@ -261,6 +259,13 @@ class InProcessRouter:
         self.local_delay_ticks = local_delay_ticks
         self.probe_every = max(1, probe_every)
         self.remote_probe_every = max(1, remote_probe_every)
+        # what RoutingCore sees as time: "tick" (the deterministic default
+        # — one step() == one unit) or "wall" (time.monotonic(), matching
+        # the socket plane's SocketTransport so the same core runs on
+        # either substrate without caring which)
+        if clock not in ("tick", "wall"):
+            raise ValueError(f"clock must be 'tick' or 'wall', got {clock!r}")
+        self.clock = clock
         self.tick = 0
         self._mail: list[tuple[int, int, Callable]] = []   # (due, seq, fn)
         self._seq = itertools.count()
@@ -316,6 +321,13 @@ class InProcessRouter:
                 other.core.peer_added(region)
                 lb.core.peer_added(other.region)
         return lb
+
+    def now(self) -> float:
+        """RoutingCore's clock: ticks by default, wall seconds when built
+        with clock="wall" (message latency stays tick-counted either way —
+        only what the core's decisions OBSERVE as `transport.now()`
+        changes)."""
+        return time.monotonic() if self.clock == "wall" else float(self.tick)
 
     # ------------------------------------------------------------ mailbox
     def _after(self, delay_ticks: int, fn: Callable) -> None:

@@ -8,6 +8,28 @@ import jax.numpy as jnp
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def no_leaked_children():
+    """Every test must reap what it spawns: the multi-process serving
+    plane (repro.plane) forks real replica/LB processes, and a leaked
+    child would outlive the suite (and starve the single-CPU CI box).
+    Runs on every teardown path pytest exits through — normal return,
+    assertion failure, and KeyboardInterrupt — and force-reaps before
+    failing so one bad test can't poison the rest of the session."""
+    yield
+    import multiprocessing as mp
+    kids = mp.active_children()
+    if kids:
+        names = sorted(p.name for p in kids)
+        for p in kids:
+            p.terminate()
+            p.join(2.0)
+            if p.is_alive():
+                p.kill()
+                p.join(2.0)
+        pytest.fail(f"test leaked child processes: {names}")
+
+
 @pytest.fixture(scope="session")
 def qwen_reduced():
     from repro.configs import get_config
