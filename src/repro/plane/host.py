@@ -255,15 +255,14 @@ class ProcessHost:
         got = self.node.poll(0.02)
         if got is None:
             return bool(self.unresolved)
-        conn, m = got
-        budget = 64
-        while True:
-            self._handle(conn, m)
-            budget -= 1
+        self._handle(*got)
+        # budget gates the POLL, not the handle: a dequeued frame is
+        # always handled, never dropped on budget exhaustion
+        for _ in range(63):
             got = self.node.poll(0.0)
-            if got is None or budget <= 0:
+            if got is None:
                 break
-            conn, m = got
+            self._handle(*got)
         return True
 
     def _handle(self, conn, m: dict) -> None:

@@ -240,15 +240,30 @@ class LBServer:
             self.node.send_to(m["origin"], m)
             return
         rid = m["rid"]
+        is_token = m.get("t") == "token"
         primary = self.clone_of.get(rid)
-        if primary is not None:                       # a hedge clone's token
+        if primary is not None:                       # a hedge clone's frame
+            if not is_token:
+                # admit: don't arbitrate the race (first TOKEN wins) and
+                # don't count it as wasted work — relay re-keyed only if
+                # the clone has already won
+                st = self.hedge_state.get(primary)
+                if st is not None and st["winner"] == "clone":
+                    self._route_back(dict(m, rid=primary))
+                return
             if self._race(primary, "clone") == "clone":
                 m = dict(m, rid=primary)
                 self._route_back(m)
             else:
                 self.wasted_work_tok += 1
             return
-        if rid in self.hedge_state:
+        st = self.hedge_state.get(rid)
+        if st is not None:
+            if not is_token:
+                # primary's admit: pass through unless the clone already won
+                if st["winner"] != "clone":
+                    self._route_back(m)
+                return
             if self._race(rid, "primary") != "primary":
                 self.wasted_work_tok += 1
                 return
@@ -369,9 +384,15 @@ class LBServer:
             req = wire.decode_request(m["req"])
             self.redispatched += 1
             self.origin_map[req.rid] = m.get("origin", self.region)
+            # drop the stale inflight entry (the draining replica bounced
+            # this back) so a later _declare_dead can't re-dispatch it twice
+            self.inflight.pop(req.rid, None)
             self.core.on_request(req)
         elif t == "steal":
             for req in self.core.release_for_steal(m["n"], m["thief"]):
+                # ownership transfers to the thief, same as _track_forward:
+                # a later client cancel must relay there
+                self.fwd_to[req.rid] = m["thief"]
                 self.expiry.pop(req.rid, None)
                 self.node.send_to(m["thief"], wire.msg(
                     "forward",
@@ -529,11 +550,15 @@ class LBServer:
         sp = self.spec
         while self.running:
             got = self.node.poll(0.005)
-            budget = 128
-            while got is not None and budget > 0:
+            if got is not None:
                 self.handle(*got)
-                budget -= 1
-                got = self.node.poll(0.0)
+                # budget gates the POLL, not the handle: a dequeued frame
+                # is always handled, never dropped on budget exhaustion
+                for _ in range(127):
+                    got = self.node.poll(0.0)
+                    if got is None:
+                        break
+                    self.handle(*got)
             now = time.monotonic()
             if now >= self._probe_due:
                 self._local_probe()

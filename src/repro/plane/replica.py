@@ -367,12 +367,13 @@ class _ReplicaServer:
     # ----------------------------------------------------------------- run
     def run(self) -> None:
         while self.running:
-            budget = 64                     # drain a burst, then compute
-            got = self.node.poll(0.0)
-            while got is not None and budget > 0:
-                self.handle(*got)
-                budget -= 1
+            # drain a burst, then compute; the budget gates the POLL so a
+            # dequeued frame is always handled, never dropped
+            for _ in range(64):
                 got = self.node.poll(0.0)
+                if got is None:
+                    break
+                self.handle(*got)
             if self.engine.has_work():
                 self.engine.step()
             elif self.draining:
