@@ -51,6 +51,11 @@ SUMMARY_KEYS = frozenset({
     # must lose zero requests — both are deterministic 0/1 outcomes
     # (`unresolved` is already matched above); wall-clock tok/s stays out
     "drill_ok",
+    # partition-tolerance gate (serving.multiprocess): the blackhole-and-
+    # heal drill must re-home, fence the zombie region's frames, and
+    # resolve every request exactly once — 0/1 outcome plus the
+    # duplicate-terminal count, which must stay 0
+    "partition_drill_ok", "duplicate_results",
 })
 
 

@@ -147,7 +147,10 @@ def main(smoke: bool = False) -> dict:
           f"{multiprocess['inproc_tok_s_wall']:.1f} in-process "
           f"({multiprocess['procs_speedup_wall']:.2f}x); kill -9 drill "
           f"re-dispatched {multiprocess['drill_redispatched_n']}, "
-          f"unresolved {multiprocess['unresolved']} (gate == 0)")
+          f"unresolved {multiprocess['unresolved']} (gate == 0); "
+          f"partition drill re-homed {multiprocess['partition_rehomed_n']}, "
+          f"fenced {multiprocess['partition_fenced_n']}, duplicates "
+          f"{multiprocess['duplicate_results']} (gate == 0)")
     return out
 
 
@@ -158,10 +161,15 @@ def _multiprocess(smoke: bool) -> dict:
     Gated (deterministic): `unresolved` == 0 and `drill_ok` == 1 after a
     kill -9 replica drill — a crash with decode in flight must lose ZERO
     requests (stale heartbeats -> target removed -> stranded work
-    re-dispatched). Ungated (wall-clock, machine-local): the two tok/s
-    numbers — real process parallelism vs socket/codec overhead."""
+    re-dispatched) — plus `partition_drill_ok` == 1 and
+    `duplicate_results` == 0 after a partition-and-heal drill: one region
+    is blackholed from its peers and the client mid-stream (silence, not
+    EOF), the client re-homes its parked requests, and after the heal the
+    zombie region's frames are fenced so every request resolves exactly
+    once. Ungated (wall-clock, machine-local): the two tok/s numbers —
+    real process parallelism vs socket/codec overhead."""
     from repro.frontend import Client, RequestState, RouterHost
-    from repro.plane import CostEngine, PlaneConfig, ServingPlane
+    from repro.plane import CostEngine, PlaneConfig, ServingPlane, blackhole
     from repro.routing import build_routing
     from repro.serving import GenRequest, InProcessRouter, SamplingParams
 
@@ -210,6 +218,41 @@ def _multiprocess(smoke: bool) -> dict:
         assert all(h.state is RequestState.FINISHED for h in ph)
         ptoks = sum(len(h.result.output_tokens) for h in ph)
 
+        # partition-and-heal drill: blackhole eu's LB from its peer and
+        # the client mid-stream (silence, not EOF — TCP stays up), let the
+        # client's ping liveness re-home the parked requests, then heal
+        # after well past 2x stale_after_s and require the zombie region's
+        # late frames to be FENCED, not double-resolved
+        rng = np.random.default_rng(11)
+        pdrill = [pclient.submit(GenRequest(
+            prompt_tokens=tuple(int(x) for x in
+                                rng.integers(1, 5000, size=20)),
+            sampling=SamplingParams(max_new_tokens=200)),
+            region=r) for r in ("us", "eu", "eu", "eu")]
+        while not all(h.events for h in pdrill):
+            pclient.poll()
+        plane.isolate_region("eu")
+        host.node.set_fault("eu", blackhole())
+        t1 = time.perf_counter()
+        while time.perf_counter() - t1 < 3 * 0.3 \
+                or (host.rehomed < 1 and time.perf_counter() - t1 < 15):
+            pclient.poll()
+        rehomed_n = host.rehomed
+        plane.heal_region("eu")
+        host.node.set_fault("eu", None)
+        t1 = time.perf_counter()
+        while any(not h.done for h in pdrill) \
+                and time.perf_counter() - t1 < 60:
+            pclient.poll()
+        t1 = time.perf_counter()
+        while host.counters()["fenced_frames"] < 1 \
+                and time.perf_counter() - t1 < 15:
+            pclient.poll()
+        pc = host.counters()
+        partition_ok = (all(h.done for h in pdrill) and rehomed_n >= 1
+                        and pc["fenced_frames"] >= 1
+                        and pc["duplicate_results"] == 0)
+
         # kill -9 drill: crash a replica with decode in flight
         drill = [pclient.submit(r, region="us") for r in reqs()[:6]]
         while not any(h.events for h in drill):
@@ -225,10 +268,18 @@ def _multiprocess(smoke: bool) -> dict:
         host.close()
         plane.shutdown()
     assert drill_ok, "kill -9 drill lost requests"
+    assert partition_ok, (
+        f"partition drill failed: rehomed={rehomed_n} counters={pc} "
+        f"states={[h.state.value for h in pdrill]}")
     return {
         # CI-gated: the crash drill loses nothing
         "unresolved": m["unresolved"],
         "drill_ok": 1.0 if drill_ok else 0.0,
+        # CI-gated: partition-and-heal resolves every request exactly once
+        "partition_drill_ok": 1.0 if partition_ok else 0.0,
+        "duplicate_results": pc["duplicate_results"],
+        "partition_fenced_n": pc["fenced_frames"],
+        "partition_rehomed_n": rehomed_n,
         # ungated detail + wall-clock (names dodge the gated key set)
         "n_requests": n,
         "n_processes": m["n_processes"],

@@ -244,6 +244,79 @@ def run_procs(args):
     assert not leaked, f"leaked children: {leaked}"
 
 
+def run_chaos(args):
+    """The partition-and-heal chaos drill on the multi-process plane:
+    blackhole one region's LB from its peers AND the client mid-stream
+    (TCP stays up — silence, not EOF), let the client's ping liveness
+    re-home the parked requests to the survivor, heal after well past
+    2x stale_after_s, and require the zombie region's late frames to be
+    FENCED: every request resolves exactly once, zero duplicates."""
+    from repro.frontend import Client
+    from repro.plane import PlaneConfig, ServingPlane, blackhole
+    from repro.serving import GenRequest, SamplingParams
+
+    regions = tuple(args.regions.split(","))
+    assert len(regions) >= 2, "--chaos needs at least two regions"
+    dark, survivor = regions[0], regions[1]
+    rng = np.random.default_rng(2)
+    t0 = time.time()
+    plane = ServingPlane(PlaneConfig(
+        regions=regions, replicas=args.replicas, backend="cost",
+        wan_delay_ms=5.0, time_scale=0.1, stale_after_s=0.25,
+        partition_grace_s=0.3)).start()
+    host = plane.host()
+    try:
+        client = Client(host)
+        print(f"[chaos] plane up: {len(plane.procs)} processes; "
+              f"isolating {dark!r} mid-stream, {survivor!r} survives")
+        hs = [client.submit(GenRequest(
+            prompt_tokens=tuple(int(x) for x in
+                                rng.integers(1, 5000, size=20)),
+            sampling=SamplingParams(max_new_tokens=200)),
+            region=regions[i % 2]) for i in range(6)]
+        t1 = time.monotonic()
+        while not all(h.events for h in hs) and time.monotonic() - t1 < 15:
+            client.poll()
+
+        plane.isolate_region(dark)                   # LB<->peer-LB links
+        host.node.set_fault(dark, blackhole())       # client<->LB link
+        t1 = time.monotonic()
+        dwell = 3 * plane.cfg.stale_after_s          # > 2x stale_after_s
+        while time.monotonic() - t1 < dwell \
+                or (host.rehomed < 1 and time.monotonic() - t1 < 15):
+            client.poll()
+        print(f"[chaos] {dark} dark {time.monotonic() - t1:.2f}s: "
+              f"re-homed {host.rehomed} requests to {survivor}")
+        plane.heal_region(dark)
+        host.node.set_fault(dark, None)
+
+        states = _drain(client, hs)
+        t1 = time.monotonic()
+        while host.counters()["fenced_frames"] < 1 \
+                and time.monotonic() - t1 < 15:
+            client.poll()
+        c = host.counters()
+        m = plane.metrics()
+        wall = time.time() - t0
+        print(f"[chaos] healed: states={states} re-homed={c['rehomed']} "
+              f"fenced={c['fenced_frames']} duplicates="
+              f"{c['duplicate_results']} unresolved={m['unresolved']} "
+              f"degraded_transitions={m['degraded_transitions']} "
+              f"in {wall:.1f}s")
+        assert all(h.done for h in hs), f"drill left requests open: {states}"
+        assert c["rehomed"] >= 1, "partition never triggered a re-home"
+        assert c["fenced_frames"] >= 1, "zombie frames were never fenced"
+        assert c["duplicate_results"] == 0, "a request resolved twice"
+        assert m["unresolved"] == 0, "plane lost requests"
+        print("serve_multiregion --chaos OK — partition-and-heal drill: "
+              "re-home + fence, every request resolved exactly once")
+    finally:
+        host.close()
+        plane.shutdown()
+    leaked = [p for p in plane.procs.values() if p.is_alive()]
+    assert not leaked, f"leaked children: {leaked}"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=36)
@@ -251,12 +324,17 @@ def main():
     ap.add_argument("--procs", action="store_true",
                     help="multi-process plane (sockets + cost backend) "
                          "instead of the in-process JAX fleet")
+    ap.add_argument("--chaos", action="store_true",
+                    help="multi-process plane partition-and-heal chaos "
+                         "drill (blackhole a region, re-home, fence)")
     ap.add_argument("--regions", default="us,eu",
-                    help="--procs: comma-separated region list")
+                    help="--procs/--chaos: comma-separated region list")
     ap.add_argument("--replicas", type=int, default=2,
-                    help="--procs: replica processes per region")
+                    help="--procs/--chaos: replica processes per region")
     args = ap.parse_args()
-    if args.procs:
+    if args.chaos:
+        run_chaos(args)
+    elif args.procs:
         run_procs(args)
     else:
         run_inprocess(args)

@@ -40,6 +40,19 @@ if pgrep -f "multiprocessing[.]spawn" > /dev/null; then
     exit 1
 fi
 
+echo "=== partition-and-heal chaos drill ==="
+# the partition drill from the fault-model table (README): blackhole one
+# region's LB from its peers and the client mid-stream (TCP up, frames
+# dropped — silence, not EOF), re-home the parked requests, heal, and
+# require the zombie region's late frames to be FENCED. Gates: every
+# request resolves exactly once (unresolved == 0 AND duplicates == 0).
+timeout 300 python examples/serve_multiregion.py --chaos
+if pgrep -f "multiprocessing[.]spawn" > /dev/null; then
+    echo "FAIL: orphaned plane processes survived the --chaos drill" >&2
+    pgrep -af "multiprocessing[.]spawn" >&2
+    exit 1
+fi
+
 echo "=== smoke benchmarks ==="
 # fresh per-figure outputs land in a scratch dir (the committed
 # artifacts/bench-smoke/ stays the baseline); benchmarks.run also writes the

@@ -5,7 +5,10 @@ injection, and crash drills on real PIDs.
     wire       framed msgpack-or-JSON codec + the deadline clock-ownership
                rule (who may judge `deadline_s`, and on whose clock)
     mailbox    Conn/Node: framed, sender-paced (WAN delay) connections and
-               the one-inbox-per-process recv model
+               the one-inbox-per-process recv model; redial-with-backoff
+               and per-link chaos fault application live here
+    chaos      LinkFault + constructors (blackhole/partition/delay/heal):
+               runtime link-fault injection, no process restart needed
     transport  SocketTransport — the Transport protocol over a Node
     replica    ReplicaProcess: an engine (cost-model or JAX) + recv loop +
                heartbeat publisher in a spawned process
@@ -18,6 +21,8 @@ The tick-based `repro.serving.router.InProcessRouter` remains the
 deterministic-parity reference for the same RoutingCore; this package is
 the same brain on real wires (tests assert the decision streams match).
 """
+from repro.plane.chaos import (LinkFault, blackhole, delay, partition_in,
+                               partition_out)
 from repro.plane.host import PlaneConfig, ProcessHost, ServingPlane
 from repro.plane.lb import LBServer, LBSpec
 from repro.plane.metrics import merge_snapshots
@@ -28,4 +33,5 @@ __all__ = [
     "PlaneConfig", "ProcessHost", "ServingPlane",
     "LBServer", "LBSpec", "merge_snapshots",
     "CostEngine", "ReplicaSpec", "SocketTransport",
+    "LinkFault", "blackhole", "delay", "partition_in", "partition_out",
 ]

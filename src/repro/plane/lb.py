@@ -64,8 +64,11 @@ class LBSpec:
     probe_interval_s: float = 0.05
     remote_probe_interval_s: float = 0.1
     stale_after_s: float = 0.4
+    partition_grace_s: float = 0.4      # stale-but-connected peers get this
+                                        # long for heartbeats to resume
     local_delay_ms: float = 0.0
     pull_timeout_s: float = 2.0
+    resend_interval_s: float = 0.25     # unacked result/cancel retry pace
     cfg_overrides: tuple = ()           # (("max_inflight_per_probe", 2), ..)
 
 
@@ -82,9 +85,11 @@ class LBServer:
         cfg = rspec.make_config(**dict(spec.cfg_overrides))
         self.transport = SocketTransport(
             self.node, self.region, stale_after_s=spec.stale_after_s,
+            partition_grace_s=spec.partition_grace_s,
             on_dispatch=self._track_dispatch, on_pull=self._park_pull,
             on_hedge=self._hedge_start, origin_of=self._origin_of)
         self.transport.on_forward = self._track_forward
+        self.transport.gen_of = self._gen_of
         self.core = RoutingCore(self.region, self.policy, remote, cfg,
                                 self.transport)
         self.running = True
@@ -105,17 +110,34 @@ class LBServer:
         self.known_replicas: set[str] = set()
         self.dead_targets: set[str] = set()
         self.events: list[tuple[float, str]] = []
+        # ---- partition tolerance
+        self.gen: dict[str, int] = {}             # target -> epoch; bumped
+                                                  # on every _declare_dead
+        self.seen_results: set[tuple] = set()     # (src, rid): hop-local
+                                                  # dedupe of RESENT results
+                                                  # (cross-source dups are
+                                                  # the fence's job)
+        self.unacked_results: dict[int, dict] = {}  # rid -> parked frame
+        self.pending_cancels: dict[int, dict] = {}  # rid -> parked frame
+        self.degraded = False                     # all peer links down
         # ---- counters
         self.issued = 0
         self.resolved = 0
         self.redispatched = 0
         self.hedge_wins = 0
         self.wasted_work_tok = 0
+        self.fenced_frames = 0                    # zombie-generation drops
+        self.dup_suppressed = 0                   # same-source retries
+        self.send_drops = 0                       # frames lost to dead links
+        self.kv_pull_timeouts = 0                 # pulls fallen to recompute
+        self.degraded_transitions = 0
         self._t0 = time.monotonic()
         self._probe_due = 0.0
         self._rprobe_due = 0.0
         self._publish_due = 0.0
         self._sweep_due = 0.0
+        self._resend_due = 0.0
+        self._reattach_due = 0.0
         # dial local replicas (routable as soon as their heartbeats land;
         # seed freshness so the first dispatch needn't wait a full probe)
         for rid, addr in spec.replicas:
@@ -164,6 +186,9 @@ class LBServer:
 
     def _origin_of(self, req: GenRequest) -> str:
         return self.origin_map.get(req.rid, self.region)
+
+    def _gen_of(self, target: str) -> int:
+        return self.gen.get(target, 1)
 
     def _park_pull(self, req: GenRequest, peer: str, target: str,
                    prefix_len: int, pull_tokens: int) -> None:
@@ -214,12 +239,15 @@ class LBServer:
         """Send a token/admit/result frame toward the request's origin."""
         origin = m.get("origin") or self.region
         if origin != self.region:
-            self.node.send_to(origin, m)
+            if not self.node.send_to(origin, m):
+                self.send_drops += 1
             return
         rid = m["rid"] if "rid" in m else m["res"]["rid"]
         conn = self.client_of.get(rid)
         if conn is not None and conn.alive:
             conn.send(m)
+        elif m.get("t") in ("token", "admit"):
+            self.send_drops += 1
 
     def _race(self, primary_rid: int, who: str) -> str:
         """First signal wins; reap the loser leg exactly once."""
@@ -274,8 +302,11 @@ class LBServer:
         # local bookkeeping happens at the LB that DISPATCHED the request
         self.inflight.pop(rid, None)
         self.expiry.pop(rid, None)
+        self.pending_cancels.pop(rid, None)
         if m.get("origin") and m["origin"] != self.region:
-            self.node.send_to(m["origin"], m)
+            # relay hop toward the origin LB: results are required frames,
+            # so park them for resend until the peer resacks
+            self._send_reliable(m["origin"], m, rid)
             return
         primary = self.clone_of.get(rid)
         if primary is not None:                       # a hedge clone's result
@@ -308,11 +339,63 @@ class LBServer:
     def _emit_result(self, m: dict) -> None:
         rid = m["res"]["rid"]
         self.resolved += 1
-        self._route_back(m)
+        self.pending_cancels.pop(rid, None)
+        origin = m.get("origin") or self.region
+        if origin != self.region:
+            self._send_reliable(origin, m, rid)
+        else:
+            conn = self.client_of.get(rid)
+            if conn is not None and conn.alive:
+                conn.send(m)
+                self.unacked_results[rid] = {
+                    "dest": conn, "frame": m, "attempts": 0,
+                    "due": time.monotonic() + self.spec.resend_interval_s}
+            else:
+                self.send_drops += 1
         self.client_of.pop(rid, None)
         self.origin_map.pop(rid, None)
         self.fwd_to.pop(rid, None)
         self.expiry.pop(rid, None)
+
+    # ------------------------------------------------- reliable delivery
+    def _send_reliable(self, dest_id: str, frame: dict, rid: int) -> None:
+        """Send a required frame (result) and park it until a `resack`
+        for `rid` comes back; `_resend_unacked` retries on the redialed
+        conn after a link heals."""
+        if not self.node.send_to(dest_id, frame):
+            self.send_drops += 1
+        self.unacked_results[rid] = {
+            "dest": dest_id, "frame": frame, "attempts": 0,
+            "due": time.monotonic() + self.spec.resend_interval_s}
+
+    def _resend_unacked(self, now: float) -> None:
+        for rid, ent in list(self.unacked_results.items()):
+            if now < ent["due"]:
+                continue
+            ent["attempts"] += 1
+            if ent["attempts"] > 40:           # ~10s: give up, count it
+                del self.unacked_results[rid]
+                self.send_drops += 1
+                continue
+            dest = ent["dest"]
+            if isinstance(dest, str):
+                ok = self.node.send_to(dest, ent["frame"])
+            else:
+                ok = bool(dest.alive and dest.send(ent["frame"]))
+            if not ok:
+                self.send_drops += 1
+            ent["due"] = now + self.spec.resend_interval_s
+        for rid, ent in list(self.pending_cancels.items()):
+            if now < ent["due"]:
+                continue
+            ent["attempts"] += 1
+            if ent["attempts"] > 40:
+                del self.pending_cancels[rid]
+                self.send_drops += 1
+                continue
+            if not self.node.send_to(ent["dest"], ent["frame"]):
+                self.send_drops += 1
+            ent["due"] = now + self.spec.resend_interval_s
 
     # ------------------------------------------------------------- cancel
     def _cancel_request(self, rid: int, reason: str,
@@ -328,13 +411,23 @@ class LBServer:
         if rid in self.inflight:                  # at one of my replicas
             req, target = self.inflight[rid]
             req.cancelled = reason
-            self.node.send_to(target, wire.msg("cancel", rid=rid,
+            self._send_cancel(target, wire.msg("cancel", rid=rid,
                                                reason=reason))
             return
         peer = self.fwd_to.get(rid)
         if peer is not None and relay:            # forwarded: relay once
-            self.node.send_to(peer, wire.msg("cancel", rid=rid,
+            self._send_cancel(peer, wire.msg("cancel", rid=rid,
                                              reason=reason, relay=False))
+
+    def _send_cancel(self, dest_id: str, frame: dict) -> None:
+        """Cancels are droppable-but-required: park for resend (cancel is
+        idempotent per rid at the replica) until the rid's result clears
+        the entry."""
+        if not self.node.send_to(dest_id, frame):
+            self.send_drops += 1
+        self.pending_cancels[frame["rid"]] = {
+            "dest": dest_id, "frame": frame, "attempts": 0,
+            "due": time.monotonic() + self.spec.resend_interval_s}
 
     # ------------------------------------------------------------ failover
     def _declare_dead(self, rid_replica: str) -> None:
@@ -342,10 +435,16 @@ class LBServer:
                 or rid_replica not in self.known_replicas:
             return
         self.dead_targets.add(rid_replica)
+        # epoch bump: every frame the zombie sends for pre-death work now
+        # fails the generation fence (discarded exactly once, with a
+        # resack so resent terminals stop)
+        self.gen[rid_replica] = self.gen.get(rid_replica, 1) + 1
         self.core.target_removed(rid_replica)
         self.transport.forget(rid_replica)
         self.hb_views.pop(rid_replica, None)
         self.node.drop(rid_replica)
+        self.node.schedule_redial(rid_replica)    # heal path: redial +
+                                                  # re-attach until hb resumes
         stranded = [(rid, req) for rid, (req, tgt) in self.inflight.items()
                     if tgt == rid_replica]
         for rid, req in stranded:
@@ -361,18 +460,74 @@ class LBServer:
                             f"({len(stranded)} re-dispatched)"))
 
     # ------------------------------------------------------------ handlers
+    def _fenced(self, conn, m: dict) -> bool:
+        """Drop frames stamped with a pre-death generation (a healed
+        zombie streaming for work that was already re-dispatched).  Fenced
+        TERMINALS still get a resack so the zombie stops resending."""
+        if conn.id is None or conn.id not in self.known_replicas:
+            return False                  # fence applies at the dispatch hop
+        g = m.get("gen")
+        if g is None or g == self.gen.get(conn.id, 1):
+            return False
+        self.fenced_frames += 1
+        if m.get("t") == "result":
+            conn.send(wire.msg("resack", rid=m["res"]["rid"]))
+        return True
+
     def handle(self, conn, m: dict) -> None:
         t = m.get("t")
         if t == "hb":
             self.transport.saw(m["id"])
             self.hb_views[m["id"]] = m["view"]
+            if m["id"] in self.dead_targets:
+                # a presumed-dead replica's heartbeats resumed (healed
+                # partition or successful redial): revive it as a target;
+                # its stale generation keeps zombie frames fenced
+                self.dead_targets.discard(m["id"])
+                self.known_replicas.add(m["id"])
+                self.core.target_added(TargetView(**m["view"]))
+                self.events.append((time.monotonic(),
+                                    f"revived {m['id']}"))
         elif t == "rhb":
             self.transport.saw(m["id"])
             self.peer_views[m["id"]] = m["view"]
         elif t == "token" or t == "admit":
+            if self._fenced(conn, m):
+                return
             self._on_token(m)
         elif t == "result":
+            if self._fenced(conn, m):
+                return
+            rid = m["res"]["rid"]
+            conn.send(wire.msg("resack", rid=rid))   # ack the hop sender
+            # hop-local dedupe of RESENT copies of one computation: the
+            # key pins (source, rid, origin, generation) so a legitimate
+            # re-computation of the same rid (re-homed after adoption:
+            # new origin; re-dispatched after declare-dead: new gen) is
+            # never mistaken for a resend
+            key = (conn.id, rid, m.get("origin"), m.get("gen"))
+            if key in self.seen_results:
+                self.dup_suppressed += 1   # a resend crossed our resack
+                return
+            self.seen_results.add(key)
             self._on_result(m)
+        elif t == "resack":
+            self.unacked_results.pop(m["rid"], None)
+        elif t == "ping":
+            conn.send(wire.msg("pong", nonce=m.get("nonce"),
+                               id=self.region))
+        elif t == "chaos":
+            target, fault = wire.decode_chaos(m)
+            if target == "*":
+                ids = {i for i in self.node.by_id if i != "ctl"}
+                ids |= set(self.node.faults)         # heal covers all faults
+                for i in ids:
+                    self.node.set_fault(i, fault)
+            else:
+                self.node.set_fault(target, fault)
+            self.events.append((time.monotonic(),
+                                f"chaos {target}: "
+                                f"{'heal' if fault is None else fault}"))
         elif t == "submit":
             req = wire.decode_request(m["req"])
             self.issued += 1
@@ -435,6 +590,10 @@ class LBServer:
         elif t == "_lost":
             if conn.id and conn.id in self.known_replicas:
                 self._declare_dead(conn.id)
+            elif conn.id and conn.id in self.peers:
+                # peer LB link dropped: if we were the dialer, redial with
+                # backoff (the peer may be alive behind a transient fault)
+                self.node.schedule_redial(conn.id)
 
     # ------------------------------------------------------------ KV pulls
     def _serve_kvpull(self, m: dict) -> None:
@@ -475,10 +634,11 @@ class LBServer:
         self._track_dispatch(req, target)
         d = wire.msg("deliver",
                      req=wire.encode_request(req, deadline=wire.STRIP),
-                     origin=self._origin_of(req))
+                     origin=self._origin_of(req), gen=self._gen_of(target))
         if kv and kv.get("n", 0) > 0:
             d["kv"] = kv
-        self.node.send_to(target, d)
+        if not self.node.send_to(target, d):
+            self.send_drops += 1
 
     # -------------------------------------------------------------- timers
     def _local_probe(self) -> None:
@@ -518,14 +678,48 @@ class LBServer:
         for rid in [r for r, due in self.expiry.items() if now > due]:
             self.expiry.pop(rid, None)
             self._cancel_request(rid, "deadline")
-        # stale replicas -> failover
-        for r in list(self.hb_views):
-            if not self.transport.target_alive(r):
+        # presumed-dead replicas -> failover.  EOF + stale is a dead
+        # process (no grace); stale-but-connected gets partition_grace_s
+        # for heartbeats to resume before inflight work is re-dispatched.
+        # Checked over KNOWN replicas, not hb_views: a replica whose link
+        # faulted before its first heartbeat landed must still be
+        # declarable (its freshness was seeded at dial time).
+        for r in list(self.known_replicas):
+            if r not in self.dead_targets and self.transport.presumed_dead(r):
                 self._declare_dead(r)
-        # timed-out KV pulls -> deliver without the payload (recompute)
-        for rid in [r for r, p in self.pulls.items() if now > p[5]]:
-            req, _peer, target, _plen, _ptok, _due = self.pulls.pop(rid)
-            self._deliver_with_kv(req, target, None)
+        # KV pulls: a pull parked on a DEAD peer link aborts to recompute
+        # immediately; a timed-out pull falls back the same way instead of
+        # wedging the request
+        for rid, p in list(self.pulls.items()):
+            _req, peer, _target, _plen, _ptok, due = p
+            if now > due or not self.transport.peer_alive(peer):
+                req, _peer, target, _plen, _ptok, _due = self.pulls.pop(rid)
+                self.kv_pull_timeouts += 1
+                self._deliver_with_kv(req, target, None)
+        # degraded mode: all peer links down -> serve local-only (the core
+        # already filters peers by liveness; this makes the state explicit)
+        if self.peers:
+            degraded = not any(self.transport.peer_alive(p)
+                               for p in self.peers)
+            if degraded != self.degraded:
+                self.degraded = degraded
+                self.degraded_transitions += 1
+                self.events.append((now, "degraded: serving local-only"
+                                    if degraded else "degraded: recovered"))
+        # reconnect machinery: due redials, then re-attach nudges for
+        # dead-but-connected replicas (their attach hello may have been
+        # blackholed; resend until heartbeats resume)
+        self.node.maybe_redial(now)
+        if now >= self._reattach_due:
+            self._reattach_due = now + 0.5
+            for r in list(self.dead_targets):
+                c = self.node.by_id.get(r)
+                if c is not None and c.alive:
+                    c.send(wire.msg("attach", id=self.region, kind="lb"))
+        # unacked required frames (results, cancels)
+        if now >= self._resend_due:
+            self._resend_due = now + self.spec.resend_interval_s
+            self._resend_unacked(now)
 
     # ------------------------------------------------------------- metrics
     def snapshot(self) -> dict:
@@ -542,6 +736,16 @@ class LBServer:
             "wasted_work_tok": self.wasted_work_tok,
             "kv_decisions": dict(self.core.kv_decisions),
             "pulled_tokens": self.core.pulled_tokens,
+            "fenced_frames": self.fenced_frames,
+            "dup_suppressed": self.dup_suppressed,
+            "send_drops": self.send_drops,
+            "kv_pull_timeouts": self.kv_pull_timeouts,
+            "degraded_transitions": self.degraded_transitions,
+            "degraded": self.degraded,
+            "reconnects": self.node.reconnects,
+            "fault_dropped_send": self.node.fault_dropped_send,
+            "fault_dropped_recv": self.node.fault_dropped_recv,
+            "unacked_results": len(self.unacked_results),
             "events": [e for _, e in self.events],
         }
 

@@ -50,6 +50,19 @@ def merge_snapshots(snaps: list[dict]) -> dict:
         # authoritative judge for drill gates; this is the plane's view)
         "unresolved": max(0, issued - resolved),
         "steps": sum(s.get("steps", 0) for s in reps),
+        # partition-tolerance counters (fence/chaos machinery)
+        "fenced_frames": sum(s.get("fenced_frames", 0) for s in lbs),
+        "dup_suppressed": sum(s.get("dup_suppressed", 0) for s in lbs),
+        "send_drops": sum(s.get("send_drops", 0) for s in lbs),
+        "kv_pull_timeouts": sum(s.get("kv_pull_timeouts", 0) for s in lbs),
+        "degraded_transitions": sum(s.get("degraded_transitions", 0)
+                                    for s in lbs),
+        "reconnects": sum(s.get("reconnects", 0) for s in snaps),
+        "fault_dropped_send": sum(s.get("fault_dropped_send", 0)
+                                  for s in snaps),
+        "fault_dropped_recv": sum(s.get("fault_dropped_recv", 0)
+                                  for s in snaps),
+        "unacked_results": sum(s.get("unacked_results", 0) for s in snaps),
         "n_processes": len(snaps),
         "per_process": list(snaps),
     }

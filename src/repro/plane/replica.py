@@ -249,6 +249,14 @@ class _ReplicaServer:
         self.running = True
         self.delivered = 0
         self.redispatched = 0
+        # partition tolerance: the fencing generation each rid was
+        # delivered under (echoed on admit/token/result so the LB can
+        # discard zombie frames), and terminal results not yet resacked
+        # by the LB (resent on re-attach — heal never loses a finished
+        # request)
+        self.req_gen: dict[int, int] = {}
+        self.unacked: dict[int, dict] = {}  # rid -> result frame
+        self._resend_due = 0.0
         self._hb_due = 0.0
         self._t0 = time.monotonic()
 
@@ -257,19 +265,26 @@ class _ReplicaServer:
         if self.lb_conn is not None and self.lb_conn.alive:
             self.lb_conn.send(msg)
 
-    def _wire_request(self, req: GenRequest, origin: str) -> None:
+    def _wire_request(self, req: GenRequest, origin: str,
+                      gen: int = 1) -> None:
         rid = req.rid
+        self.req_gen[rid] = gen
 
         def on_admit(_req, t):
-            self._send_lb(wire.msg("admit", rid=rid, origin=origin))
+            self._send_lb(wire.msg("admit", rid=rid, origin=origin,
+                                   gen=gen))
 
         def on_token(_req, tok, idx, t):
             self._send_lb(wire.msg("token", rid=rid, tok=int(tok),
-                                   idx=int(idx), origin=origin))
+                                   idx=int(idx), origin=origin, gen=gen))
 
         def on_done(res: GenResult):
-            self._send_lb(wire.msg("result", res=wire.encode_result(res),
-                                   origin=origin))
+            frame = wire.msg("result", res=wire.encode_result(res),
+                             origin=origin, gen=gen)
+            # park until the LB resacks: a result sent into a blackhole
+            # (or while orphaned) is resent on re-attach and periodically
+            self.unacked[rid] = frame
+            self._send_lb(frame)
 
         req.on_admit, req.on_token, req.on_done = on_admit, on_token, on_done
 
@@ -280,6 +295,11 @@ class _ReplicaServer:
             self.node.register(conn, m["id"])
             if m.get("kind", "lb") == "lb":
                 self.lb_conn = conn
+                # re-attach after a lost link: unacked terminal results
+                # flow again immediately (heal never loses a finished
+                # request; the LB dedupes/fences as needed)
+                for frame in list(self.unacked.values()):
+                    conn.send(frame)
         elif t == "deliver":
             if self.draining:
                 # nothing may be lost during drain: bounce the request back
@@ -294,11 +314,24 @@ class _ReplicaServer:
             kv = m.get("kv")
             if kv and kv.get("n", 0) > 0:
                 self._import_kv(kv)
-            self._wire_request(req, m.get("origin", ""))
+            self._wire_request(req, m.get("origin", ""),
+                               gen=m.get("gen", 1))
             self.delivered += 1
             self.engine.submit(req)
         elif t == "cancel":
             self.engine.cancel(m["rid"], m.get("reason", "cancelled"))
+        elif t == "resack":
+            self.unacked.pop(m["rid"], None)
+            self.req_gen.pop(m["rid"], None)
+        elif t == "chaos":
+            target, fault = wire.decode_chaos(m)
+            if target == "*":
+                ids = {i for i in self.node.by_id if i != "ctl"}
+                ids |= set(self.node.faults)
+                for i in ids:
+                    self.node.set_fault(i, fault)
+            else:
+                self.node.set_fault(target, fault)
         elif t == "kvfetch":
             n, k, v = self.engine.export_prefix(tuple(m["tokens"]))
             payload = _encode_kv(tuple(m["tokens"]), n, k, v)
@@ -353,6 +386,11 @@ class _ReplicaServer:
             "kv_utilization": e.kv_utilization(),
             "pending": e.pending_count(),
             "outstanding": e.outstanding(),
+            "unacked_results": len(self.unacked),
+            "lb_attached": bool(self.lb_conn is not None
+                                and self.lb_conn.alive),
+            "fault_dropped_send": self.node.fault_dropped_send,
+            "fault_dropped_recv": self.node.fault_dropped_recv,
         }
 
     def _heartbeat(self) -> None:
@@ -386,6 +424,10 @@ class _ReplicaServer:
             if now >= self._hb_due:
                 self._heartbeat()
                 self._hb_due = now + self.spec.hb_interval_s
+            if self.unacked and now >= self._resend_due:
+                self._resend_due = now + 0.25
+                for frame in list(self.unacked.values()):
+                    self._send_lb(frame)
         # graceful exit: final heartbeat-silence is expected; announce
         self._send_lb(wire.msg("bye", id=self.spec.rid,
                                metrics=self.snapshot()))

@@ -43,6 +43,7 @@ class SocketTransport:
 
     def __init__(self, node: Node, origin: str, *,
                  stale_after_s: float = 0.5,
+                 partition_grace_s: float = 0.0,
                  on_dispatch: Optional[Callable] = None,
                  on_pull: Optional[Callable] = None,
                  on_hedge: Optional[Callable] = None,
@@ -50,6 +51,11 @@ class SocketTransport:
         self.node = node
         self.origin = origin                 # this LB's region id
         self.stale_after_s = stale_after_s
+        # extra patience before declaring a STALE-BUT-CONNECTED peer dead:
+        # a blackholed or delay-spiked link keeps the TCP conn up (no EOF),
+        # and heartbeats may resume — that is a link fault, not a death.
+        # EOF + stale is a dead process and gets no grace.
+        self.partition_grace_s = partition_grace_s
         self.last_seen: dict[str, float] = {}    # id -> monotonic heartbeat
         # owner hooks: inflight tracking (failover re-dispatch), the
         # pending-pull table, and the hedge race — per-request state that
@@ -59,6 +65,7 @@ class SocketTransport:
         self.on_pull = on_pull               # (req, peer, target, plen, ptok)
         self.on_hedge = on_hedge             # (clone, primary, peer_id)
         self.origin_of = origin_of           # (req) -> origin region id
+        self.gen_of = None                   # (target_id) -> fencing epoch
 
     # ------------------------------------------------------------ liveness
     def now(self) -> float:
@@ -86,6 +93,31 @@ class SocketTransport:
     def peer_alive(self, peer_id: str) -> bool:
         return self._fresh(peer_id)
 
+    def link_up(self, peer_id: str) -> bool:
+        """Is the TCP conn to `peer_id` still established (regardless of
+        heartbeat freshness)?"""
+        conn = self.node.by_id.get(peer_id)
+        return bool(conn is not None and conn.alive)
+
+    def presumed_dead(self, peer_id: str) -> bool:
+        """Should the owner `_declare_dead` this peer?  Two regimes:
+
+        * stale + conn EOF'd  -> the process is gone (kill -9); declare
+          as soon as the heartbeat goes stale.
+        * stale + conn alive  -> the LINK may be down (blackhole, delay
+          spike); wait out `partition_grace_s` past staleness before
+          giving up, keeping inflight work parked meanwhile.
+        """
+        ts = self.last_seen.get(peer_id)
+        if ts is None:
+            return False
+        age = self.now() - ts
+        if age <= self.stale_after_s:
+            return False
+        if not self.link_up(peer_id):
+            return True
+        return age > self.stale_after_s + self.partition_grace_s
+
     # ------------------------------------------------------------ movement
     def _req_origin(self, req) -> str:
         if self.origin_of is not None:
@@ -97,9 +129,12 @@ class SocketTransport:
     def deliver(self, req, target_id: str) -> None:
         if self.on_dispatch is not None:
             self.on_dispatch(req, target_id)
-        self.node.send_to(target_id, wire.msg(
+        d = wire.msg(
             "deliver", req=wire.encode_request(req, deadline=wire.STRIP),
-            origin=self._req_origin(req)))
+            origin=self._req_origin(req))
+        if self.gen_of is not None:
+            d["gen"] = self.gen_of(target_id)
+        self.node.send_to(target_id, d)
 
     def forward(self, req, peer_id: str) -> None:
         frame = wire.msg(

@@ -20,8 +20,23 @@ field — the full vocabulary of the plane:
     cancel             cancel/deadline propagation (idempotent per rid)
     kvpull/kvfetch/    cross-region KV-prefix transfer (request, replica
     kvpages            export, payload back)
+    chaos              host -> process: install/heal a LinkFault on the
+                       link to ``target`` (never sent over a faulted
+                       link — the control conn is exempt from chaos)
+    resack             receiver -> sender ack for a terminal ``result``
+                       frame; the sender resends unacked results on
+                       reconnect until the resack arrives (heal never
+                       loses a finished request)
+    ping/pong          client <-> LB liveness probe (a blackholed LB
+                       produces no EOF, so the client needs its own
+                       freshness signal to re-home requests)
     drain/shutdown/bye graceful lifecycle; ``bye`` carries a final metrics
     metrics?/metrics   Ray-Serve-style per-process snapshot on demand
+
+Fencing fields: ``deliver`` frames carry ``gen`` — the LB's per-target
+generation, bumped on every `_declare_dead` — and replicas echo it on
+``admit``/``token``/``result`` so a healed zombie's frames (stamped with
+a pre-death generation) are discarded exactly once at the LB.
 
 Deadline clock ownership (the cross-process rule): ``time.monotonic()``
 has a PER-PROCESS epoch, so an ``arrival_s`` stamped in one process is
@@ -230,6 +245,19 @@ def msg(t: str, **fields: Any) -> dict:
     """Tiny constructor: msg("cancel", rid=3, reason="deadline")."""
     fields["t"] = t
     return fields
+
+
+def encode_chaos(target: str, fault) -> dict:
+    """Chaos control frame: install `fault` (a LinkFault, or None to
+    heal) on the receiving process's link to `target` ("*" = every
+    known link)."""
+    return {"t": "chaos", "target": target,
+            "fault": None if fault is None else fault.encode()}
+
+
+def decode_chaos(d: dict):
+    from repro.plane.chaos import LinkFault
+    return d.get("target", "*"), LinkFault.decode(d.get("fault"))
 
 
 def encode_bytes(b: bytes):

@@ -1,0 +1,397 @@
+"""Chaos drills for the partition-tolerant serving plane.
+
+These are the link-fault counterparts of the kill -9 drills in
+test_plane.py: nothing dies — links blackhole, delay-spike, and heal at
+runtime (repro.plane.chaos) — and the plane must come out the other side
+with every request resolved exactly once:
+
+    unresolved == 0          nothing lost
+    duplicate_results == 0   nothing resolved twice (the generation fence
+                             and the zombie-region fence both held)
+
+The fault model under test:
+
+    blackhole       frames dropped at the sender pacer; NO EOF, so the
+                    peer looks stale-but-connected and gets the grace
+                    window before being declared dead
+    delay spike     heartbeats arrive too late; a LIVE replica is
+                    declared dead (false positive) — the fence must
+                    suppress its post-heal frames
+    partition+heal  a whole region cut from peers and the client; the
+                    client re-homes on ping silence, the zombie region's
+                    late results are fenced, heal reaps the zombies
+    flapping        blackhole/heal cycles SHORTER than the grace window:
+                    nobody is declared dead, resends recover lost results
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.frontend import Client
+from repro.plane import chaos, wire
+from repro.plane.mailbox import Node
+from repro.serving.request import GenRequest, SamplingParams
+
+
+def _req(prompt=(1, 2, 3, 4), max_new=4, **kw):
+    return GenRequest(prompt_tokens=tuple(prompt),
+                      sampling=SamplingParams(max_new_tokens=max_new), **kw)
+
+
+def _mkplane(**kw):
+    from repro.plane import PlaneConfig, ServingPlane
+    cfg = dict(regions=("eu", "us"), replicas=2, wan_delay_ms=5.0,
+               time_scale=0.05, stale_after_s=0.25, partition_grace_s=0.3)
+    cfg.update(kw)
+    return ServingPlane(PlaneConfig(**cfg)).start()
+
+
+def _drain(client, handles, timeout_s=30.0):
+    t0 = time.monotonic()
+    while any(not h.done for h in handles) \
+            and time.monotonic() - t0 < timeout_s:
+        client.poll()
+    return [h.state.value for h in handles]
+
+
+def _wait_all_streaming(client, handles, timeout_s=15.0):
+    """Every request admitted and streaming BEFORE the fault lands: the
+    drills exercise loss of tokens/results/heartbeats, not loss of the
+    initial deliver frame (which only a declare-dead would re-send)."""
+    t0 = time.monotonic()
+    while not all(h.events for h in handles) \
+            and time.monotonic() - t0 < timeout_s:
+        client.poll()
+    assert all(h.events for h in handles), "not all requests started"
+
+
+def _poll_for(client, seconds):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < seconds:
+        client.poll()
+
+
+def _wait_metric(client, probe, timeout_s=15.0):
+    """Poll the client while waiting for `probe()` (a metrics check) to go
+    true: post-heal zombie frames arrive up to a delay-spike later, so
+    fence counters lag the last client-visible result."""
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout_s:
+        if probe():
+            return True
+        _poll_for(client, 0.25)
+    return probe()
+
+
+# ------------------------------------------------------------- unit layer
+
+class TestLinkFault:
+    def test_codec_roundtrip(self):
+        f = chaos.LinkFault(drop_send=True, extra_delay_s=0.5, jitter_s=0.1)
+        assert chaos.LinkFault.decode(f.encode()) == f
+        assert chaos.LinkFault.decode(None) is None
+        t, g = wire.decode_chaos(wire.encode_chaos("us-r0", f))
+        assert t == "us-r0" and g == f
+        t, g = wire.decode_chaos(wire.encode_chaos("*", None))
+        assert t == "*" and g is None
+
+    def test_blackhole_drops_at_sender_pacer(self):
+        a, b = Node(), Node()
+        try:
+            a.connect(b.addr, "b", hello=wire.msg("hello", id="a"))
+            got = b.poll(2.0)
+            assert got is not None and got[1]["id"] == "a"
+            b.register(got[0], "a")
+            a.set_fault("b", chaos.blackhole())
+            assert a.send_to("b", wire.msg("x"))     # accepted by the pacer
+            assert b.poll(0.3) is None               # ...never hits the wire
+            assert a.fault_dropped_send >= 1
+            a.set_fault("b", None)                   # heal
+            a.send_to("b", wire.msg("y"))
+            got = b.poll(2.0)
+            assert got is not None and got[1]["t"] == "y"
+        finally:
+            a.close(), b.close()
+
+    def test_asymmetric_partition_drops_inbound(self):
+        a, b = Node(), Node()
+        try:
+            a.connect(b.addr, "b", hello=wire.msg("hello", id="a"))
+            got = b.poll(2.0)
+            b.register(got[0], "a")
+            # a refuses to HEAR b; a->b still works
+            a.set_fault("b", chaos.partition_in())
+            b.send_to("a", wire.msg("x"))
+            assert a.poll(0.3) is None
+            assert a.fault_dropped_recv >= 1
+            a.send_to("b", wire.msg("y"))
+            got = b.poll(2.0)
+            assert got is not None and got[1]["t"] == "y"
+        finally:
+            a.close(), b.close()
+
+    def test_fault_survives_redial(self):
+        a, b = Node(), Node()
+        try:
+            a.connect(b.addr, "b", hello=wire.msg("hello", id="a"))
+            b.poll(2.0)
+            a.set_fault("b", chaos.blackhole())
+            a.drop("b")                              # conn gone, fault stays
+            assert a.schedule_redial("b")
+            t0 = time.monotonic()
+            while "b" not in a.by_id and time.monotonic() - t0 < 3:
+                a.maybe_redial()
+                time.sleep(0.02)
+            assert a.by_id["b"].fault is not None    # re-applied on redial
+            assert a.reconnects == 1
+        finally:
+            a.close(), b.close()
+
+
+def test_connect_retries_slow_listener():
+    """Startup dialing survives a peer that is slow to bind: the listener
+    appears 300ms after the first (refused) dial."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    addr = probe.getsockname()
+    probe.close()                        # port free but nothing listening
+    accepted = []
+
+    def _late_bind():
+        time.sleep(0.3)
+        srv = socket.socket()
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(addr)
+        srv.listen(1)
+        accepted.append(srv.accept()[0])
+        srv.close()
+
+    t = threading.Thread(target=_late_bind, daemon=True)
+    t.start()
+    n = Node()
+    try:
+        conn = n.connect(addr, "late")   # would raise without retry
+        assert conn.alive
+        t.join(3.0)
+        assert accepted
+    finally:
+        for s in accepted:
+            s.close()
+        n.close()
+
+
+def test_kvpull_timeout_falls_back_to_recompute():
+    """A parked kvpull whose reply never comes must fall back to delivering
+    without the payload (recompute) instead of wedging the request; a pull
+    parked on a DEAD peer link aborts early the same way."""
+    from repro.plane.lb import LBServer, LBSpec
+    lb = LBServer(LBSpec(region="us", pull_timeout_s=0.05))
+    sink = Node()
+    try:
+        lb.node.connect(sink.addr, "eu")
+        lb.peers["eu"] = 0.0
+        lb.transport.saw("eu")
+        assert lb.transport.peer_alive("eu")
+        req = _req(prompt=range(16), max_new=4)
+        lb.origin_map[req.rid] = "us"
+        # timeout path: peer alive, reply never arrives
+        lb.pulls[req.rid] = (req, "eu", "us-r0", 8, 8,
+                             time.monotonic() - 1.0)
+        lb._sweep()
+        assert req.rid not in lb.pulls
+        assert lb.kv_pull_timeouts == 1
+        # target isn't alive either -> the request went back to the core
+        # (recompute locally), not into the void
+        assert any(r.rid == req.rid for r in lb.core.queue)
+        # dead-peer path: parked with plenty of timeout budget, but the
+        # peer link went down -> immediate abort to recompute
+        lb.transport.forget("eu")
+        req2 = _req(prompt=range(16, 32), max_new=4)
+        lb.origin_map[req2.rid] = "us"
+        lb.pulls[req2.rid] = (req2, "eu", "us-r0", 8, 8,
+                              time.monotonic() + 60.0)
+        lb._sweep()
+        assert req2.rid not in lb.pulls
+        assert lb.kv_pull_timeouts == 2
+        # all peers down -> the LB noted the degraded transition
+        assert lb.degraded and lb.degraded_transitions >= 1
+    finally:
+        lb.node.close()
+        sink.close()
+
+
+def test_grace_window_liveness():
+    """transport.presumed_dead: EOF + stale -> dead at stale_after_s;
+    stale-but-connected -> only after stale_after_s + partition_grace_s."""
+    from repro.plane.transport import SocketTransport
+    a, b = Node(), Node()
+    try:
+        tr = SocketTransport(a, "us", stale_after_s=0.1,
+                             partition_grace_s=10.0)
+        a.connect(b.addr, "us-r0")
+        tr.saw("us-r0", ts=tr.now() - 0.2)       # stale...
+        assert not tr.target_alive("us-r0")      # ...not routable
+        assert not tr.presumed_dead("us-r0")     # ...but conn is up: grace
+        a.by_id["us-r0"].alive = False           # EOF'd + stale: dead now
+        assert tr.presumed_dead("us-r0")
+        a.by_id["us-r0"].alive = True
+        tr.partition_grace_s = 0.05              # grace elapsed: dead too
+        assert tr.presumed_dead("us-r0")
+    finally:
+        a.close(), b.close()
+
+
+# ------------------------------------------------------------ drill layer
+
+def test_blackhole_replica_link_failover_and_fence():
+    """Drill 1: blackhole a replica's link mid-stream.  No EOF — the LB
+    waits out the grace window, declares the replica dead, bumps its
+    generation, and re-dispatches.  After heal the zombie's frames are
+    fenced and every request resolves exactly once."""
+    plane = _mkplane(regions=("us",), replicas=2, time_scale=0.1)
+    host = plane.host()
+    try:
+        client = Client(host)
+        hs = [client.submit(_req(prompt=range(i, i + 25), max_new=200),
+                            region="us") for i in range(6)]
+        _wait_all_streaming(client, hs)
+        assert plane.blackhole_link("us", "us-r0")
+        # stale (0.25) + grace (0.3) + slack: declared dead, re-dispatched
+        _poll_for(client, 1.2)
+        assert plane.heal_link("us", "us-r0")
+        states = _drain(client, hs, 40.0)
+        assert states == ["finished"] * 6
+        assert host.counters()["duplicate_results"] == 0
+        m = plane.metrics()
+        assert m["unresolved"] == 0
+        assert m["redispatched"] >= 1, "grace expiry must have failed over"
+        us = next(s for s in m["per_process"]
+                  if s.get("kind") == "lb" and s["id"] == "us")
+        assert any("failover us-r0" in e for e in us["events"])
+        assert m["fault_dropped_send"] + m["fault_dropped_recv"] > 0
+        # after heal + re-attach the zombie resends its old-generation
+        # terminals; they must hit the fence (and be resacked exactly once)
+        assert _wait_metric(
+            client, lambda: plane.metrics()["fenced_frames"] >= 1), \
+            "the zombie's resent results must hit the generation fence"
+        assert host.counters()["duplicate_results"] == 0
+    finally:
+        host.close()
+        plane.shutdown()
+
+
+def test_delay_spike_false_positive_death_is_fenced():
+    """Satellite drill: a delay spike (not a crash) makes a LIVE replica's
+    heartbeats arrive too late — the LB declares it dead and re-dispatches.
+    The zombie keeps computing and its late frames carry the pre-death
+    generation: every one must be fenced, and the re-dispatched copy is
+    the only one that resolves."""
+    plane = _mkplane(regions=("us",), replicas=2, time_scale=0.1)
+    host = plane.host()
+    try:
+        client = Client(host)
+        hs = [client.submit(_req(prompt=range(i, i + 25), max_new=200),
+                            region="us") for i in range(6)]
+        _wait_all_streaming(client, hs)
+        # the fault sits at the REPLICA endpoint: everything it sends
+        # (heartbeats, tokens, results) arrives 1.5s late — well past
+        # stale_after_s + partition_grace_s, but the link never EOFs
+        assert plane.chaos("rep:us-r0", "us", chaos.delay(1.5))
+        _poll_for(client, 1.2)
+        assert plane.chaos("rep:us-r0", "us", None)      # heal
+        states = _drain(client, hs, 40.0)
+        assert states == ["finished"] * 6
+        assert host.counters()["duplicate_results"] == 0
+        m = plane.metrics()
+        assert m["unresolved"] == 0
+        assert m["redispatched"] >= 1
+        us = next(s for s in m["per_process"]
+                  if s.get("kind") == "lb" and s["id"] == "us")
+        assert any("failover us-r0" in e for e in us["events"])
+        # the zombie's frames arrive a full delay-spike late: wait for them
+        assert _wait_metric(
+            client, lambda: plane.metrics()["fenced_frames"] >= 1), \
+            "the zombie's late frames must hit the generation fence"
+        assert host.counters()["duplicate_results"] == 0
+    finally:
+        host.close()
+        plane.shutdown()
+
+
+def test_partition_and_heal_region():
+    """Drill 2 (the acceptance drill): blackhole one region's LB from all
+    peers AND the client mid-stream; heal after >= 2x stale_after_s.  The
+    client re-homes on ping silence, the zombie region's late results are
+    fenced at the client, heal reaps the zombie copies — unresolved == 0,
+    duplicate_results == 0, and at least one fenced frame observed."""
+    plane = _mkplane(time_scale=0.1)
+    host = plane.host()
+    try:
+        client = Client(host)
+        hs = [client.submit(_req(prompt=range(i, i + 25), max_new=200),
+                            region=("us" if i % 2 else "eu"))
+              for i in range(6)]
+        _wait_all_streaming(client, hs)
+        # cut "us" off from its peers (both directions, at both LBs)...
+        assert plane.isolate_region("us")
+        # ...and from the client (the client owns its own endpoint)
+        host.node.set_fault("us", chaos.blackhole())
+        # >= 2x stale_after_s: the client's ping silence crosses its
+        # down_after threshold and the strays re-home to "eu"
+        _poll_for(client, 3 * plane.cfg.stale_after_s)
+        assert host.rehomed >= 1, "client must have re-homed us strays"
+        host.node.set_fault("us", None)                  # heal the client..
+        assert plane.heal_region("us")                   # ..and the WAN
+        states = _drain(client, hs, 40.0)
+        assert states == ["finished"] * 6
+        assert host.counters()["duplicate_results"] == 0
+        # the zombie region's copies surface (or are cancel-reaped) only
+        # after the heal propagates: wait for the first fenced frame
+        assert _wait_metric(
+            client, lambda: host.counters()["fenced_frames"] >= 1), \
+            "the zombie region's post-heal frames must be fenced"
+        assert host.counters()["duplicate_results"] == 0
+        m = plane.metrics()
+        assert m["unresolved"] == 0
+        # while isolated, the cut-off LB saw ALL its peers go dark and
+        # flipped to degraded local-only mode (and back after heal)
+        assert m["degraded_transitions"] >= 1
+    finally:
+        host.close()
+        plane.shutdown()
+
+
+def test_flapping_link_resends_recover():
+    """Drill 3: blackhole/heal cycles SHORTER than the grace window.  The
+    replica is never declared dead; frames lost inside each blackhole
+    (including terminal results) are recovered by the resend-until-resack
+    path, and nothing resolves twice."""
+    plane = _mkplane(regions=("us",), replicas=2, time_scale=0.1,
+                     partition_grace_s=1.0)
+    host = plane.host()
+    try:
+        client = Client(host)
+        hs = [client.submit(_req(prompt=range(i, i + 25), max_new=30),
+                            region="us") for i in range(6)]
+        _wait_all_streaming(client, hs)
+        for _ in range(3):                   # flap: 150ms dark, 250ms lit
+            assert plane.blackhole_link("us", "us-r0")
+            _poll_for(client, 0.15)
+            assert plane.heal_link("us", "us-r0")
+            _poll_for(client, 0.25)
+        states = _drain(client, hs, 40.0)
+        assert states == ["finished"] * 6
+        assert host.counters()["duplicate_results"] == 0
+        m = plane.metrics()
+        assert m["unresolved"] == 0
+        us = next(s for s in m["per_process"]
+                  if s.get("kind") == "lb" and s["id"] == "us")
+        # under-grace flaps never kill the target
+        assert not any("failover us-r0" in e for e in us["events"])
+    finally:
+        host.close()
+        plane.shutdown()
