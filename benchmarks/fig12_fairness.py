@@ -1,0 +1,174 @@
+"""Fig. 12 (beyond-paper) — multi-tenant fairness & admission control.
+
+Two scenarios over the heavy-tailed tenant workload
+(`workloads.tenant_request_stream`: Zipf demand, the heaviest tenants
+maximally cache-affine):
+
+FAIRNESS   An abusive tenant's long shared prefix wins both the router's
+           trie affinity (all its traffic concentrates on the warm
+           replica) and cheap cache-hit admissions — under FCFS the
+           victim tenants' TTFT tail blows up while the abuser cruises.
+           The VTC arm turns on the full fairness stack: per-replica
+           Virtual Token Counter scheduling (`ReplicaConfig(
+           discipline="vtc")`) plus the router-level service ledger
+           (`fairness=True` — a heavy tenant loses its affinity override
+           and is spread least-load).  GATES (raised here, diffed via
+           BENCH_summary.json):
+             - per-tenant p90 TTFT spread (max/min) drops >= 2x vs FCFS
+             - aggregate goodput equal-or-better than FCFS
+
+SHED       Same abusive workload with deadlines attached, run far past
+           saturation.  Baseline drops requests mid-flight (deadline
+           aborts AFTER burning prefill); the admission arm turns on SLO
+           lanes + deadline-aware shedding (`admission=True,
+           slo_lanes=True` and `shed_deadline=True` at the replica), so
+           hopeless requests are refused up-front with FinishReason.SHED.
+           GATES: sheds fire (> 0) and SLO attainment does not regress.
+"""
+from __future__ import annotations
+
+from repro.core.simulator import ReplicaConfig
+from repro.core.system import ServingSystem
+
+REGION = "us"
+N_REPLICAS = 3
+KV_BUDGET = 4096
+N_TENANTS = 8
+HEAVY_PREFIX = 384          # the abusive tenant's shared (hot) prefix
+RATE = 30.0                 # aggregate req/s, ~saturating the warm replica
+HORIZON_S = 60.0
+SLACK_S = 25.0              # settle time after arrivals stop
+DEADLINE_S = 2.0            # shed scenario: per-request TTFT-ish budget
+TTFT_SLO_S = 1.0
+
+SPREAD_IMPROVEMENT_MIN = 2.0
+
+
+def _build(*, discipline: str, fairness: bool, admission: bool = False,
+           shed_deadline: bool = False, seed: int = 0) -> ServingSystem:
+    rcfg = ReplicaConfig(kv_budget=KV_BUDGET, discipline=discipline,
+                         shed_deadline=shed_deadline)
+    overrides = {}
+    if fairness:
+        overrides["fairness"] = True
+    if admission:
+        overrides.update(admission=True, slo_lanes=True)
+    # "bp" = blind pushing + trie affinity: per-replica queues CAN build,
+    # so the abusive tenant's affinity actually congests the warm replica
+    # (under SP-P the LB queue would absorb everything symmetrically)
+    return ServingSystem("bp", {REGION: N_REPLICAS}, replica_cfg=rcfg,
+                         seed=seed, cfg_overrides=overrides)
+
+
+def _drive(sys: ServingSystem, *, horizon: float, rate: float,
+           deadline_s=None, seed: int = 0) -> dict:
+    sys.add_tenant_load(
+        REGION, rate, horizon, deadline_s=deadline_s, seed=seed,
+        n_tenants=N_TENANTS, alpha=1.6, heavy_tenants=1,
+        heavy_prefix_len=HEAVY_PREFIX, prompt_len=48,
+        light_prefix_len=32, output_len=32)
+    s = sys.run(until=horizon + SLACK_S)
+    s["slo_attainment"] = round(sys.metrics.slo_attainment(TTFT_SLO_S), 4)
+    s["ttft_p90_spread"] = round(sys.metrics.ttft_p90_spread(), 3)
+    s["per_tenant"] = sys.metrics.per_tenant()
+    return s
+
+
+def _arm(s: dict) -> dict:
+    return {
+        "ttft_p90_spread": s["ttft_p90_spread"],
+        "ttft_p90": round(s["ttft_p90"], 3),
+        "goodput_tok_s": round(s["goodput_tok_s"], 1),
+        "throughput_tok_s": round(s["throughput_tok_s"], 1),
+        "hit_rate": round(s["hit_rate"], 4),
+        "requests": s["requests"],
+        "shed": s["shed"],
+        "deadline_aborted": s["deadline_aborted"],
+        "slo_attainment": s["slo_attainment"],
+        "unresolved": s["unresolved"],
+        "per_tenant_p90": {k: round(v["p90"], 3)
+                           for k, v in s["per_tenant"].items()},
+    }
+
+
+def run(*, horizon: float = HORIZON_S, rate: float = RATE,
+        seed: int = 0) -> dict:
+    out: dict = {}
+
+    # ---- fairness: FCFS vs the full VTC stack -------------------------
+    fcfs = _drive(_build(discipline="fcfs", fairness=False, seed=seed),
+                  horizon=horizon, rate=rate, seed=seed)
+    vtc = _drive(_build(discipline="vtc", fairness=True, seed=seed),
+                 horizon=horizon, rate=rate, seed=seed)
+    out["fcfs"] = _arm(fcfs)
+    out["vtc"] = _arm(vtc)
+    improvement = fcfs["ttft_p90_spread"] / max(1e-9, vtc["ttft_p90_spread"])
+    out["spread_improvement"] = round(improvement, 3)
+
+    # the fairness gates live HERE (goodput_tok_s is not a SUMMARY_KEYS
+    # metric, so a regression must fail the benchmark, not slip the diff)
+    if improvement < SPREAD_IMPROVEMENT_MIN:
+        raise AssertionError(
+            f"fairness gate: per-tenant p90 TTFT spread improved only "
+            f"{improvement:.2f}x (FCFS {fcfs['ttft_p90_spread']} -> VTC "
+            f"{vtc['ttft_p90_spread']}); need >= {SPREAD_IMPROVEMENT_MIN}x")
+    if vtc["goodput_tok_s"] < fcfs["goodput_tok_s"]:
+        raise AssertionError(
+            f"fairness gate: VTC goodput {vtc['goodput_tok_s']:.1f} tok/s "
+            f"regressed vs FCFS {fcfs['goodput_tok_s']:.1f} tok/s")
+
+    # ---- shed: deadline-blind vs deadline-aware admission -------------
+    # same abusive concentration (FCFS, no fairness: the warm replica's
+    # queue blows past any deadline) — the ONLY difference is admission
+    # control, so the deltas below are the shed path's doing
+    base = _drive(_build(discipline="fcfs", fairness=False, seed=seed),
+                  horizon=horizon, rate=rate,
+                  deadline_s=DEADLINE_S, seed=seed)
+    shed = _drive(_build(discipline="fcfs", fairness=False, admission=True,
+                         shed_deadline=True, seed=seed),
+                  horizon=horizon, rate=rate,
+                  deadline_s=DEADLINE_S, seed=seed)
+    out["no_admission"] = _arm(base)
+    out["admission"] = _arm(shed)
+
+    if shed["shed"] <= 0:
+        raise AssertionError(
+            "shed gate: deadline-aware admission shed nothing under "
+            f"{rate:.0f} req/s overload with {DEADLINE_S}s deadlines")
+    if not (shed["requests"] > 0 and
+            shed["slo_attainment"] == shed["slo_attainment"]):
+        raise AssertionError(
+            "shed gate: admission arm completed nothing (SLO attainment "
+            "undefined) — shedding must not starve the system")
+    if shed["slo_attainment"] < base["slo_attainment"]:
+        raise AssertionError(
+            f"shed gate: SLO attainment regressed with admission control "
+            f"({shed['slo_attainment']} < {base['slo_attainment']})")
+    if shed["goodput_tok_s"] < base["goodput_tok_s"]:
+        raise AssertionError(
+            f"shed gate: goodput regressed with admission control "
+            f"({shed['goodput_tok_s']:.1f} < {base['goodput_tok_s']:.1f} "
+            f"tok/s) — shedding should stop burning prefill on doomed work")
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    out = run(horizon=25.0, rate=RATE) if smoke else run()
+    for arm in ("fcfs", "vtc"):
+        s = out[arm]
+        print(f"[fig12] {arm:5s} spread {s['ttft_p90_spread']:7.2f}x  "
+              f"ttft_p90 {s['ttft_p90']:.3f}s  goodput "
+              f"{s['goodput_tok_s']:8.1f} tok/s  hit {s['hit_rate']:.3f}")
+    print(f"[fig12] fairness: spread improved "
+          f"{out['spread_improvement']:.2f}x (gate >= "
+          f"{SPREAD_IMPROVEMENT_MIN:.0f}x) at equal-or-better goodput")
+    for arm in ("no_admission", "admission"):
+        s = out[arm]
+        print(f"[fig12] {arm:12s} shed {s['shed']:4d}  deadline_aborted "
+              f"{s['deadline_aborted']:4d}  SLO {s['slo_attainment']:.3f}  "
+              f"goodput {s['goodput_tok_s']:8.1f} tok/s")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,12 @@ SUMMARY_KEYS = frozenset({
     # resolve every request exactly once — 0/1 outcome plus the
     # duplicate-terminal count, which must stay 0
     "partition_drill_ok", "duplicate_results",
+    # fig12 multi-tenant fairness gate: per-tenant p90 TTFT spread
+    # (max/min), deadline-aware admission sheds, and SLO attainment
+    # (already matched above) are pure functions of the deterministic
+    # tenant streams; the >=2x spread-improvement and goodput gates raise
+    # inside the benchmark itself
+    "ttft_p90_spread", "shed", "spread_improvement",
 })
 
 
@@ -96,8 +102,8 @@ def main() -> int:
 
     from benchmarks import (beyond_steal, fig3_aggregation, fig5_prefix,
                             fig6_hitrate, fig8_macro, fig9_pushing,
-                            fig10_diurnal, fig11_provision, kernels_bench,
-                            serving_bench)
+                            fig10_diurnal, fig11_provision, fig12_fairness,
+                            kernels_bench, serving_bench)
     suites = {
         "fig3": fig3_aggregation.main,
         "fig5": fig5_prefix.main,
@@ -106,6 +112,7 @@ def main() -> int:
         "fig9": fig9_pushing.main,
         "fig10": fig10_diurnal.main,
         "fig11": fig11_provision.main,
+        "fig12": fig12_fairness.main,
         "kernels": kernels_bench.main,
         "serving": serving_bench.main,
         "steal": beyond_steal.main,

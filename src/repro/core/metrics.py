@@ -21,6 +21,7 @@ class RunMetrics:
     rejected: list = dataclasses.field(default_factory=list)
     cancelled: list = dataclasses.field(default_factory=list)
     deadline_aborted: list = dataclasses.field(default_factory=list)
+    shed: list = dataclasses.field(default_factory=list)
     forwards: list = dataclasses.field(default_factory=list)
     issued: int = 0
     t_start: float = 0.0
@@ -52,6 +53,12 @@ class RunMetrics:
         """deadline_s expired before completion: aborted, not served."""
         self.deadline_aborted.append(req)
 
+    def on_shed(self, req) -> None:
+        """Shed at admission: predicted queueing delay already exceeded the
+        deadline, so the system refused it up-front instead of burning
+        prefill on a request it would abort anyway."""
+        self.shed.append(req)
+
     def _client_ttfts(self) -> list:
         """Client-observed TTFTs — the ONE definition behind both the
         reported percentiles and SLO attainment."""
@@ -65,6 +72,42 @@ class RunMetrics:
         if not ttft:
             return float("nan")
         return sum(1 for t in ttft if t <= ttft_slo_s) / len(ttft)
+
+    # ---- grouped breakdowns ------------------------------------------
+    def grouped_percentiles(self, key_fn, ps=(50, 90)) -> dict:
+        """ONE grouping implementation behind every breakdown (per-tenant,
+        per-region, per-SLO-class): client-observed TTFT percentiles keyed
+        by `key_fn(req)`. The previous per-X helpers each re-filtered
+        `completed` with subtly different guards; keeping a single code
+        path is the fix."""
+        groups: dict = {}
+        for r in self.completed:
+            if r.finished is None or r.ttft is None:
+                continue
+            groups.setdefault(key_fn(r), []).append(r.ttft - r.issued)
+        return {k: {f"p{p}": pct(v, p) for p in ps} | {"n": len(v)}
+                for k, v in sorted(groups.items())}
+
+    def per_tenant(self, ps=(50, 90)) -> dict:
+        return self.grouped_percentiles(
+            lambda r: getattr(r, "user_id", "") or "_anon", ps)
+
+    def per_region(self, ps=(50, 90)) -> dict:
+        return self.grouped_percentiles(lambda r: r.region, ps)
+
+    def per_slo_class(self, ps=(50, 90)) -> dict:
+        return self.grouped_percentiles(
+            lambda r: getattr(r, "slo_class", "standard"), ps)
+
+    def ttft_p90_spread(self) -> float:
+        """max/min of per-tenant p90 TTFT — the fig12 fairness gate.
+        1.0 = perfectly even; an abusive tenant starving others shows up
+        as a large spread under FCFS that VTC must collapse."""
+        p90s = [g["p90"] for g in self.per_tenant().values()
+                if g["p90"] == g["p90"]]          # drop NaN groups
+        if len(p90s) < 2:
+            return float("nan")
+        return max(p90s) / max(1e-9, min(p90s))
 
     # ---- summary -----------------------------------------------------
     def summary(self, replicas: Optional[list] = None) -> dict:
@@ -96,6 +139,7 @@ class RunMetrics:
             "rejected": len(self.rejected),
             "cancelled": len(self.cancelled),
             "deadline_aborted": len(self.deadline_aborted),
+            "shed": len(self.shed),
             "hedged": self.hedged,
             "hedge_wins": self.hedge_wins,
             "wasted_work_tok": self.wasted_work_tok,
@@ -105,7 +149,8 @@ class RunMetrics:
             # the system to settle (outage test asserts 0)
             "unresolved": max(0, self.issued - len(self.completed)
                               - len(self.rejected) - len(self.cancelled)
-                              - len(self.deadline_aborted)),
+                              - len(self.deadline_aborted)
+                              - len(self.shed)),
         }
         if self.cost is not None:
             s.update(self.cost)

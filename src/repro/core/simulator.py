@@ -69,7 +69,8 @@ class Request:
     prompt_tokens: tuple
     output_len: int
     output_tokens: tuple = ()       # deterministic completion (for reuse)
-    priority: int = 0               # higher may preempt lower (replica core)
+    priority: int = 0               # DEPRECATED when explicit: use slo_class
+    tenant_weight: float = 1.0      # weighted fairness (repro.tenancy)
     arrival: float = 0.0            # at first LB
     issued: float = 0.0             # at client
     ttft: Optional[float] = None    # absolute time of first token
@@ -91,6 +92,27 @@ class Request:
     # host -> frontend notifications (set by ServingSystem.submit)
     admit_cb: Optional[Callable] = None  # (req, t)
     token_cb: Optional[Callable] = None  # (req, token, index, t)
+
+    def __post_init__(self):
+        # The sim's integer `priority` used to be a second, parallel
+        # priority notion next to `slo_class`. An EXPLICIT priority with
+        # the default class now maps onto the matching SLO lane (and warns)
+        # so there is one notion; requests that set both (the frontend
+        # SimHost does, consistently) pass through untouched, and the
+        # priority value itself is preserved, so replica-core scheduling
+        # is identical either way.
+        if self.priority != 0 and self.slo_class == "standard":
+            warnings.warn(
+                "Request.priority with a default slo_class is deprecated; "
+                "set slo_class ('batch'|'interactive'|'latency') instead — "
+                "mapping the priority onto the matching SLO lane",
+                DeprecationWarning, stacklevel=3)
+            if self.priority >= 2:
+                self.slo_class = "latency"
+            elif self.priority == 1:
+                self.slo_class = "interactive"
+            else:                   # priority < 0 yields to standard
+                self.slo_class = "batch"
 
 
 def resolve_cancelled(req: Request, now: float,
@@ -127,6 +149,11 @@ class ReplicaConfig:
     spec_k: int = 0                 # drafted tokens per decode iteration
     spec_accept_rate: float = 1.0   # per-draft acceptance probability
     spec_draft_cost: float = 0.15   # drafter fwd cost as fraction of target
+    # Multi-tenant fairness + admission control (repro.tenancy); "fcfs"
+    # keeps replica decision streams byte-identical to pre-tenancy.
+    discipline: str = "fcfs"        # "fcfs" | "vtc" | "wvtc"
+    cache_discount: float = 0.25    # VTC charge rate for cache-hit tokens
+    shed_deadline: bool = False     # deadline-aware admission shedding
 
 
 class ReplicaSim:
@@ -149,7 +176,9 @@ class ReplicaSim:
             page_size=1, n_pages=cfg.kv_budget, max_batch=cfg.max_batch,
             max_seq_len=cfg.max_seq_len, prefill_chunk=cfg.prefill_chunk,
             preemption=cfg.preemption,
-            host_pages=cfg.host_kv_budget), self.backend)
+            host_pages=cfg.host_kv_budget,
+            discipline=cfg.discipline, cache_discount=cfg.cache_discount,
+            shed_deadline=cfg.shed_deadline), self.backend)
         self._stepping = False
         self.alive = True
         self.draining = False
@@ -291,6 +320,9 @@ class ReplicaSim:
             req.finished = now
             if req.done_cb:
                 req.done_cb(req)
+        for seq in plan.shed:           # deadline-aware admission refusal
+            if seq.req.finished is None:
+                resolve_cancelled(seq.req, now, "shed")
         if not self.core.running and not self.core.loading:
             if self.core.pending:       # a rejection callback re-enqueued
                 self.sim.after(0.0, self._step)
@@ -415,6 +447,12 @@ class _SimTransport:
         victim = self.lb.remote_lbs[peer_id]
         lat = self.lb.net.one_way(self.lb.region, victim.region)
         self.lb.sim.after(lat, lambda: victim.on_steal_request(self.lb, n))
+
+    def shed(self, req: Request) -> None:
+        """LB-level deadline-aware admission refusal: resolve immediately
+        with finish_reason "shed" — no replica ever sees the request."""
+        if req.finished is None:
+            resolve_cancelled(req, self.lb.sim.now, "shed")
 
     def pull_pages(self, req: Request, peer_id: str, target_id: str,
                    prefix_len: int, pull_tokens: int) -> None:
@@ -635,7 +673,9 @@ class LoadBalancerSim:
     def _view_of(self, r: ReplicaSim) -> TargetView:
         return TargetView(id=r.id, outstanding=r.outstanding(),
                           pending=r.pending_count(),
-                          available=r.pending_count() == 0 and r.alive)
+                          available=r.pending_count() == 0 and r.alive,
+                          tenant_counters=(r.core.tenant_counters() or None
+                                           if self.cfg.fairness else None))
 
     def n_avail_replicas(self) -> int:
         return sum(1 for r in self.replicas.values()
@@ -660,7 +700,8 @@ class LoadBalancerSim:
                 n_replicas=len(lb.replicas),
                 queue_len=len(lb.queue),
                 outstanding=sum(x.outstanding()
-                                for x in lb.replicas.values()))
+                                for x in lb.replicas.values()),
+                tenant_counters=lb.core.tenant_snapshot())
             if lb.alive else TargetView.unavailable(lid)
             for lid, lb in self.remote_lbs.items()])
         self.sim.after(self.cfg.remote_probe_interval,

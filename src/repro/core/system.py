@@ -37,7 +37,8 @@ REGIONS = ("us", "eu", "asia")
 class ServingSystem:
     def __init__(self, variant: str, replicas_per_region: dict[str, int],
                  *, replica_cfg: ReplicaConfig = ReplicaConfig(),
-                 net: Optional[Network] = None, seed: int = 0):
+                 net: Optional[Network] = None, seed: int = 0,
+                 cfg_overrides: Optional[dict] = None):
         self.sim = Sim()
         self.net = net or Network()
         self.variant = variant
@@ -53,6 +54,11 @@ class ServingSystem:
         self._inflight: dict[int, Request] = {}   # rid -> unresolved request
         self.rng = random.Random(seed)
         self.replica_cfg = replica_cfg          # template for elastic adds
+        # RoutingConfig field overrides for every LB this system builds
+        # (e.g. fairness=True, slo_lanes=True, admission=True for the
+        # multi-tenant scenarios) — same shape as LBSpec.cfg_overrides on
+        # the socket plane
+        self.cfg_overrides = dict(cfg_overrides or {})
         self._build(variant, replicas_per_region, replica_cfg)
         self.controller = Controller(self.sim, self.net,
                                      list(self.lbs.values()))
@@ -75,7 +81,8 @@ class ServingSystem:
             # e.g. 'trie' = single global-view prefix-trie router (longest
             # match + least-load exploration) — the Fig. 6 'optimal' stand-in
             lb = LoadBalancerSim(self.sim, "lb-us", "us", self.net,
-                                 spec.local_policy(), cfg=spec.make_config(),
+                                 spec.local_policy(),
+                                 cfg=spec.make_config(**self.cfg_overrides),
                                  metrics=self.metrics)
             for region, n in rpr.items():
                 for r in self._mk_replicas(region, n, rcfg):
@@ -87,7 +94,8 @@ class ServingSystem:
             lb = LoadBalancerSim(
                 self.sim, f"lb-{region}", region, self.net,
                 spec.local_policy(), remote_policy=spec.remote_policy(),
-                cfg=spec.make_config(), metrics=self.metrics)
+                cfg=spec.make_config(**self.cfg_overrides),
+                metrics=self.metrics)
             for r in self._mk_replicas(region, n, rcfg):
                 lb.add_replica(r)
             self.lbs[lb.id] = lb
@@ -204,6 +212,8 @@ class ServingSystem:
                 self.metrics.on_cancelled(r)
             elif r.finish_reason == "deadline":
                 self.metrics.on_deadline(r)
+            elif r.finish_reason == "shed":
+                self.metrics.on_shed(r)
             else:
                 back = self._back_delay(r)
                 if r.ttft is not None:
@@ -380,6 +390,35 @@ class ServingSystem:
 
         self.sim.after(rng.expovariate(max(1e-9, rate_fn(self.sim.now))),
                        arrive)
+
+    def add_tenant_load(self, region: str, rate: float, until: float, *,
+                        deadline_s: Optional[float] = None,
+                        slo_class: str = "standard", stream=None,
+                        seed: int = 0, **stream_kw) -> None:
+        """OPEN-loop per-tenant arrivals at a constant Poisson `rate`,
+        with tenants drawn from `workloads.tenant_request_stream` (Zipf
+        over user_id: few abusive cache-affine tenants, many light) — the
+        demand side of the fairness scenarios (fig12). `session_key` is
+        the tenant, so affinity policies concentrate each tenant's traffic
+        exactly the way the abuse pattern needs."""
+        from repro.core.workloads import tenant_request_stream
+        rng = random.Random(stable_hash(seed, region, "tenantload"))
+        gen = stream if stream is not None else tenant_request_stream(
+            region, seed=seed, **stream_kw)
+
+        def arrive():
+            if self.sim.now >= until:
+                return
+            uid, prompt, olen = next(gen)
+            req = Request(
+                rid=next(self._req_id), user_id=uid, session_key=uid,
+                region=region, prompt_tokens=prompt, output_len=olen,
+                output_tokens=_tokens(rng, olen),
+                deadline_s=deadline_s, slo_class=slo_class)
+            self.submit(req)
+            self.sim.after(rng.expovariate(max(1e-9, rate)), arrive)
+
+        self.sim.after(rng.expovariate(max(1e-9, rate)), arrive)
 
     # ------------------------------------------------------------ run
     def run(self, until: float) -> dict:

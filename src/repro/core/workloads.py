@@ -186,6 +186,52 @@ def diurnal_series(regions=REGIONS, hours: int = 24, step_h: float = 1.0,
     return out
 
 
+# ------------------------------------------------------------------ tenants
+
+def zipf_shares(n_tenants: int, alpha: float = 1.2) -> list[float]:
+    """Normalized Zipf demand shares: tenant k (rank order) draws traffic
+    with probability proportional to 1/(k+1)^alpha. alpha around 1.2 gives
+    the 'few abusive tenants, many light ones' shape of production
+    multi-tenant serving."""
+    w = [(k + 1) ** -alpha for k in range(n_tenants)]
+    tot = sum(w)
+    return [x / tot for x in w]
+
+
+def tenant_request_stream(region: str, *, n_tenants: int = 20,
+                          alpha: float = 1.2, heavy_tenants: int = 2,
+                          heavy_prefix_len: int = 384, prompt_len: int = 48,
+                          light_prefix_len: int = 32, output_len: int = 48,
+                          seed: int = 0) -> Iterator[tuple[str, tuple, int]]:
+    """Heavy-tailed per-tenant demand: an infinite stream of
+    (user_id, prompt_tokens, output_len) where the tenant of each arrival
+    is drawn Zipf(alpha) over `user_id` (seeded via `stable_hash`, so the
+    stream is process-stable like every other generator here).
+
+    The heaviest `heavy_tenants` ranks carry a LONG shared per-tenant
+    prefix — their traffic is maximally cache-affine, which is exactly the
+    abuse pattern the fairness work must defuse: under FCFS their prefix
+    hits buy them both replica batch slots and the router's affinity
+    preference, starving the light tenants. Light tenants share only a
+    short prefix (ordinary session reuse)."""
+    rng = random.Random(stable_hash(seed, region, "tenants"))
+    shares = zipf_shares(n_tenants, alpha)
+    cum, acc = [], 0.0
+    for s in shares:
+        acc += s
+        cum.append(acc)
+    prefixes = []
+    for k in range(n_tenants):
+        plen = heavy_prefix_len if k < heavy_tenants else light_prefix_len
+        prefixes.append(_tokens(
+            random.Random(stable_hash(seed, region, "tpfx", k)), plen))
+    while True:
+        x = rng.random()
+        k = next((i for i, c in enumerate(cum) if x <= c), n_tenants - 1)
+        prompt = prefixes[k] + _tokens(rng, prompt_len)
+        yield f"{region}-t{k}", prompt, output_len
+
+
 def prefix_similarity(a, b) -> float:
     """len(common_prefix)/min(len) — the paper's metric (footnote 1)."""
     n = min(len(a), len(b))

@@ -13,13 +13,16 @@ single sync, so streaming adds zero extra device dispatches).
 
 Lifecycle state machine:
 
-    QUEUED -> PREFILL -> DECODE -> { FINISHED, CANCELLED, DEADLINE, ABORT }
+    QUEUED -> PREFILL -> DECODE -> { FINISHED, CANCELLED, DEADLINE, ABORT,
+                                     SHED }
 
 `QUEUED` covers LB queues + the replica pending queue; `PREFILL` starts at
 replica admission; `DECODE` at the first emitted token (the prefill
 boundary token). Any non-terminal state may jump straight to `CANCELLED`
 (client called `handle.cancel()`), `DEADLINE` (`GenRequest.deadline_s`
-expired), or `ABORT` (replica rejected an oversized request).
+expired), `ABORT` (replica rejected an oversized request), or `SHED`
+(deadline-aware admission control refused it: the predicted queueing
+delay already exceeded its deadline — see `repro.tenancy.admission`).
 
 This module deliberately imports nothing heavy: hosts (`repro.core.system`,
 `repro.serving.engine`, `repro.serving.router`) can depend on it without
@@ -40,6 +43,8 @@ class RequestState(str, enum.Enum):
     CANCELLED = "cancelled"    # terminal: handle.cancel()
     DEADLINE = "deadline"      # terminal: deadline_s expired
     ABORT = "abort"            # terminal: rejected (oversized)
+    SHED = "shed"              # terminal: refused at admission (predicted
+                               # queueing delay exceeded deadline_s)
 
     @property
     def terminal(self) -> bool:
@@ -47,7 +52,7 @@ class RequestState(str, enum.Enum):
 
 
 _TERMINAL = {RequestState.FINISHED, RequestState.CANCELLED,
-             RequestState.DEADLINE, RequestState.ABORT}
+             RequestState.DEADLINE, RequestState.ABORT, RequestState.SHED}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,6 +32,7 @@ _REASON_STATE = {
     FinishReason.ABORT: RequestState.ABORT,
     FinishReason.CANCELLED: RequestState.CANCELLED,
     FinishReason.DEADLINE: RequestState.DEADLINE,
+    FinishReason.SHED: RequestState.SHED,
 }
 
 
@@ -113,7 +114,7 @@ class SimHost:
             output_len=req.sampling.max_new_tokens,
             output_tokens=tuple(output_tokens),
             priority=req.priority, deadline_s=req.deadline_s,
-            slo_class=req.slo_class)
+            slo_class=req.slo_class, tenant_weight=req.tenant_weight)
         self.system.submit(sreq, handle=handle)
 
     def cancel(self, rid: int, reason: str) -> bool:

@@ -90,6 +90,10 @@ class LBServer:
             on_hedge=self._hedge_start, origin_of=self._origin_of)
         self.transport.on_forward = self._track_forward
         self.transport.gen_of = self._gen_of
+        # admission-control shed: terminal SHED result from THIS LB (the
+        # deadline owner); replicas never see the request
+        self.transport.on_shed = (
+            lambda req: self._resolve_front(req, "shed"))
         self.core = RoutingCore(self.region, self.policy, remote, cfg,
                                 self.transport)
         self.running = True
@@ -669,6 +673,9 @@ class LBServer:
             "outstanding": sum(self.hb_views[r].get("outstanding", 0)
                                for r in live),
         }
+        tc = self.core.tenant_snapshot()
+        if tc:
+            view["tenant_counters"] = tc
         for p in self.peers:
             self.node.send_to(p, wire.msg("rhb", id=self.region, view=view))
 
@@ -733,6 +740,7 @@ class LBServer:
             "peak_queue": self.core.peak_queue,
             "redispatched": self.redispatched,
             "hedged": self.core.hedges, "hedge_wins": self.hedge_wins,
+            "sheds": self.core.sheds,
             "wasted_work_tok": self.wasted_work_tok,
             "kv_decisions": dict(self.core.kv_decisions),
             "pulled_tokens": self.core.pulled_tokens,

@@ -104,6 +104,9 @@ class CostEngine:
     def hit_rate(self) -> float:
         return self.core.hit_rate()
 
+    def tenant_counters(self) -> dict:
+        return self.core.tenant_counters()
+
     @property
     def pending(self):
         return self.core.pending
@@ -150,6 +153,12 @@ class CostEngine:
                 seq.req.on_admit(seq.req, time.monotonic())
         for seq in plan.rejected:
             self._finish(seq, FinishReason.ABORT)
+        # plan.shed stays empty on the socket plane (deliver frames strip
+        # deadlines, so replica-level shedding never fires here — the LB
+        # sheds at admission); handled anyway so CostEngine keeps the full
+        # Engine surface for in-process tests
+        for seq in plan.shed:
+            self._finish(seq, FinishReason.SHED)
         dt = self.backend.step_cost(len(self.core.running))
         if dt > 0 and self.time_scale > 0:
             time.sleep(dt * self.time_scale)
@@ -159,7 +168,7 @@ class CostEngine:
             why = (FinishReason.LENGTH if len(seq.out) >= seq.max_new
                    else FinishReason.STOP)
             self._finish(seq, why)
-        return len(finished) + len(plan.rejected)
+        return len(finished) + len(plan.rejected) + len(plan.shed)
 
     def has_work(self) -> bool:
         return bool(self.core.pending or self.core.running
@@ -395,12 +404,17 @@ class _ReplicaServer:
 
     def _heartbeat(self) -> None:
         e = self.engine
-        self._send_lb(wire.msg(
-            "hb", id=self.spec.rid,
-            view={"id": self.spec.rid, "outstanding": e.outstanding(),
-                  "pending": e.pending_count(),
-                  "available": e.available() and not self.draining},
-            ts=time.monotonic()))
+        view = {"id": self.spec.rid, "outstanding": e.outstanding(),
+                "pending": e.pending_count(),
+                "available": e.available() and not self.draining}
+        # fairness ledger rides the heartbeat only when a non-FCFS
+        # discipline has actually charged something (keeps frames lean;
+        # absent key decodes via the TargetView default)
+        tc = e.tenant_counters()
+        if tc:
+            view["tenant_counters"] = tc
+        self._send_lb(wire.msg("hb", id=self.spec.rid, view=view,
+                               ts=time.monotonic()))
 
     # ----------------------------------------------------------------- run
     def run(self) -> None:

@@ -66,6 +66,7 @@ class SocketTransport:
         self.on_hedge = on_hedge             # (clone, primary, peer_id)
         self.origin_of = origin_of           # (req) -> origin region id
         self.gen_of = None                   # (target_id) -> fencing epoch
+        self.on_shed = None                  # (req) -> terminal SHED result
 
     # ------------------------------------------------------------ liveness
     def now(self) -> float:
@@ -149,6 +150,12 @@ class SocketTransport:
     def steal_request(self, peer_id: str, n: int) -> None:
         self.node.send_to(peer_id, wire.msg(
             "steal", thief=self.origin, n=int(n)))
+
+    def shed(self, req) -> None:
+        """Admission-control shed: resolved AT this LB (terminal SHED
+        result back to the owning client); no frame leaves the process."""
+        if self.on_shed is not None:
+            self.on_shed(req)
 
     def pull_pages(self, req, peer_id: str, target_id: str,
                    prefix_len: int, pull_tokens: int) -> None:

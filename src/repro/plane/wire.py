@@ -160,6 +160,7 @@ def encode_request(req: GenRequest, *, deadline: str = KEEP,
         "user_id": req.user_id,
         "session_key": req.session_key,
         "priority": req.priority,
+        "tenant_weight": req.tenant_weight,
         "deadline_s": dl,
         "slo_class": req.slo_class,
         "cancelled": req.cancelled,
@@ -184,6 +185,7 @@ def decode_request(d: dict) -> GenRequest:
         user_id=d.get("user_id", ""),
         session_key=d.get("session_key", ""),
         priority=d.get("priority", 0),
+        tenant_weight=d.get("tenant_weight", 1.0),
         deadline_s=d.get("deadline_s"),
         slo_class=d.get("slo_class", "standard"),
         cancelled=d.get("cancelled"),
@@ -227,11 +229,16 @@ def decode_result(d: dict) -> GenResult:
 # ------------------------------------------------------------- TargetView
 
 def encode_view(view) -> dict:
-    return {"id": view.id, "outstanding": view.outstanding,
-            "pending": view.pending, "available": view.available,
-            "queue_len": view.queue_len,
-            "n_avail_replicas": view.n_avail_replicas,
-            "n_replicas": view.n_replicas}
+    d = {"id": view.id, "outstanding": view.outstanding,
+         "pending": view.pending, "available": view.available,
+         "queue_len": view.queue_len,
+         "n_avail_replicas": view.n_avail_replicas,
+         "n_replicas": view.n_replicas}
+    # fairness ledgers ride heartbeats only when fairness is on — frames
+    # from older peers (no key) decode fine via the TargetView default
+    if getattr(view, "tenant_counters", None):
+        d["tenant_counters"] = dict(view.tenant_counters)
+    return d
 
 
 def decode_view(d: dict):

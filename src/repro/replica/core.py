@@ -41,6 +41,10 @@ from typing import Optional, Protocol, runtime_checkable
 
 from repro.replica.blocks import BlockAllocator
 from repro.replica.radix import PagedRadix
+from repro.tenancy.admission import (DEFAULT_ADMISSION, AdmissionParams,
+                                     should_shed)
+from repro.tenancy.discipline import (make_discipline, tenant_of,
+                                      tenant_weight_of)
 
 
 @runtime_checkable
@@ -92,6 +96,16 @@ class ReplicaCoreConfig:
     reserved_pages: int = 0   # pinned at init (engine scratch pages)
     host_pages: int = 0       # host-memory KV tier size; 0 = tier off
     record_decisions: bool = False  # ("admit"|"reject"|"evict"|"preempt", ..)
+    # multi-tenant fairness (repro.tenancy): "fcfs" keeps the decision
+    # stream byte-identical to the pre-tenancy core; "vtc"/"wvtc" admit the
+    # least-served tenant first and add ("admit_fair", rid, tenant) records
+    discipline: str = "fcfs"
+    cache_discount: float = 0.25   # VTC charge rate for cache-hit tokens
+    # deadline-aware admission shedding: refuse (FinishReason.SHED) when
+    # the snapshot-predicted TTFT already exceeds the request's deadline;
+    # adds ("shed", rid) records. Off by default.
+    shed_deadline: bool = False
+    shed_params: Optional[AdmissionParams] = None   # None = DEFAULT_ADMISSION
 
 
 class Seq:
@@ -139,10 +153,12 @@ class Seq:
 
 @dataclasses.dataclass
 class StepPlan:
-    """What begin_step did: hosts stamp TTFTs on `admitted` and deliver
-    error results for `rejected`."""
+    """What begin_step did: hosts stamp TTFTs on `admitted`, deliver
+    error results for `rejected`, and resolve `shed` with
+    `FinishReason.SHED` (deadline-aware admission refusals)."""
     admitted: list
     rejected: list
+    shed: list = dataclasses.field(default_factory=list)
 
 
 def _describe(req) -> tuple[tuple, int, int]:
@@ -210,6 +226,15 @@ class ReplicaCore:
         self._prefill_q: list[tuple[Seq, int]] = []
         self.decisions: Optional[list[tuple]] = (
             [] if cfg.record_decisions else None)
+        # multi-tenant fairness: the pluggable queue discipline. FCFS (the
+        # default) is a pure no-op on every hook AND is never consulted in
+        # the admission loop, so default decision streams stay byte-for-byte
+        # identical to the pre-tenancy core.
+        self.discipline = make_discipline(cfg.discipline,
+                                          cache_discount=cfg.cache_discount)
+        self._fair = cfg.discipline != "fcfs"
+        self.sheds = 0
+        self._shed_q: list[Seq] = []   # shed at submit; drained by begin_step
 
     # ------------------------------------------------------------ probes
     def pending_count(self) -> int:
@@ -233,7 +258,23 @@ class ReplicaCore:
     # ------------------------------------------------------------ submit
     def submit(self, req) -> None:
         prompt, max_new, priority = _describe(req)
-        self.pending.append(Seq(req, prompt, max_new, priority))
+        seq = Seq(req, prompt, max_new, priority)
+        if self.cfg.shed_deadline and should_shed(
+                len(prompt), len(self.pending),
+                len(self.running) + len(self.loading),
+                getattr(req, "deadline_s", None),
+                self.cfg.shed_params or DEFAULT_ADMISSION):
+            # snapshot-only verdict (queue depths, prompt length, deadline —
+            # no clocks), so every backend sheds the same rids: the record
+            # parity-tests like the rest of the stream
+            seq.error = "shed: predicted queueing delay exceeds deadline"
+            self.sheds += 1
+            self._record("shed", req.rid)
+            self._shed_q.append(seq)
+            return
+        self.discipline.on_enqueue(tenant_of(req), req.rid,
+                                   tenant_weight_of(req))
+        self.pending.append(seq)
         self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
 
     # ------------------------------------------------------------ cancel
@@ -253,6 +294,9 @@ class ReplicaCore:
                 self._blocked = None
                 self.cancellations += 1
                 self._record("cancel", rid)
+                # no refund — served tokens stay charged — but the tenant's
+                # live-request tracking must retire the rid (idempotent)
+                self.discipline.on_leave(rid)
                 return s
         for s in self.running:
             if s.req.rid == rid:
@@ -265,6 +309,9 @@ class ReplicaCore:
                 s.cached_pages = 0
                 self.cancellations += 1
                 self._record("cancel", rid)
+                # no refund — served tokens stay charged — but the tenant's
+                # live-request tracking must retire the rid (idempotent)
+                self.discipline.on_leave(rid)
                 return s
         for s in self.loading:
             if s.req.rid == rid:
@@ -282,6 +329,9 @@ class ReplicaCore:
                 s.cached_pages = 0
                 self.cancellations += 1
                 self._record("cancel", rid)
+                # no refund — served tokens stay charged — but the tenant's
+                # live-request tracking must retire the rid (idempotent)
+                self.discipline.on_leave(rid)
                 return s
         return None
 
@@ -342,11 +392,21 @@ class ReplicaCore:
         identical to sequential prefill."""
         admitted: list[Seq] = []
         rejected: list[Seq] = []
+        shed, self._shed_q = self._shed_q, []
         self._finish_loads(admitted)
         while self.pending:
             if self.cfg.max_batch and (len(self.running) + len(self.loading)
                                        >= self.cfg.max_batch):
                 break
+            if self._fair:
+                # the discipline picks who gets this admission slot; moving
+                # its choice to the head changes head identity, which is
+                # exactly what invalidates the blocked-head memo below
+                idx = self.discipline.select(self.pending)
+                if idx:
+                    chosen = self.pending[idx]
+                    del self.pending[idx]
+                    self.pending.appendleft(chosen)
             seq = self.pending[0]
             if self._blocked is not None:
                 bseq, bver, bfree = self._blocked
@@ -360,6 +420,7 @@ class ReplicaCore:
                 seq.error = why
                 self.rejections += 1
                 self._record("reject", seq.req.rid)
+                self.discipline.on_leave(seq.req.rid)
                 rejected.append(seq)
                 continue
             ps = self.cfg.page_size
@@ -427,6 +488,13 @@ class ReplicaCore:
                 self.total_prefill_tokens += len(seq.tokens)
                 self.total_cached_tokens += total_len
                 self.host_hit_tokens += len(host_nodes) * ps
+                # VTC charging: uncached prefill at full price, cache hits
+                # (device + host) at the discount — charged ONCE per request
+                # (a preemption resume's recompute is the system's fault,
+                # not the tenant's)
+                self.discipline.on_admit(
+                    tenant_of(seq.req), len(seq.tokens) - total_len,
+                    total_len, tenant_weight_of(seq.req))
             if host_nodes:
                 # LOADING admission: the first len(host_nodes) fresh pages
                 # are the load-back targets; prefill waits for the copy
@@ -434,6 +502,9 @@ class ReplicaCore:
                                  for nd, dp in zip(host_nodes, fresh)]
                 self.loading.append(seq)
                 self._record("admit", seq.req.rid, total_len)
+                if self._fair:
+                    self._record("admit_fair", seq.req.rid,
+                                 tenant_of(seq.req))
                 self._record("hostload", seq.req.rid, len(host_nodes))
                 load = getattr(self.backend, "load_pages", None)
                 if load is not None:
@@ -445,12 +516,14 @@ class ReplicaCore:
             self.running.append(seq)
             admitted.append(seq)
             self._record("admit", seq.req.rid, cached_len)
+            if self._fair:
+                self._record("admit_fair", seq.req.rid, tenant_of(seq.req))
         self._flush_prefills()
         self.steps += 1
         self.peak_running = max(self.peak_running, len(self.running))
         self.peak_outstanding = max(self.peak_outstanding, self.outstanding())
         self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
-        return StepPlan(admitted, rejected)
+        return StepPlan(admitted, rejected, shed)
 
     def _finish_loads(self, admitted: list) -> None:
         """Complete last step's host->device loads: promote the radix nodes
@@ -583,6 +656,9 @@ class ReplicaCore:
                 if spec:
                     self.spec_tokens += n_app
                     self._record("accept", s.req.rid, n_app)
+                if n_app:
+                    self.discipline.on_tokens(tenant_of(s.req), n_app,
+                                              tenant_weight_of(s.req))
         for s in self.running:
             s.new_this_step = False
         finished = [s for s in self.running if s.done()]
@@ -596,7 +672,13 @@ class ReplicaCore:
                               s.pages[:full])
             self.alloc.free_all(s.pages)
             self.completions += 1
+            self.discipline.on_leave(s.req.rid)
         return finished
+
+    def tenant_counters(self) -> dict:
+        """The discipline's per-tenant service counters ({} under FCFS) —
+        the replica-side feed for the routing layer's `TenantLedger`."""
+        return self.discipline.counters()
 
     def hit_rate(self) -> float:
         """COMBINED (device + host) hit rate over served prompt tokens."""

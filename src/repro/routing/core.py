@@ -32,6 +32,11 @@ from repro.routing.hedging import HedgeParams, should_hedge
 from repro.routing.kvtransfer import (PULL, PUSH, RECOMPUTE, KVTransferParams,
                                       decide)
 from repro.routing.policies import SP_P, Policy, TargetView, eligible
+from repro.serving.request import slo_priority
+from repro.tenancy.admission import (DEFAULT_ADMISSION, AdmissionParams,
+                                     should_shed)
+from repro.tenancy.discipline import tenant_of, tenant_weight_of
+from repro.tenancy.ledger import TenantLedger
 
 
 @runtime_checkable
@@ -112,6 +117,23 @@ class RoutingConfig:
     # transport reaps the loser through the exactly-once cancel path.
     hedging: bool = False
     hedge_params: Optional[HedgeParams] = None      # default params if None
+    # Multi-tenant fairness (repro.tenancy): per-tenant service counters
+    # folded into dispatch/steal scoring, carried in heartbeats so every LB
+    # converges on the same view. A HEAVY tenant (counter > factor * mean)
+    # loses its cache-affinity preference — it is routed least-load — and
+    # its queued work is released to thieves first.
+    fairness: bool = False
+    fairness_factor: float = 2.0
+    # SLO lanes: `slo_class`es with positive priority ("interactive",
+    # "latency") enqueue in a fast-lane PREFIX of the queue (FCFS within a
+    # lane); off by default — plain FCFS, byte-identical to pre-tenancy.
+    slo_lanes: bool = False
+    # Deadline-aware admission shedding at the LB: when the chosen
+    # replica's snapshot-predicted TTFT already exceeds the head request's
+    # deadline, resolve it as FinishReason.SHED instead of dispatching
+    # (repro.tenancy.admission; transports without a `shed` method opt out).
+    admission: bool = False
+    admission_params: Optional[AdmissionParams] = None  # None = defaults
     # Record ("local"|"forward"|"steal"|"pull", rid, target) tuples for
     # parity tests / tracing. Off by default (unbounded list).
     record_decisions: bool = False
@@ -142,6 +164,10 @@ class RoutingCore:
         self.kv_decisions = {PULL: 0, PUSH: 0, RECOMPUTE: 0}
         self.pulled_tokens = 0
         self.hedges = 0
+        # per-tenant EXPECTED service (prompt + output budget per dispatch),
+        # max-merged with peers' heartbeat snapshots (repro.tenancy.ledger)
+        self.tenants = TenantLedger()
+        self.sheds = 0
         self.decisions: Optional[list[tuple]] = (
             [] if self.cfg.record_decisions else None)
 
@@ -166,13 +192,24 @@ class RoutingCore:
         self._sent_since_probe.clear()
         for v in views:
             self._replica_snap[v.id] = v
+            if self.cfg.fairness:
+                # replica-side VTC counters (tokens actually served) fold
+                # into the router's expected-service ledger via max-merge
+                self.tenants.merge(v.tenant_counters)
         self.try_dispatch()
 
     def refresh_remote(self, views: Sequence[TargetView]) -> None:
         """A WAN heartbeat of peer LBs completed."""
         for v in views:
             self._lb_snap[v.id] = v
+            if self.cfg.fairness:
+                self.tenants.merge(v.tenant_counters)
         self.try_dispatch()
+
+    def tenant_snapshot(self) -> Optional[dict]:
+        """This LB's ledger for heartbeat publication (None when fairness
+        is off — keeps wire frames lean and old peers decodable)."""
+        return self.tenants.snapshot() if self.cfg.fairness else None
 
     def n_avail_local(self) -> int:
         return sum(1 for v in self._replica_snap.values()
@@ -180,7 +217,19 @@ class RoutingCore:
 
     # ---- request path (Alg.1 HandleRequest)
     def on_request(self, req) -> None:
-        self.queue.append(req)
+        if (self.cfg.slo_lanes
+                and slo_priority(getattr(req, "slo_class", "standard")) > 0):
+            # fast lane: join behind other fast-class work but ahead of the
+            # slow lane (the queue's invariant is fast-prefix-then-slow, so
+            # the insertion point is the end of the fast prefix)
+            pos = 0
+            for q in self.queue:
+                if slo_priority(getattr(q, "slo_class", "standard")) <= 0:
+                    break
+                pos += 1
+            self.queue.insert(pos, req)
+        else:
+            self.queue.append(req)
         self.peak_queue = max(self.peak_queue, len(self.queue))
         self.try_dispatch()
 
@@ -215,13 +264,31 @@ class RoutingCore:
             locals_ok = eligible(local_views, cfg.pushing,
                                  cfg.spo_limit, cfg.tau)
             if locals_ok:
-                tid = self.policy.select(req, locals_ok)
+                heavy = (cfg.fairness and self.tenants.is_heavy(
+                    tenant_of(req), cfg.fairness_factor))
+                if heavy:
+                    # a heavy tenant's cache affinity stops overriding
+                    # regional fairness: route least-load, not by prefix
+                    tid = min(locals_ok,
+                              key=lambda v: (v.outstanding, v.id)).id
+                    if self.decisions is not None:
+                        self.decisions.append(("fair", req.rid,
+                                               tenant_of(req)))
+                else:
+                    tid = self.policy.select(req, locals_ok)
                 if tid is None or not any(v.id == tid for v in locals_ok):
                     # a policy may answer from its own state (trie records,
                     # hashring) that still names a target removed between
                     # probes — never dispatch outside the eligible set
                     tid = locals_ok[0].id
-                act = self._kv_consult(req, locals_ok)
+                if cfg.admission and self._should_shed(req, tid):
+                    self.queue.popleft()
+                    self._shed(req)
+                    continue
+                # a heavy tenant also forfeits the KV-pull privilege — a
+                # WAN page transfer is exactly the locality subsidy being
+                # withdrawn
+                act = None if heavy else self._kv_consult(req, locals_ok)
                 if act is not None:
                     kind, peer, pull_spec = act
                     self.queue.popleft()
@@ -298,6 +365,45 @@ class RoutingCore:
         self.kv_decisions[RECOMPUTE] += 1
         return None
 
+    def _should_shed(self, req, tid: str) -> bool:
+        """Deadline-aware admission verdict for the head request against
+        the chosen replica's snapshot (pure: queue depths + prompt length +
+        deadline — parity-safe across hosts)."""
+        snap = self._replica_snap.get(tid)
+        if snap is None:
+            return False
+        params = (self.cfg.admission_params
+                  if self.cfg.admission_params is not None
+                  else DEFAULT_ADMISSION)
+        return should_shed(len(getattr(req, "prompt_tokens", ()) or ()),
+                           snap.pending, snap.outstanding,
+                           getattr(req, "deadline_s", None), params)
+
+    def _shed(self, req) -> None:
+        """Resolve a shed request through the transport (FinishReason.SHED
+        at the host). Transports without a `shed` method opt out — the
+        request is dropped from the queue either way, so fixtures just see
+        the decision record."""
+        self.sheds += 1
+        if self.decisions is not None:
+            self.decisions.append(("shed", req.rid, self.id))
+        shed_fn = getattr(self.transport, "shed", None)
+        if shed_fn is not None:
+            shed_fn(req)
+
+    def _charge(self, req) -> None:
+        """Charge the tenant the EXPECTED tokens of this dispatch (prompt +
+        output budget). Coarser than the replica's exact VTC charge, but
+        available at decision time and monotone — no refunds on cancel."""
+        if not self.cfg.fairness:
+            return
+        sp = getattr(req, "sampling", None)
+        budget = (sp.max_new_tokens if sp is not None
+                  else getattr(req, "output_len", 0))
+        prompt = getattr(req, "prompt_tokens", ()) or ()
+        self.tenants.charge(tenant_of(req), len(prompt) + int(budget),
+                            tenant_weight_of(req))
+
     def _send_pull(self, req, peer_id: str, tid: str, prefix_len: int,
                    pull_tokens: int) -> None:
         """Serve locally after pulling the prefix KV from `peer_id`'s
@@ -314,6 +420,7 @@ class RoutingCore:
                 snap.available = False
         self.kv_decisions[PULL] += 1
         self.pulled_tokens += pull_tokens
+        self._charge(req)
         if self.decisions is not None:
             self.decisions.append(("pull", req.rid, peer_id))
         self.transport.pull_pages(req, peer_id, tid, prefix_len, pull_tokens)
@@ -331,6 +438,7 @@ class RoutingCore:
             self._sent_since_probe[rid] = sent
             if sent >= self.cfg.max_inflight_per_probe:
                 snap.available = False
+        self._charge(req)
         if self.decisions is not None:
             self.decisions.append(("local", req.rid, rid))
         self.transport.deliver(req, rid)
@@ -399,8 +507,33 @@ class RoutingCore:
                           thief_id: Optional[str] = None) -> list:
         """A peer with idle capacity asks for up to n TAIL requests (the
         head keeps local FCFS fairness). Never re-steal forwarded work.
-        Returns the released requests; the host delivers them."""
+        Returns the released requests; the host delivers them.
+
+        With fairness on, HEAVY tenants' queued work leaves first (tail-
+        ward, head excluded): moving their backlog to the idle region both
+        balances load and un-crowds the tenants they were starving."""
         out = []
+        if self.cfg.fairness and len(self.queue) > self.cfg.steal_threshold:
+            picks = []      # descending indices -> deletions stay valid
+            for i in range(len(self.queue) - 1, 0, -1):
+                if (len(picks) >= n or len(self.queue) - len(picks)
+                        <= self.cfg.steal_threshold):
+                    break
+                req = self.queue[i]
+                if getattr(req, "forwarded", False):
+                    continue
+                if self.tenants.is_heavy(tenant_of(req),
+                                         self.cfg.fairness_factor):
+                    picks.append(i)
+            for i in picks:
+                req = self.queue[i]
+                del self.queue[i]
+                req.forwarded = True
+                self.forwarded_out += 1
+                if self.decisions is not None:
+                    self.decisions.append(("steal", req.rid, thief_id))
+                out.append(req)
+            n -= len(out)
         for _ in range(n):
             if len(self.queue) <= self.cfg.steal_threshold:
                 break

@@ -27,6 +27,10 @@ class TargetView:
     n_avail_replicas: int = 1   # remote LB: replicas with empty pending
     n_replicas: int = 1         # remote LB: replicas that EXIST at all
                                 # (busy counts; 0 = emptied/scaled-to-zero)
+    # per-tenant service counters (repro.tenancy.TenantLedger snapshot),
+    # carried in heartbeats so every LB converges on the same fairness
+    # view; None (the default) keeps wire frames lean when fairness is off
+    tenant_counters: Optional[dict] = None
 
     #: sentinel load advertised for a dead/unreachable target
     DEAD_LOAD = 10 ** 9

@@ -51,6 +51,11 @@ class EngineConfig:
     spec_synth_rate: Any = None   # Optional[float]: benchmark knob — fixed
                                   # synthetic acceptance rate (emitted
                                   # tokens then NOT baseline-exact)
+    discipline: str = "fcfs"      # queue discipline: fcfs | vtc | wvtc
+                                  # (repro.tenancy; fcfs = byte-identical
+                                  # to the pre-tenancy scheduler)
+    cache_discount: float = 0.25  # VTC charge rate for cache-hit tokens
+    shed_deadline: bool = False   # deadline-aware admission shedding
 
 
 class Engine:
@@ -79,7 +84,10 @@ class Engine:
             max_batch=ecfg.max_batch, max_seq_len=ecfg.max_seq_len,
             prefill_chunk=ecfg.prefill_chunk, preemption=ecfg.preemption,
             reserved_pages=ecfg.scratch_pages,
-            host_pages=ecfg.host_pages), self.backend)
+            host_pages=ecfg.host_pages,
+            discipline=ecfg.discipline,
+            cache_discount=ecfg.cache_discount,
+            shed_deadline=ecfg.shed_deadline), self.backend)
         self.backend.bind(self.core)
         self.results: dict[int, GenResult] = {}
         # tokens the core appended this step; drained ONCE per step into
@@ -151,6 +159,9 @@ class Engine:
     def peak_running(self) -> int:
         return self.core.peak_running
 
+    def tenant_counters(self) -> dict:
+        return self.core.tenant_counters()
+
     # ------------------------------------------------------------ submit
     def submit(self, req: GenRequest) -> None:
         if req.arrival_s is None:
@@ -209,13 +220,15 @@ class Engine:
                 seq.req.on_admit(seq.req, time.monotonic())
         for seq in plan.rejected:
             self._finish(seq, FinishReason.ABORT)
+        for seq in plan.shed:
+            self._finish(seq, FinishReason.SHED)
         finished = self.core.finish_step()
         self._drain_tokens()
         for seq in finished:
             why = (FinishReason.LENGTH if len(seq.out) >= seq.max_new
                    else FinishReason.STOP)
             self._finish(seq, why)
-        return len(finished) + len(plan.rejected) + aborted
+        return len(finished) + len(plan.rejected) + len(plan.shed) + aborted
 
     def _drain_tokens(self) -> None:
         if not self._tokbuf:

@@ -42,10 +42,13 @@ def slo_priority(slo_class: str) -> int:
 
 
 def cancel_finish_reason(reason: str) -> "FinishReason":
-    """The FinishReason a travelling cancel flag ("cancelled"|"deadline")
-    resolves to — one mapping for every host."""
-    return (FinishReason.DEADLINE if reason == "deadline"
-            else FinishReason.CANCELLED)
+    """The FinishReason a travelling cancel flag ("cancelled"|"deadline"|
+    "shed") resolves to — one mapping for every host."""
+    if reason == "deadline":
+        return FinishReason.DEADLINE
+    if reason == "shed":
+        return FinishReason.SHED
+    return FinishReason.CANCELLED
 
 
 class FinishReason(str, enum.Enum):
@@ -54,6 +57,8 @@ class FinishReason(str, enum.Enum):
     ABORT = "abort"
     CANCELLED = "cancelled"       # client called handle.cancel()
     DEADLINE = "deadline"         # deadline_s expired before completion
+    SHED = "shed"                 # refused at admission: predicted queueing
+                                  # delay already exceeded deadline_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +78,10 @@ class GenRequest:
     user_id: str = ""
     session_key: str = ""
     priority: int = 0                 # higher may preempt lower (replica core)
+    # weighted fairness (repro.tenancy): a weight-w tenant is charged 1/w
+    # per served token under the weighted VTC discipline. Content, not
+    # lifecycle — it rides clones and wire frames with the request.
+    tenant_weight: float = 1.0
     # Lifecycle (the unified front API):
     deadline_s: Optional[float] = None   # relative to admission; <= 0 at
                                          # submit aborts before any dispatch

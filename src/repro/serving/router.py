@@ -91,6 +91,11 @@ class _TickTransport:
             self.router.wan_delay_ticks,
             lambda: self.router._serve_steal(peer_id, self.lb.region, n))
 
+    def shed(self, req: GenRequest) -> None:
+        """Admission-control shed: terminal SHED result, no engine ever
+        sees the request."""
+        self.router._resolve_front(req, "shed")
+
     # ---- hedged dispatch (tail-TTFT insurance for the `latency` class)
     def hedge(self, req: GenRequest, peer_id: str) -> None:
         """Duplicate `req` to `peer_id`: a clone (fresh rid, no deadline,
@@ -221,7 +226,10 @@ class _RegionLB:
     # ---- what probes see
     def _view_of(self, eid: str, e: Engine) -> TargetView:
         return TargetView(id=eid, outstanding=e.outstanding(),
-                          pending=e.pending_count(), available=e.available())
+                          pending=e.pending_count(), available=e.available(),
+                          tenant_counters=(e.tenant_counters() or None
+                                           if self.core.cfg.fairness
+                                           else None))
 
     def views(self) -> list[TargetView]:
         return [self._view_of(eid, e) for eid, e in self.engines.items()]
@@ -236,7 +244,8 @@ class _RegionLB:
             id=self.region, n_avail_replicas=self.n_avail(),
             n_replicas=len(self.engines),
             queue_len=len(self.queue),
-            outstanding=sum(e.outstanding() for e in self.engines.values()))
+            outstanding=sum(e.outstanding() for e in self.engines.values()),
+            tenant_counters=self.core.tenant_snapshot())
 
 
 class InProcessRouter:

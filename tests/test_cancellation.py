@@ -181,6 +181,80 @@ def test_sim_cancel_after_finish_noop():
     assert s["cancelled"] == 0 and s["requests"] == 1
 
 
+# ------------------------------------------- fairness vs cancellation
+
+def test_core_cancel_no_refund_but_counters_not_stuck():
+    """Under VTC a cancelled request refunds NOTHING (the charge for work
+    already done stands — counters only move forward), but the tenant's
+    live-request tracking must retire the rid: the tenant can go idle and
+    re-enter through the lift rule instead of being pinned 'active'."""
+    core = ReplicaCore(ReplicaCoreConfig(page_size=4, n_pages=64,
+                                         discipline="vtc"),
+                       CostModelBackend())
+    core.submit(_gen(0, range(16), 32, user_id="a"))
+    core.begin_step()                 # admit: "a" charged 16 uncached
+    core.finish_step()                # + decode appends
+    charged = core.discipline.counters()["a"]
+    assert charged >= 16.0
+    assert core.cancel(0) is not None
+    # no refund -- but the rid is retired, so "a" is idle again
+    assert core.discipline.counters()["a"] == charged
+    assert core.discipline._active["a"] == set()
+    # tenant "b" is served on; "a" re-enters AT THE FLOOR (lift rule), so
+    # the cancelled work neither refunds nor permanently handicaps "a"
+    core.submit(_gen(1, range(100, 116), 4, user_id="b"))
+    while core.running or core.pending:
+        core.begin_step()
+        core.finish_step()
+    core.submit(_gen(2, range(200, 216), 4, user_id="a"))
+    assert core.discipline.counters()["a"] == max(
+        charged, min(core.discipline.counters().values()))
+
+
+def test_core_cancel_while_pending_vtc_never_charged():
+    """A request cancelled before admission was never served: no charge at
+    all, and the discipline forgets its rid (idempotently)."""
+    core = ReplicaCore(ReplicaCoreConfig(page_size=4, n_pages=32,
+                                         max_batch=1, discipline="vtc"),
+                       CostModelBackend())
+    core.submit(_gen(0, range(8), 8, user_id="a"))
+    core.submit(_gen(1, range(100, 108), 8, user_id="b"))  # waits pending
+    core.begin_step()
+    assert core.cancel(1) is not None
+    assert core.discipline.counters().get("b", 0.0) == 0.0
+    assert core.discipline._active["b"] == set()
+    assert core.cancel(1) is None     # second cancel: no-op, nothing stuck
+    while core.running or core.pending:
+        core.begin_step()
+        core.finish_step()
+    assert core.completions == 1
+
+
+def test_sim_deadline_abort_no_refund_vtc():
+    """A deadline abort mid-decode exits through the same no-refund path:
+    the tenant keeps its charge, the replica keeps no live-rid residue,
+    and later traffic schedules normally."""
+    sys = ServingSystem(
+        "skylb", {"us": 1},
+        replica_cfg=ReplicaConfig(kv_budget=8192, discipline="vtc"))
+    done = []
+    sys.submit(_req(sys, 0, out_len=64, user="a", deadline_s=0.5),
+               done.append)
+    sys.run(until=5.0)
+    assert done[0].finish_reason == "deadline"
+    core = sys.replicas[0].core
+    charged = core.discipline.counters()["a"]
+    assert charged >= 32.0            # prefill charge survives the abort
+    assert core.discipline._active["a"] == set()
+    ok = []
+    sys.submit(_req(sys, 1, out_len=8, user="b"), ok.append)
+    sys.run(until=30.0)
+    assert ok[0].finish_reason is None
+    assert core.discipline.counters()["a"] == charged    # still no refund
+    s = sys.metrics.summary(sys.replicas)
+    assert s["deadline_aborted"] == 1 and s["unresolved"] == 0
+
+
 # ------------------------------------------------------------ deadlines
 
 def test_sim_deadline_expired_at_submit_dispatches_nothing():

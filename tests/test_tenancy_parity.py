@@ -1,0 +1,103 @@
+"""Sim <-> engine replica parity for the TENANCY decision surface: with a
+non-default discipline (`vtc`) and deadline shedding enabled, the
+`CostModelBackend` and `JaxPagedBackend` must still produce byte-identical
+decision streams — now including the `("admit_fair", rid, tenant)` and
+`("shed", rid)` records — and identical per-tenant VTC counters. Every
+tenancy decision input is clock-free (queue depths, prompt lengths,
+deadlines, charged tokens), which is what makes this possible; this file
+extends `test_replica_parity.py` (which pins the DEFAULT stream) without
+touching it."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.replica import CostModelBackend, ReplicaCore, ReplicaCoreConfig
+from repro.serving.jax_backend import JaxPagedBackend
+from repro.serving.request import GenRequest, SamplingParams
+
+CFG = ReplicaCoreConfig(page_size=8, n_pages=12, max_batch=3,
+                        max_seq_len=256, reserved_pages=1,
+                        record_decisions=True,
+                        discipline="vtc", shed_deadline=True)
+N_STEPS = 100
+
+
+def _trace(vocab: int):
+    """(step -> [(rid, user, prompt, max_new, deadline_s)]): a multi-tenant
+    mix exercising VTC reordering, the cache-discount charge (rid 6 replays
+    tenant a's prefix), a deadline shed under backlog (rid 5), and a
+    mid-flight cancellation (rid 7, see CANCELS). Prompts stay
+    prefix-disjoint from other sequences' generated tokens so cached
+    lengths are backend-independent."""
+    rng = np.random.default_rng(11)
+    tok = lambda n: tuple(int(t) for t in rng.integers(1, vocab, size=n))
+    base_a = tok(16)
+    return {
+        0: [(1, "a", base_a, 8, None), (2, "b", tok(16), 8, None)],
+        1: [(3, "a", tok(16), 8, None), (4, "c", tok(16), 8, None)],
+        # backlog: rid 4 pending + 3 running -> predicted wait >> 1 ms
+        2: [(5, "b", tok(16), 8, 0.001)],
+        30: [(6, "a", base_a + tok(8), 8, None)],   # discount-charged hit
+        40: [(7, "c", tok(16), 16, None)],
+    }
+
+
+CANCELS = {44: [7]}
+
+
+def _drive(core: ReplicaCore, trace: dict) -> dict:
+    cached: dict[int, int] = {}
+    for step in range(N_STEPS):
+        for rid, user, prompt, max_new, dl in trace.get(step, ()):
+            core.submit(GenRequest(
+                prompt_tokens=prompt, rid=rid, user_id=user, deadline_s=dl,
+                sampling=SamplingParams(max_new_tokens=max_new)))
+        for rid in CANCELS.get(step, ()):
+            assert core.cancel(rid) is not None
+        plan = core.begin_step()
+        for seq in plan.admitted:
+            cached[seq.req.rid] = seq.req.cached_tokens
+        core.finish_step()
+    return cached
+
+
+def test_tenancy_replica_parity(qwen_reduced, qwen_model_params):
+    _, params = qwen_model_params
+    trace = _trace(qwen_reduced.vocab)
+
+    core_sim = ReplicaCore(CFG, CostModelBackend())
+    cached_sim = _drive(core_sim, trace)
+
+    backend = JaxPagedBackend(qwen_reduced, params, n_pages=CFG.n_pages,
+                              page_size=CFG.page_size, prefill_pad=16)
+    core_jax = ReplicaCore(CFG, backend)
+    backend.bind(core_jax)
+    cached_jax = _drive(core_jax, trace)
+
+    assert core_sim.decisions == core_jax.decisions
+    assert cached_sim == cached_jax
+
+    kinds = {e[0] for e in core_sim.decisions}
+    assert {"admit", "admit_fair", "shed", "cancel"} <= kinds
+    # every admission carries its tenant-tagged fairness record, in order
+    admits = [e[1] for e in core_sim.decisions if e[0] == "admit"]
+    fairs = [e[1] for e in core_sim.decisions if e[0] == "admit_fair"]
+    assert admits == fairs and len(admits) == 6      # everyone but rid 5
+    # rid 5 was refused up-front under backlog; never admitted or cached
+    assert ("shed", 5) in core_sim.decisions
+    assert 5 not in cached_sim
+    assert core_sim.sheds == core_jax.sheds == 1
+    assert ("cancel", 7) in core_sim.decisions
+    # rid 6 replayed tenant a's 16-token prefix: both full pages cached
+    assert cached_sim[6] == 16
+
+    # the VTC ledgers agree to the token: same charges on both backends
+    assert core_sim.tenant_counters() == core_jax.tenant_counters()
+    assert set(core_sim.tenant_counters()) == {"a", "b", "c"}
+
+    for core in (core_sim, core_jax):
+        assert not core.running and not core.pending
+    assert core_sim.completions == core_jax.completions == 5
+    assert core_sim.cancellations == core_jax.cancellations == 1
+    assert core_sim.total_cached_tokens == core_jax.total_cached_tokens
